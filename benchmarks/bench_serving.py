@@ -1,0 +1,64 @@
+"""DRS-scheduled serving vs static splits (the paper's technique applied
+to LLM prefill/decode disaggregation — DESIGN.md §2's flagship mapping).
+
+For a grid of request rates, compare end-to-end latency under (a) the DRS
+allocation from Program (4), (b) even static split, (c) decode-heavy and
+prefill-heavy statics.  Rates come from the dry-run roofline when present.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+import numpy as np
+
+from repro.serving.pipeline import ServingModel, StageRates, rates_from_dryrun
+from repro.serving.router import ServingSimulation
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    try:
+        rates = rates_from_dryrun("llama3.2-1b", RESULTS)
+        note = "rates from llama3.2-1b dry-run"
+    except (FileNotFoundError, KeyError):
+        rates = StageRates(prefill_per_chip=0.5, decode_per_chip=40.0)
+        note = "illustrative rates"
+    model = ServingModel(rates, mean_output_tokens=32.0)
+    k_max = 20
+    # express rates relative to saturation so the bench is rate-agnostic
+    sat = min(
+        rates.prefill_per_chip * (k_max - 4) / (1 + model.group_alpha * (k_max - 5)),
+        rates.decode_per_chip * (k_max - 4) / (1 + model.group_alpha * (k_max - 5)) / 32.0,
+    )
+    for frac in (0.3, 0.5, 0.7):
+        lam0 = sat * frac
+        sim = ServingSimulation(model, lam0, horizon=max(1500.0, 800 / lam0), warmup=50 / lam0, seed=int(frac * 100))
+        top = model.topology(lam0)
+        k_min = top.min_feasible_allocation()
+        drs = sim.drs_allocation(k_max)
+        lat_drs = sim.run(drs).mean_latency
+        rows.append((f"serving_drs_rho{frac}", lat_drs * 1e3, f"ms | split {drs} | {note}"))
+        budget = k_max - drs["tokenize"] - drs["detokenize"]
+        for name, pre_frac in (("even", 0.5), ("prefill_heavy", 0.75), ("decode_heavy", 0.25)):
+            pre = max(int(budget * pre_frac), int(k_min[1]))
+            dec = budget - pre
+            if dec < int(k_min[2]):
+                rows.append((f"serving_{name}_rho{frac}", float("inf"), "infeasible (decode unstable)"))
+                continue
+            cand = {"tokenize": drs["tokenize"], "prefill": pre, "decode": dec,
+                    "detokenize": drs["detokenize"]}
+            lat = sim.run(cand).mean_latency
+            rows.append((f"serving_{name}_rho{frac}", lat * 1e3, f"ms | split {cand}"))
+    return rows
+
+
+def main() -> None:
+    for name, val, note in run():
+        print(f"{name},{val:.1f},{note}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Regenerate the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+dry-run records (so the document is reproducible from artifacts).
+
+  PYTHONPATH=src python -m benchmarks.make_experiments_tables > /tmp/tables.md
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .roofline import ARCH_ORDER, SHAPE_ORDER, RESULTS, load, roofline_fraction, table
+
+
+def dryrun_table(mesh: str) -> str:
+    lines = [
+        "| arch | shape | status | lower s | compile s | args GB/dev | temp GB/dev | "
+        "collective ops (counts) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load(mesh):
+        if rec.get("status") == "skipped":
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | skipped | — | — | — | — | "
+                f"{rec['reason'][:70]} |"
+            )
+            continue
+        if rec.get("status") != "ok":
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | ERROR | — | — | — | — | "
+                f"{rec.get('error','')[:70]} |"
+            )
+            continue
+        m = rec.get("memory_analysis", {})
+        counts = rec["roofline"]["collectives"]["count_by_kind"]
+        cstr = " ".join(f"{k}:{int(v)}" for k, v in sorted(counts.items()))
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | ok | {rec.get('lower_s', 0):.1f} | "
+            f"{rec.get('compile_s', 0):.1f} | "
+            f"{m.get('argument_size_in_bytes', 0)/2**30:.2f} | "
+            f"{m.get('temp_size_in_bytes', 0)/2**30:.2f} | {cstr} |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    for mesh in ("pod16x16", "pod2x16x16"):
+        print(f"\n### Dry-run — {mesh}\n")
+        print(dryrun_table(mesh))
+    print("\n### Roofline — pod16x16 (single pod; per §Roofline spec)\n")
+    print(table(load("pod16x16")))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Roofline report: aggregate dry-run records into the §Roofline table.
+
+Reads benchmarks/results/dryrun/*.json and emits a markdown table plus a
+per-cell summary of the three terms, the dominant bottleneck, MODEL_FLOPS
+vs compiled FLOPs, and what would move the dominant term.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--mesh pod16x16] [--tag x]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+ARCH_ORDER = [
+    "rwkv6-1.6b", "command-r-35b", "llama3.2-1b", "yi-34b", "phi3-medium-14b",
+    "qwen2-vl-2b", "mixtral-8x22b", "kimi-k2-1t-a32b", "zamba2-7b", "whisper-medium",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _advice(r: dict) -> str:
+    d = r["dominant"]
+    if d == "compute":
+        return "raise MXU occupancy: larger per-chip tiles / fewer pods"
+    if d == "memory":
+        return "cut HBM traffic: chunked attention, fused FFN, better remat"
+    return "cut collective bytes: shard_map EP, overlap, gradient compression"
+
+
+def load(mesh: str, tag: str = "") -> list[dict]:
+    recs = []
+    suffix = f"--{mesh}{('-' + tag) if tag else ''}.json"
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            p = RESULTS / f"{arch}--{shape}{suffix}"
+            if p.exists():
+                recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def table(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "bound s | MODEL_FLOPS | useful | HBM GB/dev | next move |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in recs:
+        if rec.get("status") == "skipped":
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | — | — | — | skipped | — | — | — | — | "
+                f"{rec['reason'][:60]}… |"
+            )
+            continue
+        if rec.get("status") != "ok":
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | — | — | — | ERROR | — | — | — | — | "
+                f"{rec.get('error', '')[:60]} |"
+            )
+            continue
+        r = rec["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        mem = rec.get("memory_analysis", {})
+        hbm = (
+            mem.get("argument_size_in_bytes", 0)
+            + mem.get("temp_size_in_bytes", 0)
+            + mem.get("output_size_in_bytes", 0)
+            - mem.get("alias_size_in_bytes", 0)
+        ) / 2**30
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {r['compute_s']:.4g} | "
+            f"{r['memory_s']:.4g} | {r['collective_s']:.4g} | {r['dominant']} | "
+            f"{bound:.4g} | {r['model_flops']:.3g} | {r['useful_ratio']:.2f} | "
+            f"{hbm:.1f} | {_advice(r)} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_fraction(rec: dict) -> float:
+    """compute_s / bound_s: how close the cell is to its compute roofline."""
+    r = rec["roofline"]
+    bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    return r["compute_s"] / bound if bound > 0 else 0.0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.mesh, args.tag)
+    if args.csv:
+        print("arch,shape,compute_s,memory_s,collective_s,dominant,roofline_fraction")
+        for rec in recs:
+            if rec.get("status") != "ok":
+                continue
+            r = rec["roofline"]
+            print(
+                f"{rec['arch']},{rec['shape']},{r['compute_s']:.6g},{r['memory_s']:.6g},"
+                f"{r['collective_s']:.6g},{r['dominant']},{roofline_fraction(rec):.4f}"
+            )
+        return
+    print(table(recs))
+    ok = [r for r in recs if r.get("status") == "ok"]
+    if ok:
+        worst = min(ok, key=roofline_fraction)
+        coll = max(ok, key=lambda r: r["roofline"]["collective_s"])
+        print(f"\nworst roofline fraction: {worst['arch']} x {worst['shape']} "
+              f"({roofline_fraction(worst):.4f})")
+        print(f"most collective-bound:   {coll['arch']} x {coll['shape']} "
+              f"({coll['roofline']['collective_s']:.3g}s)")
+
+
+if __name__ == "__main__":
+    main()

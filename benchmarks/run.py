@@ -1,0 +1,61 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows per benchmark.  Mapping:
+
+  bench_overhead         -> paper Table II   (scheduling + measurement cost)
+  bench_model_accuracy   -> paper Fig. 6 + 7 (allocation quality; est vs meas)
+  bench_underestimation  -> paper Fig. 8     (out-of-model cost ratio)
+  bench_rebalance        -> paper Fig. 9 + 10 (live rebalance, scale out/in)
+  bench_kernels          -> kernel layer (no paper table; TPU hot spots)
+  bench_serving          -> beyond-paper: DRS-scheduled LLM serving
+
+Roofline tables (EXPERIMENTS §Dry-run/§Roofline) are produced separately
+by ``python -m benchmarks.roofline`` from the dry-run records.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from . import (
+    bench_kernels,
+    bench_model_accuracy,
+    bench_overhead,
+    bench_rebalance,
+    bench_serving,
+    bench_underestimation,
+)
+
+SUITES = [
+    ("overhead", bench_overhead),
+    ("model_accuracy", bench_model_accuracy),
+    ("underestimation", bench_underestimation),
+    ("rebalance", bench_rebalance),
+    ("kernels", bench_kernels),
+    ("serving", bench_serving),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    failures = 0
+    for name, mod in SUITES:
+        if only and only != name:
+            continue
+        print(f"# --- {name} ({mod.__name__}) ---", flush=True)
+        t0 = time.time()
+        try:
+            for row_name, val, note in mod.run():
+                print(f"{row_name},{val},{note}", flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},ERROR,{traceback.format_exc().splitlines()[-1]}")
+        print(f"# {name} took {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

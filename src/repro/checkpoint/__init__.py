@@ -1,0 +1,5 @@
+"""Checkpoint substrate: sharded async elastic checkpointing."""
+
+from .store import CheckpointStore
+
+__all__ = ["CheckpointStore"]

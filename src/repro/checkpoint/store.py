@@ -1,0 +1,176 @@
+"""Sharded, async, elastic checkpointing.
+
+Design (DESIGN.md §8):
+
+* **Layout-independent**: arrays are saved per-leaf as .npy plus a JSON
+  manifest keyed by the pytree path and the *logical axes* — a checkpoint
+  taken on a (2,16,16) mesh restores onto (16,16) or (4,16,16) because
+  restore re-shards from the logical axes, not from the device layout at
+  save time.
+* **Atomic**: writes go to ``<dir>.tmp`` then rename; a crash mid-save
+  never corrupts the latest checkpoint; ``latest_step`` scans for complete
+  manifests only.
+* **Async**: ``save_async`` snapshots to host memory synchronously (cheap)
+  and writes to disk on a background thread — the train loop keeps
+  stepping during the disk write (the paper's "minimise overhead"
+  principle applied to fault tolerance).
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointStore"]
+
+# numpy round-trips ml_dtypes arrays as raw void bytes ("|V2"), which can't
+# be cast back.  Store them as same-width uints + the logical dtype name.
+_EXOTIC_DTYPES = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8, "float8_e5m2": np.uint8}
+
+
+def _exotic(name: str):
+    import ml_dtypes
+
+    return np.dtype(getattr(ml_dtypes, name))
+
+
+def _flatten_with_paths(tree: Any) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path
+        )
+        out.append((key, leaf))
+    return out
+
+
+class CheckpointStore:
+    def __init__(self, directory: str | Path):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._lock = threading.Lock()
+        self.save_count = 0
+
+    # ------------------------------------------------------------------ #
+    def _step_dir(self, step: int) -> Path:
+        return self.dir / f"step_{step:010d}"
+
+    def save(self, step: int, tree: Any, *, extra: dict | None = None) -> Path:
+        """Synchronous atomic save."""
+        host = jax.tree.map(lambda x: np.asarray(x), tree)
+        return self._write(step, host, extra or {})
+
+    def save_async(self, step: int, tree: Any, *, extra: dict | None = None) -> None:
+        """Snapshot now, write on a background thread."""
+        self.wait()  # one in-flight save at a time
+        host = jax.tree.map(lambda x: np.asarray(x), tree)  # device->host sync point
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host, extra or {}), daemon=True
+        )
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree: Any, extra: dict) -> Path:
+        final = self._step_dir(step)
+        tmp = final.with_suffix(".tmp")
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest: dict[str, Any] = {"step": step, "time": time.time(), "extra": extra, "leaves": {}}
+        for key, leaf in _flatten_with_paths(host_tree):
+            arr = np.asarray(leaf)
+            fname = key.replace("/", "__") + ".npy"
+            logical = arr.dtype.name
+            if logical in _EXOTIC_DTYPES:
+                np.save(tmp / fname, arr.view(_EXOTIC_DTYPES[logical]))
+            else:
+                np.save(tmp / fname, arr)
+            manifest["leaves"][key] = {
+                "file": fname,
+                "shape": list(arr.shape),
+                "dtype": logical,
+            }
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
+        with self._lock:
+            if final.exists():
+                shutil.rmtree(final)
+            tmp.rename(final)
+            self.save_count += 1
+        return final
+
+    # ------------------------------------------------------------------ #
+    def latest_step(self) -> int | None:
+        steps = []
+        for d in self.dir.glob("step_*"):
+            if d.is_dir() and (d / "manifest.json").exists():
+                try:
+                    steps.append(int(d.name.split("_")[1]))
+                except ValueError:
+                    continue
+        return max(steps) if steps else None
+
+    def restore(self, template: Any, step: int | None = None) -> tuple[Any, dict]:
+        """Restore into the structure of ``template`` (arrays or
+        ShapeDtypeStructs).  Returns (tree, extra).  Dtypes are cast to the
+        template's, so a checkpoint saved with f32 moments restores onto a
+        bf16-moment template (and vice versa) with an explicit cast."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self._step_dir(step)
+        manifest = json.loads((d / "manifest.json").read_text())
+        leaves = dict(_flatten_with_paths(template))
+
+        restored: dict[str, np.ndarray] = {}
+        for key, meta in manifest["leaves"].items():
+            arr = np.load(d / meta["file"])
+            if meta["dtype"] in _EXOTIC_DTYPES:
+                arr = arr.view(_exotic(meta["dtype"]))
+            if key in leaves:
+                want = leaves[key]
+                if tuple(arr.shape) != tuple(want.shape):
+                    raise ValueError(
+                        f"shape mismatch for {key}: ckpt {arr.shape} vs template {want.shape}"
+                    )
+                want_dtype = np.dtype(want.dtype)
+                if want_dtype.name in _EXOTIC_DTYPES:
+                    want_dtype = _exotic(want_dtype.name)
+                arr = arr.astype(want_dtype)
+            restored[key] = arr
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        out_leaves = []
+        for path, leaf in flat:
+            key = "/".join(
+                str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path
+            )
+            if key not in restored:
+                raise KeyError(f"checkpoint at step {step} missing leaf {key}")
+            out_leaves.append(restored[key])
+        tree = jax.tree_util.tree_unflatten(jax.tree.structure(template), out_leaves)
+        return tree, manifest.get("extra", {})
+
+    def prune(self, keep: int = 3) -> int:
+        """Delete all but the newest ``keep`` checkpoints."""
+        dirs = sorted(
+            (d for d in self.dir.glob("step_*") if (d / "manifest.json").exists()),
+            key=lambda d: int(d.name.split("_")[1]),
+        )
+        removed = 0
+        for d in dirs[:-keep] if keep else dirs:
+            shutil.rmtree(d)
+            removed += 1
+        return removed

@@ -1,0 +1,48 @@
+"""Architecture configs — one module per assigned architecture.
+
+``get_config(arch, preset)`` returns a ModelConfig; preset "full" is the
+exact published configuration (dry-run only: ShapeDtypeStruct, never
+allocated on CPU), preset "smoke" is a reduced same-family config for CPU
+smoke tests.  ``ARCHS`` lists all assigned ids.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "rwkv6-1.6b",
+    "command-r-35b",
+    "llama3.2-1b",
+    "yi-34b",
+    "phi3-medium-14b",
+    "qwen2-vl-2b",
+    "mixtral-8x22b",
+    "kimi-k2-1t-a32b",
+    "zamba2-7b",
+    "whisper-medium",
+]
+
+_MODULES = {
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "command-r-35b": "command_r_35b",
+    "llama3.2-1b": "llama3_2_1b",
+    "yi-34b": "yi_34b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "zamba2-7b": "zamba2_7b",
+    "whisper-medium": "whisper_medium",
+}
+
+
+def get_config(arch: str, preset: str = "full"):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCHS}")
+    mod = importlib.import_module(f".{_MODULES[arch]}", __package__)
+    if preset == "full":
+        return mod.full()
+    if preset == "smoke":
+        return mod.smoke()
+    raise ValueError(f"unknown preset {preset!r}")

@@ -1,0 +1,34 @@
+"""phi3-medium-14b [dense] — 40L d_model=5120 40H (GQA kv=10) d_ff=17920
+vocab=100352.  RoPE SwiGLU GQA.  [arXiv:2404.14219; unverified]"""
+
+from ..models.common import ModelConfig
+
+ARCH = "phi3-medium-14b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        arch=ARCH,
+        family="dense",
+        n_layers=40,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=10,
+        d_ff=17920,
+        vocab=100352,
+        rope_theta=10000.0,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        arch=ARCH + "-smoke",
+        family="dense",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,  # kv=10 of 40 -> same 4:1-ish grouping flavour
+        d_ff=224,
+        vocab=256,
+        rope_theta=10000.0,
+    )

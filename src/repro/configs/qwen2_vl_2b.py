@@ -1,0 +1,45 @@
+"""qwen2-vl-2b [vlm] — 28L d_model=1536 12H (GQA kv=2) d_ff=8960
+vocab=151936.  M-RoPE, dynamic resolution (patch frontend is a stub input).
+[arXiv:2409.12191; hf]"""
+
+from ..models.common import ModelConfig
+
+ARCH = "qwen2-vl-2b"
+
+# Fixed stub patch count fed by input_specs (dynamic resolution is the
+# frontend's business; the backbone sees a flat patch sequence).
+N_PATCHES = 256
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        arch=ARCH,
+        family="vlm",
+        n_layers=28,
+        d_model=1536,
+        n_heads=12,
+        n_kv_heads=2,
+        d_ff=8960,
+        vocab=151936,
+        rope_theta=1000000.0,
+        m_rope=True,
+        mrope_sections=(16, 24, 24),
+        tie_embeddings=True,  # qwen2-vl-2b ties embeddings
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        arch=ARCH + "-smoke",
+        family="vlm",
+        n_layers=2,
+        d_model=48,
+        n_heads=3,
+        n_kv_heads=1,
+        d_ff=96,
+        vocab=256,
+        rope_theta=10000.0,
+        m_rope=True,
+        mrope_sections=(4, 2, 2),  # head_dim 16 -> half = 8
+        tie_embeddings=True,
+    )

@@ -1,0 +1,112 @@
+"""Assigned input shapes and ``input_specs()`` (ShapeDtypeStruct stand-ins).
+
+Shapes (assigned to this paper; LM shapes are seq_len x global_batch):
+  train_4k     seq_len=4096    global_batch=256   (training, train_step)
+  prefill_32k  seq_len=32768   global_batch=32    (inference prefill)
+  decode_32k   seq_len=32768   global_batch=128   (decode: ONE new token
+                                                   against a 32k cache)
+  long_500k    seq_len=524288  global_batch=1     (long-context decode;
+                                                   sub-quadratic archs only)
+
+``long_500k`` runs for rwkv6-1.6b (attention-free), zamba2-7b (hybrid SSM)
+and mixtral-8x22b (SWA window 4096 bounds decode attention); it is SKIPPED
+for the pure full-attention archs (see DESIGN.md §5).
+
+For [audio]/[vlm] archs the modality frontend is a STUB: input_specs
+provides precomputed frame/patch embeddings, per the assignment.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import get_config
+from .qwen2_vl_2b import N_PATCHES
+
+__all__ = ["SHAPES", "ShapeSpec", "input_specs", "cell_is_supported", "skip_reason"]
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+_SUBQUADRATIC = {"rwkv6-1.6b", "zamba2-7b", "mixtral-8x22b"}
+
+
+def cell_is_supported(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch in _SUBQUADRATIC
+    return True
+
+
+def skip_reason(arch: str, shape: str) -> str | None:
+    if cell_is_supported(arch, shape):
+        return None
+    return (
+        f"{arch} is pure full attention: a 500k-token decode cache has no "
+        "sub-quadratic path (DESIGN.md §5); long_500k runs only for "
+        "SSM/hybrid/SWA archs"
+    )
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(arch: str, shape: str) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of the given cell.
+
+    For ``train``: the train_step batch.  For ``prefill``: prompt batch.
+    For ``decode``: one-token batch + the full-size cache (built by
+    launch/dryrun.py via serve.init_cache eval_shape).
+    """
+    cfg = get_config(arch, "full")
+    spec = SHAPES[shape]
+    b, s = spec.global_batch, spec.seq_len
+    i32 = jnp.int32
+
+    if spec.kind == "train":
+        batch = {
+            "tokens": _sds((b, s), i32),
+            "labels": _sds((b, s), i32),
+        }
+        if cfg.family == "vlm":
+            s_text = s - N_PATCHES
+            batch = {
+                "tokens": _sds((b, s_text), i32),
+                "labels": _sds((b, s_text), i32),
+                "patch_embeds": _sds((b, N_PATCHES, cfg.d_model), cfg.dtype),
+                "positions_3d": _sds((3, b, s), i32),
+            }
+        if cfg.family == "audio":
+            batch["frames"] = _sds((b, cfg.enc_seq, cfg.d_model), cfg.dtype)
+        return batch
+
+    if spec.kind == "prefill":
+        batch = {"tokens": _sds((b, s), i32)}
+        if cfg.family == "vlm":
+            batch = {
+                "tokens": _sds((b, s - N_PATCHES), i32),
+                "patch_embeds": _sds((b, N_PATCHES, cfg.d_model), cfg.dtype),
+                "positions_3d": _sds((3, b, s), i32),
+            }
+        if cfg.family == "audio":
+            batch["frames"] = _sds((b, cfg.enc_seq, cfg.d_model), cfg.dtype)
+        return batch
+
+    # decode: one new token; cache shapes come from serve.init_cache
+    return {"tokens": _sds((b,), i32)}

@@ -1,0 +1,34 @@
+"""yi-34b [dense] — 60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000
+llama-arch GQA.  [arXiv:2403.04652; hf]"""
+
+from ..models.common import ModelConfig
+
+ARCH = "yi-34b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        arch=ARCH,
+        family="dense",
+        n_layers=60,
+        d_model=7168,
+        n_heads=56,
+        n_kv_heads=8,
+        d_ff=20480,
+        vocab=64000,
+        rope_theta=5000000.0,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        arch=ARCH + "-smoke",
+        family="dense",
+        n_layers=3,
+        d_model=56,  # keeps 56-head ratio family: 7 heads of 8
+        n_heads=7,
+        n_kv_heads=1,
+        d_ff=160,
+        vocab=256,
+        rope_theta=10000.0,
+    )

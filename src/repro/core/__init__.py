@@ -1,0 +1,62 @@
+"""DRS core — the paper's primary contribution.
+
+Performance model (Erlang M/M/k + Jackson OQN, paper §III-B), optimal
+greedy allocator (Algorithm 1; Programs (4) and (6), §III-C), and the
+runtime modules (measurer / scheduler / negotiator / rebalance, §IV).
+"""
+
+from .erlang import (
+    erlang_b,
+    erlang_c,
+    expected_sojourn,
+    expected_sojourn_factorial,
+    marginal_benefit,
+    min_stable_k,
+    sojourn_curve,
+)
+from .jackson import (
+    OperatorSpec,
+    Topology,
+    UnstableTopologyError,
+    solve_traffic_equations,
+)
+from .allocator import (
+    AllocationResult,
+    InsufficientResourcesError,
+    allocate,
+    assign_processors,
+    assign_processors_naive,
+    brute_force_optimal,
+    min_processors,
+)
+from .measurer import (
+    EwmaSmoother,
+    InstanceProbe,
+    Measurer,
+    MeasurementSnapshot,
+    WindowSmoother,
+)
+from .negotiator import LeaseChange, Machine, Negotiator, ResourcePool
+from .rebalance import ExecutableCache, RebalanceCostModel, RebalancePlan
+from .heterogeneous import HeterogeneousAllocation, SpeedPool, assign_heterogeneous
+from .scheduler import (
+    DRSScheduler,
+    SchedulerConfig,
+    SchedulerDecision,
+    StragglerDetector,
+)
+
+__all__ = [
+    "erlang_b", "erlang_c", "expected_sojourn", "expected_sojourn_factorial",
+    "marginal_benefit", "min_stable_k", "sojourn_curve",
+    "OperatorSpec", "Topology", "UnstableTopologyError", "solve_traffic_equations",
+    "AllocationResult", "InsufficientResourcesError", "allocate",
+    "assign_processors", "assign_processors_naive", "brute_force_optimal",
+    "min_processors",
+    "EwmaSmoother", "InstanceProbe", "Measurer", "MeasurementSnapshot",
+    "WindowSmoother",
+    "LeaseChange", "Machine", "Negotiator", "ResourcePool",
+    "ExecutableCache", "RebalanceCostModel", "RebalancePlan",
+    "DRSScheduler", "SchedulerConfig", "SchedulerDecision", "StragglerDetector",
+    "HeterogeneousAllocation", "SpeedPool", "assign_heterogeneous",
+]

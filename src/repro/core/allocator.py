@@ -1,0 +1,224 @@
+"""DRS resource allocation — paper Algorithm 1 and Programs (4) and (6).
+
+Two solvers are provided for Program (4) (min E[T] s.t. sum k_i <= K_max):
+
+* :func:`assign_processors_naive` — the paper's Algorithm 1 verbatim:
+  each round recomputes every operator's marginal benefit and increments the
+  argmax.  O(K_max * N) sojourn evaluations.  Kept as the reference.
+* :func:`assign_processors` — heap-based: because the marginal benefit
+  ``delta_i(k) = lam_i (E[T_i](k) - E[T_i](k+1))`` is non-increasing in k
+  (convexity, paper Ineq. 5), a max-heap of each operator's *next* gain
+  yields the identical allocation in O((K_max - sum k_min) log N).
+  This is a beyond-paper efficiency win needed at K_max ~ thousands of chips
+  (see benchmarks/bench_overhead.py, the Table-II reproduction).
+
+Program (6) (min sum k_i s.t. E[T] <= T_max) is solved by the same greedy
+run until the constraint is met (:func:`min_processors`), as in the paper.
+
+Theorem 1 (optimality of the greedy for Program 4) is exercised in
+tests/test_allocator.py against brute-force enumeration.
+"""
+
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+from .jackson import Topology
+
+__all__ = [
+    "InsufficientResourcesError",
+    "AllocationResult",
+    "assign_processors",
+    "assign_processors_naive",
+    "min_processors",
+    "allocate",
+]
+
+
+class InsufficientResourcesError(RuntimeError):
+    """Paper Algorithm 1 lines 4-6: sum of minimal k_i exceeds K_max."""
+
+    def __init__(self, needed: int, k_max: int, k_min: np.ndarray):
+        super().__init__(
+            f"minimum feasible allocation needs {needed} processors but "
+            f"K_max={k_max} (per-operator minima: {k_min.tolist()})"
+        )
+        self.needed = needed
+        self.k_max = k_max
+        self.k_min = k_min
+
+
+@dataclass(frozen=True)
+class AllocationResult:
+    k: np.ndarray  # processors per operator
+    expected_sojourn: float  # model E[T](k), seconds
+    total: int  # sum k_i
+    evaluations: int  # number of E[T_i] evaluations performed (cost metric)
+
+    def as_dict(self) -> dict:
+        return {
+            "k": self.k.tolist(),
+            "expected_sojourn": self.expected_sojourn,
+            "total": self.total,
+            "evaluations": self.evaluations,
+        }
+
+
+def _marginal(top: Topology, lam: np.ndarray, i: int, k_i: int) -> float:
+    """delta_i = lam_i * (E[T_i](k_i) - E[T_i](k_i+1)), Algorithm 1 line 9."""
+    op = top.operators[i]
+    t0 = op.sojourn(k_i, lam[i])
+    t1 = op.sojourn(k_i + 1, lam[i])
+    if math.isinf(t0):
+        return math.inf
+    return lam[i] * (t0 - t1)
+
+
+def assign_processors_naive(top: Topology, k_max: int) -> AllocationResult:
+    """Paper Algorithm 1, literal transcription (reference implementation)."""
+    lam = top.arrival_rates
+    k = top.min_feasible_allocation()
+    evals = 0
+    if int(k.sum()) > k_max:
+        raise InsufficientResourcesError(int(k.sum()), k_max, k)
+    while int(k.sum()) < k_max:
+        deltas = np.empty(top.n)
+        for i in range(top.n):
+            deltas[i] = _marginal(top, lam, i, int(k[i]))
+            evals += 2
+        j = int(np.argmax(deltas))
+        if deltas[j] <= 0.0:
+            break  # no operator benefits; adding more would be pure waste
+        k[j] += 1
+    return AllocationResult(k, top.expected_sojourn(k), int(k.sum()), evals)
+
+
+def assign_processors(top: Topology, k_max: int) -> AllocationResult:
+    """Heap-based Algorithm 1 — identical output, O((K-K0) log N)."""
+    lam = top.arrival_rates
+    k = top.min_feasible_allocation()
+    evals = 0
+    total = int(k.sum())
+    if total > k_max:
+        raise InsufficientResourcesError(total, k_max, k)
+    # Max-heap of (-delta, i); each operator's entry reflects its next gain.
+    heap: list[tuple[float, int]] = []
+    for i in range(top.n):
+        if lam[i] == 0.0:
+            continue
+        d = _marginal(top, lam, i, int(k[i]))
+        evals += 2
+        heap.append((-d, i))
+    heapq.heapify(heap)
+    while total < k_max and heap:
+        neg_d, i = heapq.heappop(heap)
+        if -neg_d <= 0.0:
+            break
+        k[i] += 1
+        total += 1
+        d = _marginal(top, lam, i, int(k[i]))
+        evals += 2
+        heapq.heappush(heap, (-d, i))
+    return AllocationResult(k, top.expected_sojourn(k), total, evals)
+
+
+def min_processors(
+    top: Topology, t_max: float, *, k_cap: int = 1 << 20
+) -> AllocationResult:
+    """Program (6): min sum k_i s.t. E[T](k) <= T_max (greedy, paper §III-C).
+
+    Starts from the minimal feasible allocation and adds the max-marginal-
+    benefit processor until the constraint holds.  ``k_cap`` bounds the
+    search (raises if T_max is unreachable, e.g. below the service-time
+    floor sum_i v_i / mu_i which no amount of processors can beat).
+    """
+    lam = top.arrival_rates
+    # Constraint floor: E[T] >= sum_i (lam_i/lam0) * (1/mu_i) even with k=inf.
+    floor = sum(
+        lam[i] / top.lam0_total / op.mu for i, op in enumerate(top.operators) if lam[i] > 0
+    )
+    if t_max < floor:
+        raise InsufficientResourcesError(
+            k_cap, k_cap, top.min_feasible_allocation()
+        )
+    k = top.min_feasible_allocation()
+    evals = 0
+    heap: list[tuple[float, int]] = []
+    for i in range(top.n):
+        if lam[i] == 0.0:
+            continue
+        d = _marginal(top, lam, i, int(k[i]))
+        evals += 2
+        heap.append((-d, i))
+    heapq.heapify(heap)
+    et = top.expected_sojourn(k)
+    total = int(k.sum())
+    while et > t_max and heap and total < k_cap:
+        neg_d, i = heapq.heappop(heap)
+        gain = -neg_d
+        if gain <= 0.0:
+            break
+        k[i] += 1
+        total += 1
+        # E[T] drops by lam_i * gain / lam0 (Eq. 3 weighting).
+        et -= gain / top.lam0_total
+        d = _marginal(top, lam, i, int(k[i]))
+        evals += 2
+        heapq.heappush(heap, (-d, i))
+    if et > t_max:
+        raise InsufficientResourcesError(total, k_cap, k)
+    return AllocationResult(k, top.expected_sojourn(k), total, evals)
+
+
+def allocate(
+    top: Topology,
+    *,
+    k_max: int | None = None,
+    t_max: float | None = None,
+) -> AllocationResult:
+    """Dispatch: Program (4) when k_max given, Program (6) when t_max given.
+
+    When both are given: solve Program (6) first; if its total exceeds
+    k_max, fall back to Program (4) at k_max (best effort under the lease) —
+    this is the scheduler's "not enough machines yet, do the best we can
+    while the negotiator acquires more" path.
+    """
+    if k_max is None and t_max is None:
+        raise ValueError("need k_max and/or t_max")
+    if t_max is not None:
+        try:
+            res = min_processors(top, t_max)
+            if k_max is None or res.total <= k_max:
+                return res
+        except InsufficientResourcesError:
+            if k_max is None:
+                raise
+    assert k_max is not None
+    return assign_processors(top, k_max)
+
+
+def brute_force_optimal(top: Topology, k_max: int) -> tuple[np.ndarray, float]:
+    """Exhaustive Program-(4) solver for tests (tiny instances only)."""
+    k_min = top.min_feasible_allocation()
+    if int(k_min.sum()) > k_max:
+        raise InsufficientResourcesError(int(k_min.sum()), k_max, k_min)
+    best_k, best_t = None, math.inf
+    n = top.n
+
+    def rec(i: int, remaining: int, k: list[int]) -> None:
+        nonlocal best_k, best_t
+        if i == n:
+            t = top.expected_sojourn(np.array(k))
+            if t < best_t:
+                best_t, best_k = t, np.array(k)
+            return
+        for extra in range(remaining + 1):
+            rec(i + 1, remaining - extra, k + [int(k_min[i]) + extra])
+
+    rec(0, k_max - int(k_min.sum()), [])
+    assert best_k is not None
+    return best_k, best_t

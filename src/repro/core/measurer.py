@@ -1,0 +1,255 @@
+"""DRS measurer module (paper §IV + Appendix B-A).
+
+Collects, per operator: the average aggregate tuple arrival rate
+``lam_hat_i`` and the average service rate ``mu_hat_i``; and globally: the
+external arrival rate ``lam0_hat`` and the measured mean complete sojourn
+time ``E[T_hat]``.
+
+Faithful to the paper's design:
+
+* **bi-layer sampling** — each operator instance records the metric of one
+  tuple every ``N_m`` local inputs (instance layer); the central measurer
+  pulls aggregated counters every ``T_m`` seconds (pull layer).
+* **operator-level aggregation** — instance counters are summed to operator
+  level before model use (Appendix B-A (a)).
+* **smoothing** — either alpha-weighted EWMA ``D(n) = a*D(n-1) + (1-a)*d(n)``
+  or window averaging ``D(n) = mean(d(n-w+1..n))`` (Appendix B-A (b)).
+
+The arrival-rate probe sits at the queue *tail* (Appendix C: "the rate
+measurement position should be at the tail of the operator queue, instead
+of the queue head") — i.e. we count enqueues, not dequeues, so an
+overloaded operator still reports its true offered load.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = [
+    "Smoother",
+    "EwmaSmoother",
+    "WindowSmoother",
+    "InstanceProbe",
+    "OperatorMetrics",
+    "Measurer",
+    "MeasurementSnapshot",
+]
+
+
+class Smoother:
+    def update(self, x: float) -> float:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    @property
+    def value(self) -> float:  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class EwmaSmoother(Smoother):
+    """D(n) = alpha * D(n-1) + (1 - alpha) * d(n), alpha in [0, 1)."""
+
+    def __init__(self, alpha: float = 0.6):
+        if not 0.0 <= alpha < 1.0:
+            raise ValueError(f"alpha must be in [0,1), got {alpha}")
+        self.alpha = alpha
+        self._v: float | None = None
+
+    def update(self, x: float) -> float:
+        self._v = x if self._v is None else self.alpha * self._v + (1 - self.alpha) * x
+        return self._v
+
+    @property
+    def value(self) -> float:
+        return float("nan") if self._v is None else self._v
+
+
+class WindowSmoother(Smoother):
+    """D(n) = (1/w) * sum_{j=n-w+1..n} d(j)."""
+
+    def __init__(self, w: int = 5):
+        if w < 1:
+            raise ValueError(f"window must be >= 1, got {w}")
+        self._buf: deque[float] = deque(maxlen=w)
+
+    def update(self, x: float) -> float:
+        self._buf.append(x)
+        return self.value
+
+    @property
+    def value(self) -> float:
+        return float(np.mean(self._buf)) if self._buf else float("nan")
+
+
+def make_smoother(kind: str, **kw) -> Smoother:
+    if kind == "ewma":
+        return EwmaSmoother(**kw)
+    if kind == "window":
+        return WindowSmoother(**kw)
+    raise ValueError(f"unknown smoother kind {kind!r}")
+
+
+@dataclass
+class InstanceProbe:
+    """Instance-local metric recorder (the injected 'measurement logic').
+
+    Thread-safe; records every ``n_m``-th tuple's service time and counts
+    every enqueue (arrivals are never sampled — counting is cheap; only the
+    *timing* is sampled, mirroring the paper's overhead argument).
+    """
+
+    n_m: int = 10
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+    arrivals: int = 0
+    processed: int = 0
+    sampled_service_time: float = 0.0
+    sampled_count: int = 0
+    _tick: int = 0
+
+    def on_enqueue(self, n: int = 1) -> None:
+        with self._lock:
+            self.arrivals += n
+
+    def on_processed(self, service_time: float, n: int = 1) -> None:
+        with self._lock:
+            self.processed += n
+            self._tick += n
+            if self._tick >= self.n_m:
+                self._tick = 0
+                self.sampled_service_time += service_time
+                self.sampled_count += 1
+
+    def drain(self) -> tuple[int, int, float, int]:
+        """Pull-and-reset (the central measurer's T_m pull)."""
+        with self._lock:
+            out = (self.arrivals, self.processed, self.sampled_service_time, self.sampled_count)
+            self.arrivals = 0
+            self.processed = 0
+            self.sampled_service_time = 0.0
+            self.sampled_count = 0
+            return out
+
+
+@dataclass
+class OperatorMetrics:
+    """Operator-level aggregated + smoothed estimates."""
+
+    name: str
+    lam_smoother: Smoother
+    mu_smoother: Smoother
+    lam_hat: float = float("nan")
+    mu_hat: float = float("nan")
+    last_raw_lam: float = float("nan")
+    last_raw_mu: float = float("nan")
+
+    def ingest(self, arrivals: int, service_time_sum: float, samples: int, dt: float) -> None:
+        if dt <= 0:
+            return
+        raw_lam = arrivals / dt
+        self.last_raw_lam = raw_lam
+        self.lam_hat = self.lam_smoother.update(raw_lam)
+        if samples > 0 and service_time_sum > 0:
+            raw_mu = samples / service_time_sum  # tuples/sec per processor
+            self.last_raw_mu = raw_mu
+            self.mu_hat = self.mu_smoother.update(raw_mu)
+
+
+@dataclass(frozen=True)
+class MeasurementSnapshot:
+    """One pull interval's smoothed view — the optimizer's input."""
+
+    lam_hat: np.ndarray  # per-operator smoothed arrival rates
+    mu_hat: np.ndarray  # per-operator smoothed per-processor service rates
+    lam0_hat: float  # external arrival rate
+    sojourn_hat: float  # measured mean complete sojourn time E[T^]
+    t: float  # timestamp of the pull
+
+    def complete(self) -> bool:
+        return (
+            np.all(np.isfinite(self.lam_hat))
+            and np.all(np.isfinite(self.mu_hat))
+            and np.isfinite(self.lam0_hat)
+        )
+
+
+class Measurer:
+    """Central measurer: owns per-operator probes + global tuple tracking.
+
+    The engine (streaming/engine.py) or serving router registers one probe
+    per operator instance; completed external tuples report their total
+    sojourn time here (the paper uses Storm's acker tree for this).
+    """
+
+    def __init__(
+        self,
+        operator_names: list[str],
+        *,
+        n_m: int = 10,
+        smoother: str = "ewma",
+        smoother_kw: dict | None = None,
+    ):
+        kw = dict(smoother_kw or {})
+        self.names = list(operator_names)
+        self.n_m = n_m
+        self._probes: dict[str, list[InstanceProbe]] = {n: [] for n in self.names}
+        self._metrics = {
+            n: OperatorMetrics(n, make_smoother(smoother, **kw), make_smoother(smoother, **kw))
+            for n in self.names
+        }
+        self._lam0_smoother = make_smoother(smoother, **kw)
+        self._sojourn_smoother = make_smoother(smoother, **kw)
+        self._lock = threading.Lock()
+        self._external_arrivals = 0
+        self._sojourn_sum = 0.0
+        self._sojourn_n = 0
+        self._last_pull_t: float | None = None
+
+    # Registration / reporting ------------------------------------------ #
+    def new_probe(self, operator: str) -> InstanceProbe:
+        p = InstanceProbe(n_m=self.n_m)
+        self._probes[operator].append(p)
+        return p
+
+    def on_external_arrival(self, n: int = 1) -> None:
+        with self._lock:
+            self._external_arrivals += n
+
+    def on_tuple_complete(self, sojourn: float, n: int = 1) -> None:
+        """Completion of an external tuple's whole processing tree."""
+        with self._lock:
+            self._sojourn_sum += sojourn * n
+            self._sojourn_n += n
+
+    # Pull layer --------------------------------------------------------- #
+    def pull(self, now: float) -> MeasurementSnapshot:
+        """T_m-periodic pull: drain probes, aggregate, smooth, snapshot."""
+        dt = 0.0 if self._last_pull_t is None else now - self._last_pull_t
+        self._last_pull_t = now
+        lam = np.full(len(self.names), np.nan)
+        mu = np.full(len(self.names), np.nan)
+        for idx, name in enumerate(self.names):
+            arrivals, _processed, st_sum, st_n = 0, 0, 0.0, 0
+            for p in self._probes[name]:
+                a, pr, s, c = p.drain()
+                arrivals += a
+                _processed += pr
+                st_sum += s
+                st_n += c
+            m = self._metrics[name]
+            m.ingest(arrivals, st_sum, st_n, dt)
+            lam[idx] = m.lam_hat
+            mu[idx] = m.mu_hat
+        with self._lock:
+            ext, self._external_arrivals = self._external_arrivals, 0
+            s_sum, self._sojourn_sum = self._sojourn_sum, 0.0
+            s_n, self._sojourn_n = self._sojourn_n, 0
+        lam0 = self._lam0_smoother.update(ext / dt) if dt > 0 else float("nan")
+        soj = (
+            self._sojourn_smoother.update(s_sum / s_n)
+            if s_n > 0
+            else self._sojourn_smoother.value
+        )
+        return MeasurementSnapshot(lam, mu, lam0, soj, now)

@@ -1,0 +1,326 @@
+"""DRS scheduler — the control loop (paper §III-C step (a)-(c), §IV).
+
+Each tick:
+  1. pull a smoothed :class:`MeasurementSnapshot` from the measurer;
+  2. rebuild the model Topology from (lam0_hat, lam_hat, mu_hat) — routing
+     multiplicities are re-estimated from measured per-operator arrival
+     ratios, so shifts in data properties (e.g. more SIFT features per
+     frame) are tracked without re-declaring the graph;
+  3. run Program (6) when a T_max is configured (how many processors do we
+     need?) and Program (4) at the current K_max (where do they go?);
+  4. decide: scale out (negotiator.ensure) when Program (6) needs more than
+     leased; scale in when it needs sufficiently less (hysteresis); and/or
+     rebalance the allocation when the cost/benefit plan says so;
+  5. emit a :class:`SchedulerDecision` for the CSP layer to execute.
+
+Straggler handling is paper-native: a straggler inside operator i drags the
+measured mu_hat_i down; the model then predicts a T_max violation and the
+loop reallocates — no special case needed.  A separate watchdog
+(:class:`StragglerDetector`) additionally flags *which* instance is slow by
+comparing per-instance service-time samples against the operator median.
+"""
+
+from __future__ import annotations
+
+import logging
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from .allocator import (
+    AllocationResult,
+    InsufficientResourcesError,
+    assign_processors,
+    min_processors,
+)
+from .jackson import OperatorSpec, Topology
+from .measurer import Measurer, MeasurementSnapshot
+from .negotiator import Negotiator
+from .rebalance import ExecutableCache, RebalanceCostModel, RebalancePlan
+
+logger = logging.getLogger(__name__)
+
+__all__ = ["SchedulerConfig", "SchedulerDecision", "DRSScheduler", "StragglerDetector"]
+
+
+@dataclass(frozen=True)
+class SchedulerConfig:
+    t_max: float | None = None  # real-time constraint (seconds); None = Program 4 only
+    k_max: int | None = None  # static budget; None = ask the negotiator
+    horizon_seconds: float = 300.0  # cost/benefit planning horizon
+    scale_in_hysteresis: float = 0.8  # scale in only if need < hysteresis * leased
+    min_improvement: float = 0.05  # rebalance only if E[T] improves by >= 5%
+    headroom: float = 1.1  # provision Program-6 result * headroom (model error guard)
+    tick_interval: float = 10.0  # T_m: pull + decide period
+
+
+@dataclass(frozen=True)
+class SchedulerDecision:
+    """What the CSP layer should do after a tick."""
+
+    t: float
+    action: str  # "none" | "rebalance" | "scale_out" | "scale_in" | "infeasible"
+    k_current: np.ndarray
+    k_target: np.ndarray | None
+    k_max: int
+    model_sojourn_current: float
+    model_sojourn_target: float | None
+    measured_sojourn: float
+    plan: RebalancePlan | None = None
+    reason: str = ""
+
+    def as_dict(self) -> dict:
+        return {
+            "t": self.t,
+            "action": self.action,
+            "k_current": self.k_current.tolist(),
+            "k_target": None if self.k_target is None else self.k_target.tolist(),
+            "k_max": self.k_max,
+            "model_sojourn_current": self.model_sojourn_current,
+            "model_sojourn_target": self.model_sojourn_target,
+            "measured_sojourn": self.measured_sojourn,
+            "reason": self.reason,
+        }
+
+
+class DRSScheduler:
+    """The DRS optimizer + scheduler modules glued together."""
+
+    def __init__(
+        self,
+        operator_names: list[str],
+        base_routing: np.ndarray,
+        k_current: np.ndarray,
+        config: SchedulerConfig,
+        *,
+        measurer: Measurer | None = None,
+        negotiator: Negotiator | None = None,
+        cost_model: RebalanceCostModel | None = None,
+        executable_cache: ExecutableCache | None = None,
+        scaling: list[str] | None = None,
+        group_alpha: list[float] | None = None,
+        on_decision: Callable[[SchedulerDecision], None] | None = None,
+    ):
+        self.names = list(operator_names)
+        self.base_routing = np.asarray(base_routing, dtype=np.float64)
+        self.k_current = np.asarray(k_current, dtype=np.int64).copy()
+        self.config = config
+        self.measurer = measurer or Measurer(self.names)
+        self.negotiator = negotiator
+        self.cost_model = cost_model or RebalanceCostModel()
+        self.cache = executable_cache
+        self.scaling = scaling or ["replica"] * len(self.names)
+        self.group_alpha = group_alpha or [0.0] * len(self.names)
+        self.on_decision = on_decision
+        self.history: list[SchedulerDecision] = []
+        self.rebalance_count = 0
+
+    # ------------------------------------------------------------------ #
+    def topology_from(self, snap: MeasurementSnapshot) -> Topology:
+        """Rebuild the model from measurements.
+
+        Routing multiplicities are rescaled from the *declared* graph
+        shape and the *measured* arrival ratios: for edge (i -> j) with
+        declared weight w_ij > 0 we set w'_ij = w_ij * r_j where r_j scales
+        all of j's in-edges so the traffic equations reproduce lam_hat_j.
+        This keeps the graph structure (which DRS knows) but tracks data-
+        dependent fan-out (which only measurement can see).
+        """
+        n = len(self.names)
+        lam_hat = np.array(snap.lam_hat, dtype=np.float64)
+        lam0 = np.zeros(n)
+        # External arrivals enter at declared sources (no in-edges).
+        in_deg = self.base_routing.sum(axis=0)
+        sources = np.nonzero(in_deg == 0)[0]
+        if len(sources) == 0:
+            sources = np.array([0])
+        src_lam = lam_hat[sources]
+        total_src = max(src_lam.sum(), 1e-12)
+        for s, l in zip(sources, src_lam):
+            lam0[s] = snap.lam0_hat * (l / total_src) if math.isfinite(snap.lam0_hat) else l
+        routing = self.base_routing.copy()
+        # Rescale in-edges to match measured per-operator arrival rates.
+        for j in range(n):
+            declared_in = routing[:, j]
+            if declared_in.sum() == 0:
+                continue
+            inflow = float(np.dot(declared_in, lam_hat))  # predicted from measured upstream
+            if inflow > 1e-12 and math.isfinite(lam_hat[j]) and lam_hat[j] > 0:
+                routing[:, j] *= lam_hat[j] / inflow
+        ops = [
+            OperatorSpec(
+                name=self.names[i],
+                mu=float(snap.mu_hat[i]),
+                scaling=self.scaling[i],
+                group_alpha=self.group_alpha[i],
+            )
+            for i in range(n)
+        ]
+        return Topology(ops, lam0, routing)
+
+    # ------------------------------------------------------------------ #
+    def tick(self, now: float | None = None) -> SchedulerDecision:
+        now = time.time() if now is None else now
+        snap = self.measurer.pull(now)
+        if not snap.complete():
+            d = SchedulerDecision(
+                now, "none", self.k_current.copy(), None,
+                self._k_max(), float("nan"), None, snap.sojourn_hat,
+                reason="insufficient measurements",
+            )
+            self._emit(d)
+            return d
+        top = self.topology_from(snap)
+        return self.decide(top, snap, now)
+
+    def _k_max(self) -> int:
+        if self.config.k_max is not None:
+            return self.config.k_max
+        if self.negotiator is not None:
+            return self.negotiator.k_max
+        return int(self.k_current.sum())
+
+    def decide(
+        self, top: Topology, snap: MeasurementSnapshot, now: float
+    ) -> SchedulerDecision:
+        cfg = self.config
+        k_max = self._k_max()
+        et_cur = top.expected_sojourn(self.k_current)
+
+        # --- Program (6): how many processors do we actually need? ------ #
+        need: AllocationResult | None = None
+        if cfg.t_max is not None:
+            try:
+                need = min_processors(top, cfg.t_max)
+            except InsufficientResourcesError:
+                need = None
+
+        # Scale out: T_max unreachable within the current lease.
+        if cfg.t_max is not None:
+            needed_total = (
+                math.ceil(need.total * cfg.headroom) if need is not None else k_max + 1
+            )
+            if needed_total > k_max and self.negotiator is not None:
+                self.negotiator.ensure(needed_total)
+                new_k_max = self.negotiator.k_max
+                if new_k_max > k_max:
+                    k_max = new_k_max
+                    best = assign_processors(top, k_max)
+                    return self._apply(
+                        now, "scale_out", best, top, et_cur, snap,
+                        reason=f"Program(6) needs {needed_total} > leased; "
+                        f"negotiated k_max={k_max}",
+                    )
+            # Scale in: we need much less than we lease (with hysteresis).
+            if (
+                need is not None
+                and self.negotiator is not None
+                and math.ceil(need.total * cfg.headroom) < cfg.scale_in_hysteresis * k_max
+            ):
+                target_total = math.ceil(need.total * cfg.headroom)
+                self.negotiator.ensure(target_total)
+                new_k_max = self.negotiator.k_max
+                if new_k_max < k_max:
+                    best = assign_processors(top, new_k_max)
+                    return self._apply(
+                        now, "scale_in", best, top, et_cur, snap,
+                        reason=f"Program(6) needs {need.total} (headroom "
+                        f"{target_total}) << leased {k_max}; released to {new_k_max}",
+                    )
+
+        # --- Program (4): best placement within k_max ------------------- #
+        try:
+            best = assign_processors(top, k_max)
+        except InsufficientResourcesError as e:
+            d = SchedulerDecision(
+                now, "infeasible", self.k_current.copy(), None, k_max,
+                et_cur, None, snap.sojourn_hat,
+                reason=str(e),
+            )
+            self._emit(d)
+            return d
+
+        improvement = (
+            (et_cur - best.expected_sojourn) / et_cur if math.isfinite(et_cur) and et_cur > 0
+            else float("inf")
+        )
+        if np.array_equal(best.k, self.k_current) or improvement < cfg.min_improvement:
+            d = SchedulerDecision(
+                now, "none", self.k_current.copy(), best.k, k_max,
+                et_cur, best.expected_sojourn, snap.sojourn_hat,
+                reason=f"improvement {improvement:.1%} < {cfg.min_improvement:.0%}",
+            )
+            self._emit(d)
+            return d
+
+        plan = self.cost_model.plan(
+            top, self.k_current, best.k, cache=self.cache, stage_names=self.names
+        )
+        if not plan.worthwhile(cfg.horizon_seconds, top.lam0_total) and math.isfinite(et_cur):
+            d = SchedulerDecision(
+                now, "none", self.k_current.copy(), best.k, k_max,
+                et_cur, best.expected_sojourn, snap.sojourn_hat, plan,
+                reason="rebalance cost exceeds benefit over horizon",
+            )
+            self._emit(d)
+            return d
+        return self._apply(now, "rebalance", best, top, et_cur, snap, plan=plan)
+
+    def _apply(
+        self,
+        now: float,
+        action: str,
+        best: AllocationResult,
+        top: Topology,
+        et_cur: float,
+        snap: MeasurementSnapshot,
+        *,
+        plan: RebalancePlan | None = None,
+        reason: str = "",
+    ) -> SchedulerDecision:
+        self.k_current = best.k.copy()
+        self.rebalance_count += 1
+        d = SchedulerDecision(
+            now, action, self.k_current.copy(), best.k, self._k_max(),
+            et_cur, best.expected_sojourn, snap.sojourn_hat, plan, reason,
+        )
+        self._emit(d)
+        return d
+
+    def _emit(self, d: SchedulerDecision) -> None:
+        self.history.append(d)
+        logger.debug("DRS decision: %s", d.as_dict())
+        if self.on_decision:
+            self.on_decision(d)
+
+
+class StragglerDetector:
+    """Flags slow instances: per-instance mu more than ``factor`` below the
+    operator median over the last window of pulls."""
+
+    def __init__(self, factor: float = 2.0, window: int = 3):
+        self.factor = factor
+        self.window = window
+        self._hist: dict[tuple[str, int], list[float]] = {}
+
+    def observe(self, operator: str, instance: int, mu_hat: float) -> None:
+        self._hist.setdefault((operator, instance), []).append(mu_hat)
+
+    def stragglers(self) -> list[tuple[str, int]]:
+        by_op: dict[str, list[tuple[int, float]]] = {}
+        for (op, inst), hist in self._hist.items():
+            recent = [h for h in hist[-self.window :] if math.isfinite(h)]
+            if recent:
+                by_op.setdefault(op, []).append((inst, float(np.mean(recent))))
+        out = []
+        for op, pairs in by_op.items():
+            if len(pairs) < 2:
+                continue
+            med = float(np.median([m for _, m in pairs]))
+            for inst, m in pairs:
+                if m * self.factor < med:
+                    out.append((op, inst))
+        return out

@@ -1,0 +1,5 @@
+"""Data substrate: synthetic token streams + DRS-schedulable loader."""
+
+from .pipeline import DataConfig, PipelinedLoader, SyntheticTokens
+
+__all__ = ["DataConfig", "PipelinedLoader", "SyntheticTokens"]

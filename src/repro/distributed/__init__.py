@@ -1,0 +1,5 @@
+"""Distribution substrate: rule-based sharding, gradient compression."""
+
+from . import compress, sharding
+
+__all__ = ["compress", "sharding"]

@@ -1,0 +1,245 @@
+"""Rule-based sharding: logical axes -> mesh axes per (family, mode).
+
+The production mesh is (16, 16) = ("data", "model") per pod, with a
+leading "pod" axis multi-pod (launch/mesh.py).  Parameters and activations
+carry logical axis names (models/common.py); the tables here map them to
+mesh axes.  `safe_spec` drops any assignment whose dimension is not
+divisible by the mesh-axis extent — this is what lets one rule table serve
+every architecture (e.g. whisper's vocab 51865 is indivisible by 16 and
+silently falls back to replicated, while command-r's 256000 shards 16-way).
+
+Defaults (see DESIGN.md §6):
+
+* train: batch over (pod, data); TP over heads/d_ff/vocab; FSDP shards
+  every param's d_model/d_ff-complement over data (ZeRO-3; the all-gather
+  happens per scan step and overlaps with compute under XLA's latency
+  hiding); experts over data where divisible (kimi-k2: 384/16).
+* prefill: like train minus FSDP (weights stay TP + replicated over data)
+  for latency; batch over (pod, data).
+* decode: KV cache kv_seq over model (flash-decoding partial softmax);
+  experts over data; params TP over model and — for the 1T-param MoE —
+  expert-sharded over data as well.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "TRAIN_RULES",
+    "PREFILL_RULES",
+    "DECODE_RULES",
+    "rules_for",
+    "safe_spec",
+    "tree_shardings",
+    "batch_spec",
+]
+
+TRAIN_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq_sp": "model",  # sequence-parallel residual stream between blocks
+    "heads": "model",
+    "kv_heads": "model",
+    "d_ff": "model",
+    "vocab": "model",
+    "experts": "data",  # EP when divisible (kimi 384/16); else FSDP fallback
+    "d_model": "data",  # FSDP axis for params (activations: batch wins "data")
+    "layers": None,
+    "kv_seq": None,
+    "enc_seq": None,
+}
+
+PREFILL_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq_sp": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "d_ff": "model",
+    "vocab": "model",
+    "experts": "data",
+    "d_model": None,  # no FSDP at serve time: weights replicated over data
+    "layers": None,
+    "kv_seq": None,
+    "enc_seq": None,
+}
+
+DECODE_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq_sp": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "d_ff": "model",
+    "vocab": "model",
+    "experts": "data",
+    "d_model": None,
+    "layers": None,
+    "kv_seq": "model",  # sequence-sharded KV cache (flash-decoding)
+    "enc_seq": None,
+}
+
+
+# Per-arch corrections (merged between base table and call-site overrides).
+# mixtral-8x22b: 8 experts do not divide the 16-way data axis, so expert
+# weights can't shard over "experts" — FSDP them over d_model at serve time
+# or 140B params x bf16 / 16 (TP only) = 17.5 GB/chip would not fit.
+ARCH_RULE_OVERRIDES: dict[tuple[str, str], dict[str, Any]] = {
+    ("mixtral-8x22b", "prefill"): {"d_model": "data"},
+    ("mixtral-8x22b", "decode"): {"d_model": "data"},
+}
+
+
+def rules_for(
+    mode: str,
+    overrides: dict[str, Any] | None = None,
+    *,
+    arch: str | None = None,
+) -> dict[str, Any]:
+    base = {"train": TRAIN_RULES, "prefill": PREFILL_RULES, "decode": DECODE_RULES}[mode]
+    out = dict(base)
+    if arch is not None:
+        out.update(ARCH_RULE_OVERRIDES.get((arch, mode), {}))
+    if overrides:
+        out.update(overrides)
+    return out
+
+
+def prune_rules(rules: dict[str, Any], mesh: Mesh) -> dict[str, Any]:
+    """Drop mesh axes that don't exist on this mesh (e.g. 'pod' single-pod)."""
+    names = set(mesh.axis_names)
+    out: dict[str, Any] = {}
+    for k, v in rules.items():
+        if v is None:
+            out[k] = None
+            continue
+        parts = (v,) if isinstance(v, str) else tuple(v)
+        kept = tuple(p for p in parts if p in names)
+        out[k] = None if not kept else (kept[0] if len(kept) == 1 else kept)
+    return out
+
+
+def _axis_size(mesh: Mesh, assignment) -> int:
+    if assignment is None:
+        return 1
+    parts = (assignment,) if isinstance(assignment, str) else tuple(assignment)
+    n = 1
+    for p in parts:
+        n *= mesh.shape[p]
+    return n
+
+
+def safe_spec(
+    shape: tuple[int, ...],
+    axes: tuple[str | None, ...],
+    rules: dict[str, Any],
+    mesh: Mesh,
+) -> P:
+    """PartitionSpec with divisibility + axis-reuse guards."""
+    used: set[str] = set()
+    spec: list[Any] = []
+    for dim, ax in zip(shape, axes):
+        m = rules.get(ax) if ax is not None else None
+        if m is None:
+            spec.append(None)
+            continue
+        parts = [p for p in ((m,) if isinstance(m, str) else tuple(m)) if p not in used]
+        # keep only the prefix of parts whose product divides the dim
+        chosen: list[str] = []
+        n = 1
+        for p in parts:
+            if dim % (n * mesh.shape[p]) == 0:
+                chosen.append(p)
+                n *= mesh.shape[p]
+        if not chosen:
+            spec.append(None)
+            continue
+        used.update(chosen)
+        spec.append(chosen[0] if len(chosen) == 1 else tuple(chosen))
+    return P(*spec)
+
+
+def tree_shardings(
+    shapes_tree: Any,
+    axes_tree: Any,
+    mesh: Mesh,
+    rules: dict[str, Any],
+) -> Any:
+    """NamedSharding tree for a params-like tree.
+
+    shapes_tree: tree of arrays or ShapeDtypeStructs; axes_tree: matching
+    tree of logical-axis tuples.
+    """
+
+    def one(x, axes):
+        return NamedSharding(mesh, safe_spec(tuple(x.shape), tuple(axes), rules, mesh))
+
+    return jax.tree.map(
+        one, shapes_tree, axes_tree, is_leaf=lambda t: isinstance(t, tuple) and all(
+            isinstance(e, (str, type(None))) for e in t
+        ),
+    )
+
+
+def batch_spec(
+    name: str, shape: tuple[int, ...], rules: dict[str, Any], mesh: Mesh
+) -> P:
+    """PartitionSpec for a named model input."""
+    axes_by_name: dict[str, tuple[str | None, ...]] = {
+        "tokens": ("batch", None),
+        "labels": ("batch", None),
+        "mask": ("batch", None),
+        "patch_embeds": ("batch", None, None),
+        "positions_3d": (None, "batch", None),
+        "frames": ("batch", "enc_seq", None),
+    }
+    if name == "tokens" and len(shape) == 1:  # decode: [B]
+        return safe_spec(shape, ("batch",), rules, mesh)
+    axes = axes_by_name.get(name)
+    if axes is None or len(axes) != len(shape):
+        return P()
+    return safe_spec(shape, axes, rules, mesh)
+
+
+# Cache logical axes (serve.init_cache layouts) ------------------------- #
+def cache_axes(family: str) -> dict[str, tuple[str | None, ...]]:
+    if family in ("dense", "moe", "vlm"):
+        return {
+            "k": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "length": (),
+        }
+    if family == "ssm":
+        return {
+            "wkv": ("layers", "batch", "heads", None, None),
+            "tm_shift": ("layers", "batch", "d_model"),
+            "cm_shift": ("layers", "batch", "d_model"),
+            "length": (),
+        }
+    if family == "hybrid":
+        return {
+            "ssm": ("layers", "batch", "heads", None, None),
+            "k": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "length": (),
+        }
+    if family == "audio":
+        return {
+            "k": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "xk": ("layers", "batch", "enc_seq", "kv_heads", None),
+            "xv": ("layers", "batch", "enc_seq", "kv_heads", None),
+            "length": (),
+        }
+    raise ValueError(family)
+
+
+def cache_shardings(cache_shapes: dict, family: str, mesh: Mesh, rules: dict) -> dict:
+    ax = cache_axes(family)
+    return {
+        k: NamedSharding(mesh, safe_spec(tuple(v.shape), ax[k], rules, mesh))
+        for k, v in cache_shapes.items()
+    }

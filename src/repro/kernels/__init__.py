@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+Each kernel subpackage has:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd wrapper with padding/dispatch (ref on CPU, kernel on TPU)
+  ref.py    — pure-jnp oracle used by tests (interpret=True validation)
+"""

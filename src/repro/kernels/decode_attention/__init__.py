@@ -1,0 +1,2 @@
+"""decode_attention — Pallas TPU kernel + jnp oracle (see kernel.py docstring)."""
+from . import kernel, ref

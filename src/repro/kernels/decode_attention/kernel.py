@@ -1,0 +1,111 @@
+"""Pallas TPU flash-decoding: single-token attention over a blocked KV cache.
+
+One new token attends to a long cache.  The cache's sequence axis is the
+only large dimension, so the kernel blocks over it: grid = (B, S/bs), with
+running max / normaliser / accumulator in VMEM scratch across the
+sequential S steps (same revisiting pattern as flash_attention, one q row
+per head instead of a q block).  All heads of one batch element are
+processed in a grid step: the q "matrix" is (H, Dh) — small — and each
+step's score matrix is (H, bs).
+
+This kernel is also the single-device mirror of the cross-device
+sequence-sharded decode schedule (distributed/sharding.py DECODE_RULES
+maps kv_seq -> "model"): on the pod, GSPMD computes per-shard partial
+softmax and all-reduces (max, sum, acc) — exactly what this kernel's
+scratch does across blocks within one chip.
+
+Length masking uses absolute positions against a scalar prefix length in
+SMEM, so cache slots past `length` contribute nothing.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention_pallas"]
+
+_NEG = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale, window, bs):
+    ib = pl.program_id(0)
+    ik = pl.program_id(1)
+    n_k = pl.num_programs(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+    k_start = ik * bs
+    run = k_start < length  # skip wholly-invalid cache blocks
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (H, Dh)
+        k = k_ref[0].astype(jnp.float32)  # (bs, H, Dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.einsum("hd,shd->hs", q, k) * scale  # (H, bs)
+        pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = pos < length
+        if window is not None:
+            valid &= pos > (length - 1 - window)
+        s = jnp.where(valid, s, _NEG)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.einsum("hs,shd->hd", p, v)
+        m_scr[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bs", "interpret", "scale"))
+def decode_attention_pallas(
+    q: jnp.ndarray,  # [B, H, Dh]
+    k_cache: jnp.ndarray,  # [B, S, H, Dh]
+    v_cache: jnp.ndarray,
+    length: jnp.ndarray,  # [] int32
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+    bs: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, h, dh = q.shape
+    s = k_cache.shape[1]
+    assert s % bs == 0, (s, bs)
+    scale = scale if scale is not None else 1.0 / (dh**0.5)
+    grid = (b, s // bs)
+    kern = functools.partial(_kernel, scale=scale, window=window, bs=bs)
+    length_arr = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (1,))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, h, dh), lambda ib, ik: (ib, 0, 0)),
+            pl.BlockSpec((1, bs, h, dh), lambda ib, ik: (ib, ik, 0, 0)),
+            pl.BlockSpec((1, bs, h, dh), lambda ib, ik: (ib, ik, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dh), lambda ib, ik: (ib, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length_arr, q, k_cache, v_cache)

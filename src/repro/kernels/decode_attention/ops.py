@@ -1,0 +1,12 @@
+"""Dispatch wrapper: Pallas on TPU, jnp reference on CPU."""
+from __future__ import annotations
+import jax
+from . import kernel as _kernel, ref as _ref
+
+
+def decode_attention(q, k_cache, v_cache, length, *, window=None, interpret=False, force_kernel=False):
+    if force_kernel or jax.default_backend() == "tpu":
+        return _kernel.decode_attention_pallas(
+            q, k_cache, v_cache, length, window=window, interpret=interpret
+        )
+    return _ref.decode_attention(q, k_cache, v_cache, length, window=window)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for single-token decode attention with a KV cache."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["decode_attention"]
+
+
+def decode_attention(
+    q: jnp.ndarray,  # [B, H, Dh] — one new token per sequence
+    k_cache: jnp.ndarray,  # [B, S, H, Dh]
+    v_cache: jnp.ndarray,  # [B, S, H, Dh]
+    length: jnp.ndarray,  # [] or [B] int32 — valid prefix
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    b, h, dh = q.shape
+    s = k_cache.shape[1]
+    scale = scale if scale is not None else 1.0 / (dh**0.5)
+    logits = jnp.einsum(
+        "bhd,bshd->bhs", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    pos = jnp.arange(s)
+    ln = jnp.broadcast_to(jnp.asarray(length), (b,))
+    valid = pos[None, :] < ln[:, None]  # [B, S]
+    if window is not None:
+        valid &= pos[None, :] > (ln[:, None] - 1 - window)
+    logits = jnp.where(valid[:, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", probs, v_cache.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,12 @@
+"""Dispatch wrapper: Pallas on TPU, jnp reference on CPU."""
+from __future__ import annotations
+import jax
+from . import kernel as _kernel, ref as _ref
+
+
+def attention(q, k, v, *, causal=True, window=None, interpret=False, force_kernel=False):
+    if force_kernel or jax.default_backend() == "tpu":
+        return _kernel.flash_attention_pallas(
+            q, k, v, causal=causal, window=window, interpret=interpret
+        )
+    return _ref.attention(q, k, v, causal=causal, window=window)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for flash attention (heads-first layout)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention"]
+
+
+def attention(
+    q: jnp.ndarray,  # [B, H, Sq, Dh]
+    k: jnp.ndarray,  # [B, H, Skv, Dh]
+    v: jnp.ndarray,  # [B, H, Skv, Dh]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    b, h, sq, dh = q.shape
+    skv = k.shape[2]
+    scale = scale if scale is not None else 1.0 / (dh**0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits * scale
+    if causal:
+        q_pos = jnp.arange(sq)[:, None] + (skv - sq)
+        k_pos = jnp.arange(skv)[None, :]
+        mask = k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,9 @@
+"""l2_match — blocked pairwise L2 distance + fused match counting.
+
+The compute hot spot of the paper's VLD feature-matcher bolt, adapted to
+the MXU (see kernel.py for the tiling argument).
+"""
+
+from . import kernel, ops, ref
+
+__all__ = ["kernel", "ops", "ref"]

@@ -1,0 +1,76 @@
+"""Jit'd dispatch wrapper for the l2_match kernel.
+
+On TPU the Pallas kernel runs compiled; on CPU (this container) the
+default path is the jnp reference (fast) while the kernel itself is
+validated in interpret mode by tests/test_kernels_l2_match.py.  Shapes are
+padded to block multiples here so callers never care about alignment.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+__all__ = ["pairwise_sq_l2", "match_count"]
+
+# "auto": kernel on TPU, reference on CPU. Tests force "kernel_interpret".
+_MODE = "auto"
+
+
+def set_mode(mode: str) -> None:
+    global _MODE
+    assert mode in ("auto", "ref", "kernel", "kernel_interpret"), mode
+    _MODE = mode
+
+
+def _use_kernel() -> tuple[bool, bool]:
+    """(use_kernel, interpret)"""
+    if _MODE == "ref":
+        return False, False
+    if _MODE == "kernel":
+        return True, False
+    if _MODE == "kernel_interpret":
+        return True, True
+    return (jax.default_backend() == "tpu"), False
+
+
+def _pad_rows(x: jnp.ndarray, block: int) -> tuple[jnp.ndarray, int]:
+    m = x.shape[0]
+    pad = (-m) % block
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x, m
+
+
+def pairwise_sq_l2(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = 128, bn: int = 128) -> jnp.ndarray:
+    use, interp = _use_kernel()
+    if not use:
+        return _ref.pairwise_sq_l2(a, b)
+    a_p, m = _pad_rows(a, bm)
+    b_p, n = _pad_rows(b, bn)
+    out = _kernel.pairwise_sq_l2_pallas(a_p, b_p, bm=bm, bn=bn, interpret=interp)
+    return out[:m, :n]
+
+
+def match_count(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    threshold: float,
+    valid: jnp.ndarray | None = None,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+) -> jnp.ndarray:
+    use, interp = _use_kernel()
+    if valid is None:
+        valid = jnp.ones(a.shape[0], dtype=bool)
+    if not use:
+        return _ref.match_count(a, b, threshold, valid)
+    a_p, _ = _pad_rows(a, bm)
+    b_p, n = _pad_rows(b, bn)
+    valid_p = jnp.pad(valid, (0, a_p.shape[0] - a.shape[0]))
+    out = _kernel.match_count_pallas(a_p, b_p, valid_p, threshold, bm=bm, bn=bn, interpret=interp)
+    return out[:n]

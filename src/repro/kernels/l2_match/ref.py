@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the l2_match kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["pairwise_sq_l2", "match_count"]
+
+
+def pairwise_sq_l2(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Squared L2 distances between rows of a [M,D] and b [N,D] -> [M,N].
+
+    Uses the expansion ||x-y||^2 = ||x||^2 + ||y||^2 - 2 x.y (the same
+    identity the kernel exploits to ride the MXU), clamped at zero against
+    cancellation.
+    """
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    a2 = jnp.sum(a * a, axis=-1, keepdims=True)  # [M,1]
+    b2 = jnp.sum(b * b, axis=-1, keepdims=True).T  # [1,N]
+    cross = a @ b.T  # [M,N]
+    return jnp.maximum(a2 + b2 - 2.0 * cross, 0.0)
+
+
+def match_count(
+    a: jnp.ndarray, b: jnp.ndarray, threshold: float, valid: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """Per-library-row count of query rows within `threshold` L2 distance.
+
+    a: queries [M,D]; b: library [N,D]; valid: optional [M] bool mask.
+    Returns int32 [N].
+    """
+    d2 = pairwise_sq_l2(a, b)
+    hits = d2 <= threshold * threshold
+    if valid is not None:
+        hits = hits & valid[:, None]
+    return hits.sum(axis=0).astype(jnp.int32)

@@ -1,0 +1,2 @@
+"""rwkv6_scan — Pallas TPU kernel + jnp oracle (see kernel.py docstring)."""
+from . import kernel, ref

@@ -1,0 +1,19 @@
+"""Dispatch wrapper: Pallas on TPU, models/ssm.py chunked-jnp on CPU."""
+from __future__ import annotations
+import jax
+from . import kernel as _kernel
+
+
+def rwkv6_scan(r, k, v, lw, u, s0, *, chunk=32, interpret=False, force_kernel=False):
+    if force_kernel or jax.default_backend() == "tpu":
+        return _kernel.rwkv6_scan_pallas(r, k, v, lw, u, s0, chunk=chunk, interpret=interpret)
+    import jax.numpy as jnp
+    from ...models.ssm import rwkv6_chunked
+    bh, s, dk = r.shape
+    rs = lambda t: t[:, None] if t.ndim == 2 else t
+    # models/ssm expects [B,S,H,D]; fold BH into B with H=1
+    out, st = rwkv6_chunked(
+        r[:, :, None], k[:, :, None], v[:, :, None], jnp.exp(lw)[:, :, None],
+        u[:1], chunk=chunk, initial_state=s0[:, None],
+    )
+    return out[:, :, 0], st[:, 0]

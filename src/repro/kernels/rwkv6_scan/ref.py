@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the RWKV6 intra-chunk compute (one chunk).
+
+Mirrors the intra-chunk math of models/ssm.py rwkv6_chunked:
+  out_i = (r_i exp(pc_{i-1})) @ state
+        + sum_{j<i} [r_i . exp(pc_{i-1} - pc_j) k_j] v_j
+        + [(r_i * u) . k_i] v_i
+  state' = exp(tot) state + sum_j [k_j exp(tot - pc_j)] v_j^T
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["rwkv6_chunk"]
+
+
+def rwkv6_chunk(
+    r: jnp.ndarray,  # [C, Dk]
+    k: jnp.ndarray,  # [C, Dk]
+    v: jnp.ndarray,  # [C, Dv]
+    lw: jnp.ndarray,  # [C, Dk] per-token log decay (<= 0)
+    u: jnp.ndarray,  # [Dk]
+    state: jnp.ndarray,  # [Dk, Dv]
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    f32 = jnp.float32
+    r, k, v, lw, u, state = (t.astype(f32) for t in (r, k, v, lw, u, state))
+    c = r.shape[0]
+    pc = jnp.cumsum(lw, axis=0)  # [C, Dk]
+    pc_prev = jnp.concatenate([jnp.zeros_like(pc[:1]), pc[:-1]], axis=0)
+    tot = pc[-1]  # [Dk]
+    r_dec = r * jnp.exp(pc_prev)
+    cross = r_dec @ state  # [C, Dv]
+    att = r_dec @ (k * jnp.exp(-pc)).T  # [C, C]
+    mask = jnp.tril(jnp.ones((c, c)), k=-1)
+    att = att * mask
+    diag = jnp.sum(r * u[None] * k, axis=1)  # [C]
+    out = cross + att @ v + diag[:, None] * v
+    k_dec = k * jnp.exp(tot[None] - pc)
+    new_state = jnp.exp(tot)[:, None] * state + k_dec.T @ v
+    return out, new_state

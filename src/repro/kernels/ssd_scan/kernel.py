@@ -1,0 +1,95 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunk scan.
+
+Identical carry structure to rwkv6_scan (state in VMEM scratch, chunks as
+the inner sequential grid axis) but with scalar-per-step decay a_t and the
+inclusive (diagonal) causal mask of SSD:
+
+  y_i = (C_i e^{pc_i}) S_in + sum_{j<=i} e^{pc_i - pc_j} (C_i.B_j) x_j
+  S'  = e^{tot} S_in + sum_j (B_j e^{tot - pc_j})^T x_j
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan_pallas"]
+
+
+def _kernel(x_ref, a_ref, b_ref, c_ref, s0_ref, y_ref, sT_ref, s_scr, *, chunk):
+    ic = pl.program_id(1)
+    n_c = pl.num_programs(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_scr[...] = s0_ref[0].astype(jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)  # (C, Dh)
+    a = a_ref[0].astype(jnp.float32)  # (C, 1) — kept 2-D for TPU iota rules
+    b = b_ref[0].astype(jnp.float32)  # (C, Dst)
+    c = c_ref[0].astype(jnp.float32)
+
+    pc = jnp.cumsum(a[:, 0])[:, None]  # (C, 1)
+    tot = pc[-1, 0]
+    c_dec = c * jnp.exp(pc)
+    state = s_scr[...]
+    cross = jnp.dot(c_dec, state, preferred_element_type=jnp.float32)
+    att = jnp.dot(c_dec, (b * jnp.exp(-pc)).T, preferred_element_type=jnp.float32)
+    n = x.shape[0]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    att = jnp.where(ii >= jj, att, 0.0)
+    y = cross + jnp.dot(att, x, preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+    b_dec = b * jnp.exp(tot - pc)
+    s_scr[...] = jnp.exp(tot) * state + jnp.dot(
+        b_dec.T, x, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ic == n_c - 1)
+    def _finalize():
+        sT_ref[0] = s_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(
+    x: jnp.ndarray,  # [BH, S, Dh]
+    a: jnp.ndarray,  # [BH, S] log decay
+    b: jnp.ndarray,  # [BH, S, Dst]
+    c: jnp.ndarray,  # [BH, S, Dst]
+    s0: jnp.ndarray,  # [BH, Dst, Dh] f32
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    bh, s, dh = x.shape
+    dst = b.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    grid = (bh, s // chunk)
+    kern = functools.partial(_kernel, chunk=chunk)
+    y, s_t = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, dh), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, dst), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, dst), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, dst, dh), lambda bi, ci: (bi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, dh), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, dst, dh), lambda bi, ci: (bi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, dh), x.dtype),
+            jax.ShapeDtypeStruct((bh, dst, dh), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dst, dh), jnp.float32)],
+        interpret=interpret,
+    )(x, a[..., None], b, c, s0)
+    return y, s_t

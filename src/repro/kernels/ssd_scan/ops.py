@@ -1,0 +1,15 @@
+"""Dispatch wrapper: Pallas on TPU, models/ssm.py chunked-jnp on CPU."""
+from __future__ import annotations
+import jax
+from . import kernel as _kernel
+
+
+def ssd_scan(x, a, b, c, s0, *, chunk=64, interpret=False, force_kernel=False):
+    if force_kernel or jax.default_backend() == "tpu":
+        return _kernel.ssd_scan_pallas(x, a, b, c, s0, chunk=chunk, interpret=interpret)
+    from ...models.ssm import ssd_chunked
+    y, st = ssd_chunked(
+        x[:, :, None], a[:, :, None], b[:, :, None], c[:, :, None],
+        chunk=chunk, initial_state=s0[:, None],
+    )
+    return y[:, :, 0], st[:, 0]

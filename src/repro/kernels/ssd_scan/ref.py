@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the Mamba2 SSD chunk scan (one batch*head stream)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["ssd_chunk"]
+
+
+def ssd_chunk(
+    x: jnp.ndarray,  # [C, Dh]
+    a: jnp.ndarray,  # [C] log decay (<= 0)
+    b: jnp.ndarray,  # [C, Dst]
+    c: jnp.ndarray,  # [C, Dst]
+    state: jnp.ndarray,  # [Dst, Dh]
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    f32 = jnp.float32
+    x, a, b, c, state = (t.astype(f32) for t in (x, a, b, c, state))
+    n = x.shape[0]
+    pc = jnp.cumsum(a)  # [C]
+    tot = pc[-1]
+    c_dec = c * jnp.exp(pc)[:, None]
+    cross = c_dec @ state  # [C, Dh]
+    att = c_dec @ (b * jnp.exp(-pc)[:, None]).T  # [C, C]
+    att = att * jnp.tril(jnp.ones((n, n)))
+    y = cross + att @ x
+    b_dec = b * jnp.exp(tot - pc)[:, None]
+    new_state = jnp.exp(tot) * state + b_dec.T @ x
+    return y, new_state

@@ -1,0 +1,2 @@
+"""swiglu — Pallas TPU kernel + jnp oracle (see kernel.py docstring)."""
+from . import kernel, ref

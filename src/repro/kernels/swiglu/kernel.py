@@ -1,0 +1,73 @@
+"""Pallas TPU fused SwiGLU: out = (silu(x Wg) * (x Wu)) Wo without ever
+materialising the (T, F) hidden in HBM.
+
+Grid = (T/bt, F/bf) with F innermost: each step computes the (bt, bf)
+hidden slab in VMEM (two MXU matmuls + VPU silu/mul) and immediately
+contracts it with the Wo slab into a (bt, D) accumulator that is revisited
+across F steps.  HBM traffic drops from  2*T*F (hidden write+read)  to
+zero extra — the classic d_ff-blocked FFN fusion.  VMEM per step at
+(bt, bf, D) = (256, 256, 4096) bf16:  x 2 MiB + wg/wu slabs 4 MiB +
+wo slab 2 MiB + acc f32 4 MiB = 12 MiB — at the v5e budget; shrink bt for
+larger D.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["swiglu_pallas"]
+
+
+def _kernel(x_ref, wg_ref, wu_ref, wo_ref, o_ref, acc_scr):
+    jf = pl.program_id(1)
+    n_f = pl.num_programs(1)
+
+    @pl.when(jf == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[...]  # (bt, D)
+    g = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)  # (bt, bf)
+    u = jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    acc_scr[...] += jnp.dot(h, wo_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(jf == n_f - 1)
+    def _finalize():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bf", "interpret"))
+def swiglu_pallas(
+    x: jnp.ndarray,  # [T, D]
+    wg: jnp.ndarray,  # [D, F]
+    wu: jnp.ndarray,
+    wo: jnp.ndarray,  # [F, D]
+    *,
+    bt: int = 256,
+    bf: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    t, d = x.shape
+    f = wg.shape[1]
+    assert t % bt == 0 and f % bf == 0, (t, f, bt, bf)
+    grid = (t // bt, f // bf)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda it, jf: (it, 0)),
+            pl.BlockSpec((d, bf), lambda it, jf: (0, jf)),
+            pl.BlockSpec((d, bf), lambda it, jf: (0, jf)),
+            pl.BlockSpec((bf, d), lambda it, jf: (jf, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda it, jf: (it, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bt, d), jnp.float32)],
+        interpret=interpret,
+    )(x, wg, wu, wo)

@@ -1,0 +1,10 @@
+"""Dispatch wrapper: Pallas on TPU, jnp reference on CPU."""
+from __future__ import annotations
+import jax
+from . import kernel as _kernel, ref as _ref
+
+
+def swiglu(x, wg, wu, wo, *, interpret=False, force_kernel=False):
+    if force_kernel or jax.default_backend() == "tpu":
+        return _kernel.swiglu_pallas(x, wg, wu, wo, interpret=interpret)
+    return _ref.swiglu(x, wg, wu, wo)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused SwiGLU FFN."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["swiglu"]
+
+
+def swiglu(
+    x: jnp.ndarray,  # [T, D]
+    wg: jnp.ndarray,  # [D, F]
+    wu: jnp.ndarray,  # [D, F]
+    wo: jnp.ndarray,  # [F, D]
+) -> jnp.ndarray:
+    h = jax.nn.silu((x @ wg).astype(jnp.float32)) * (x @ wu).astype(jnp.float32)
+    return (h.astype(x.dtype) @ wo).astype(x.dtype)

@@ -1,0 +1,329 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above run before ANY other import (jax locks device count on
+first init): the dry-run — and only the dry-run — sees 512 placeholder
+host devices so jax.make_mesh can build the production meshes.
+
+For each cell this driver:
+  1. builds params / optimizer / cache shapes with jax.eval_shape (no
+     allocation — full kimi-k2 is 1T params);
+  2. resolves shardings from the rule tables (distributed/sharding.py);
+  3. jit(...).lower(...).compile() under the mesh;
+  4. records memory_analysis(), cost_analysis(), and the collective bytes
+     parsed from the optimized HLO into benchmarks/results/dryrun/*.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, get_config
+from ..configs.shapes import SHAPES, cell_is_supported, input_specs, skip_reason
+from ..distributed import sharding as shd
+from ..models import serve
+from ..models.common import axis_rules
+from ..models.transformer import init_params
+from ..training.optimizer import AdamWConfig, adamw_init
+from ..training.train_step import TrainState, make_train_step
+from .hlo_analysis import CollectiveStats, model_flops_for, roofline_terms
+from .hlo_cost import analyze_hlo
+from .mesh import make_production_mesh
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def _eval_shapes(fn, *args, **kw):
+    return jax.eval_shape(fn, *args, **kw)
+
+
+def _params_shapes(cfg):
+    """(params ShapeDtypeStruct tree, axes tree) without allocating."""
+    shapes, axes_holder = None, {}
+
+    def build(key):
+        p, a = init_params(cfg, key)
+        axes_holder["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(build, jax.random.PRNGKey(0))
+    return shapes, axes_holder["axes"]
+
+
+def _memory_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _cost_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in ca.items() if isinstance(v, (int, float))}
+
+
+def run_cell(
+    arch: str,
+    shape: str,
+    *,
+    multi_pod: bool = False,
+    rules_overrides: dict | None = None,
+    cfg_overrides: dict | None = None,
+    opt_moment_dtype=None,
+    tag: str = "",
+) -> dict:
+    """Lower + compile one cell; returns the result record (also saved)."""
+    import dataclasses as _dc
+
+    cfg = get_config(arch, "full")
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    spec = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = mesh.devices.size
+    record: dict = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_name,
+        "chips": chips,
+        "tag": tag,
+        "time": time.strftime("%Y-%m-%d %H:%M:%S"),
+    }
+    if not cell_is_supported(arch, shape):
+        record["status"] = "skipped"
+        record["reason"] = skip_reason(arch, shape)
+        return record
+
+    rules = shd.rules_for(spec.kind, rules_overrides, arch=arch)
+    rules = shd.prune_rules(rules, mesh)  # single-pod meshes have no "pod" axis
+
+    params_shapes, axes = _params_shapes(cfg)
+    p_shardings = shd.tree_shardings(params_shapes, axes, mesh, rules)
+    batch = input_specs(arch, shape)
+    b_shardings = {
+        k: jax.sharding.NamedSharding(mesh, shd.batch_spec(k, v.shape, rules, mesh))
+        for k, v in batch.items()
+    }
+
+    t0 = time.perf_counter()
+    try:
+        if spec.kind == "train":
+            opt_cfg = AdamWConfig(
+                moment_dtype=opt_moment_dtype
+                or (jnp.bfloat16 if arch == "kimi-k2-1t-a32b" else jnp.float32)
+            )
+            opt_shapes = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params_shapes)
+            mu_sh = shd.tree_shardings(opt_shapes.mu, axes, mesh, rules)
+            nu_sh = shd.tree_shardings(opt_shapes.nu, axes, mesh, rules)
+            scalar_sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+            state_shapes = TrainState(
+                params_shapes,
+                opt_shapes._replace(step=jax.ShapeDtypeStruct((), jnp.int32)),
+                jax.ShapeDtypeStruct((), jnp.int32),
+            )
+            state_shardings = TrainState(
+                p_shardings,
+                type(opt_shapes)(step=scalar_sh, mu=mu_sh, nu=nu_sh),
+                scalar_sh,
+            )
+            step_fn = make_train_step(cfg, opt_cfg)
+
+            def wrapped(state, bt):
+                with axis_rules(rules, mesh):
+                    return step_fn(state, bt)
+
+            jitted = jax.jit(
+                wrapped,
+                in_shardings=(state_shardings, b_shardings),
+                out_shardings=(state_shardings, None),
+                donate_argnums=(0,),
+            )
+            with mesh:
+                lowered = jitted.lower(state_shapes, batch)
+        elif spec.kind == "prefill":
+            cache_shapes = jax.eval_shape(
+                lambda: serve.init_cache(cfg, spec.global_batch, spec.seq_len)
+            )
+            c_shardings = shd.cache_shardings(cache_shapes, cfg.family, mesh, rules)
+
+            def wrapped(p, bt, c):
+                with axis_rules(rules, mesh):
+                    return serve.prefill(p, cfg, bt, c)
+
+            jitted = jax.jit(
+                wrapped,
+                in_shardings=(p_shardings, b_shardings, c_shardings),
+                out_shardings=(None, c_shardings),
+                donate_argnums=(2,),
+            )
+            with mesh:
+                lowered = jitted.lower(params_shapes, batch, cache_shapes)
+        else:  # decode
+            cache_shapes = jax.eval_shape(
+                lambda: serve.init_cache(cfg, spec.global_batch, spec.seq_len)
+            )
+            c_shardings = shd.cache_shardings(cache_shapes, cfg.family, mesh, rules)
+
+            def wrapped(p, t, c):
+                with axis_rules(rules, mesh):
+                    return serve.decode_step(p, cfg, t, c)
+
+            jitted = jax.jit(
+                wrapped,
+                in_shardings=(p_shardings, b_shardings["tokens"], c_shardings),
+                out_shardings=(None, c_shardings),
+                donate_argnums=(2,),
+            )
+            with mesh:
+                lowered = jitted.lower(params_shapes, batch["tokens"], cache_shapes)
+
+        record["lower_s"] = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        record["compile_s"] = time.perf_counter() - t1
+        cost = _cost_dict(compiled)
+        mem = _memory_dict(compiled)
+        hlo = compiled.as_text()
+        # Trip-count-aware HLO cost model: the builtin cost_analysis counts
+        # each scanned layer ONCE (tests/test_hlo_cost.py proves it), which
+        # would understate every term by ~n_layers.
+        hc = analyze_hlo(hlo)
+        coll = CollectiveStats(
+            bytes_by_kind=dict(hc.bytes_by_kind), count_by_kind=dict(hc.count_by_kind)
+        )
+        terms = roofline_terms(
+            arch=arch,
+            shape=shape,
+            mesh_name=mesh_name,
+            chips=chips,
+            cost={"flops": hc.flops, "bytes accessed": hc.traffic_bytes},
+            coll=coll,
+            model_flops=model_flops_for(cfg, spec),
+            memory_analysis=mem,
+        )
+        record["status"] = "ok"
+        record["cost_analysis_builtin"] = cost  # once-counted; reference only
+        record["memory_analysis"] = mem
+        record["roofline"] = terms.as_dict()
+        record["hlo_bytes"] = len(hlo)
+        record["hlo_model"] = {
+            "flops": hc.flops,
+            "traffic_bytes": hc.traffic_bytes,
+            "collective_bytes": hc.collective_bytes,
+            "dot_count": hc.dot_count,
+            "while_count": hc.while_count,
+            "traffic_by_kind": {k: float(v) for k, v in sorted(
+                hc.traffic_by_kind.items(), key=lambda kv: -kv[1])},
+        }
+    except Exception as e:  # noqa: BLE001 — record and move on
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    return record
+
+
+def save_record(record: dict, out_dir: Path = RESULTS_DIR) -> Path:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tag = f"-{record['tag']}" if record.get("tag") else ""
+    name = f"{record['arch']}--{record['shape']}--{record['mesh']}{tag}.json"
+    path = out_dir / name
+    path.write_text(json.dumps(record, indent=2, default=str))
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="run every remaining cell")
+    ap.add_argument("--force", action="store_true", help="re-run cached cells")
+    ap.add_argument("--tag", default="", help="variant tag (perf experiments)")
+    ap.add_argument("--set", action="append", default=[], metavar="KEY=VALUE",
+                    help="ModelConfig override, e.g. --set attn_impl=chunked")
+    args = ap.parse_args()
+
+    cfg_overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if k == "dtype":
+            v = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[v]
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                pass
+        cfg_overrides[k] = v
+
+    cells: list[tuple[str, str, bool]] = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape, args.multi_pod))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    for arch, shape, mp in cells:
+        mesh_name = "pod2x16x16" if mp else "pod16x16"
+        tag = f"-{args.tag}" if args.tag else ""
+        path = RESULTS_DIR / f"{arch}--{shape}--{mesh_name}{tag}.json"
+        if path.exists() and not args.force:
+            prev = json.loads(path.read_text())
+            if prev.get("status") in ("ok", "skipped"):
+                print(f"[cached] {arch} x {shape} x {mesh_name}: {prev['status']}")
+                continue
+        print(f"[run] {arch} x {shape} x {mesh_name} ...", flush=True)
+        rec = run_cell(
+            arch, shape, multi_pod=mp, tag=args.tag, cfg_overrides=cfg_overrides or None
+        )
+        p = save_record(rec)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (
+                f" dominant={r['dominant']} compute={r['compute_s']:.4f}s "
+                f"memory={r['memory_s']:.4f}s coll={r['collective_s']:.4f}s"
+            )
+        elif status == "error":
+            extra = f" {rec['error'][:200]}"
+        print(f"[done] {arch} x {shape} x {mesh_name}: {status}{extra} -> {p}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,157 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+``compiled.cost_analysis()`` provides per-device HLO FLOPs and bytes
+accessed; collective traffic is NOT in cost_analysis, so we parse the
+optimized (post-SPMD-partitioning) HLO text and sum the result-shape bytes
+of every collective op.  All quantities are per device; the roofline terms
+are then
+
+    compute    = flops / PEAK_FLOPS          (s)
+    memory     = bytes_accessed / HBM_BW     (s)
+    collective = collective_bytes / ICI_BW   (s)
+
+which equals the global formulation HLO_total / (chips * per_chip_rate).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+
+from .mesh import HW
+
+__all__ = ["CollectiveStats", "RooflineTerms", "collective_bytes", "roofline_terms"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# e.g.  "bf16[16,2048,128]{2,1,0} all-gather(...)"  or tuple results
+_COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape bytes of every collective in optimized HLO text."""
+    st = CollectiveStats()
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shape_txt, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_txt)
+        st.bytes_by_kind[kind] = st.bytes_by_kind.get(kind, 0) + b
+        st.count_by_kind[kind] = st.count_by_kind.get(kind, 0) + 1
+    return st
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float  # 6*N*D (dense) or 6*N_active*D (MoE), global
+    useful_ratio: float  # model_flops / global HLO flops
+    memory_analysis: dict = field(default_factory=dict)
+    collectives: dict = field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        return asdict(self)
+
+
+def roofline_terms(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    cost: dict,
+    coll: CollectiveStats,
+    model_flops: float,
+    memory_analysis: dict | None = None,
+) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cb = float(coll.total_bytes)
+    compute_s = flops / HW.PEAK_FLOPS_BF16
+    memory_s = byts / HW.HBM_BW
+    collective_s = cb / HW.ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    global_flops = flops * chips
+    return RooflineTerms(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective_bytes_per_device=cb,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_flops,
+        useful_ratio=(model_flops / global_flops) if global_flops > 0 else 0.0,
+        memory_analysis=memory_analysis or {},
+        collectives={
+            "bytes_by_kind": coll.bytes_by_kind,
+            "count_by_kind": coll.count_by_kind,
+        },
+    )
+
+
+def model_flops_for(cfg, shape_spec) -> float:
+    """MODEL_FLOPS: 6*N*D for training; 2*N*D for a forward-only unit.
+
+    N = active params (MoE-aware); D = tokens processed by the lowered unit
+    (train: batch*seq; prefill: batch*seq; decode: batch*1).
+    """
+    n_active = cfg.active_params_count()
+    if shape_spec.kind == "train":
+        tokens = shape_spec.global_batch * shape_spec.seq_len
+        return 6.0 * n_active * tokens
+    if shape_spec.kind == "prefill":
+        tokens = shape_spec.global_batch * shape_spec.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape_spec.global_batch

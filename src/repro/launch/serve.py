@@ -1,0 +1,56 @@
+"""Serving driver: DRS-scheduled prefill/decode split (simulated time).
+
+Takes stage service rates from the dry-run roofline records when present
+(the model-based mu prior, DESIGN.md §2), runs the DES-backed router under
+the DRS allocation, and prints latency vs the queueing-model prediction.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+      --rate 4.0 --chips 24 --mean-tokens 64
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from ..configs import ARCHS
+from ..serving.pipeline import ServingModel, StageRates, rates_from_dryrun
+from ..serving.router import ServingSimulation
+
+RESULTS = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCHS, default="llama3.2-1b")
+    ap.add_argument("--rate", type=float, default=4.0, help="requests/sec")
+    ap.add_argument("--chips", type=int, default=24)
+    ap.add_argument("--t-max", type=float, default=None,
+                    help="latency SLO (s): Program (6) sizing instead of fixed chips")
+    ap.add_argument("--mean-tokens", type=float, default=64.0)
+    ap.add_argument("--horizon", type=float, default=900.0)
+    args = ap.parse_args()
+
+    try:
+        rates = rates_from_dryrun(args.arch, RESULTS)
+        src = "dry-run roofline"
+    except (FileNotFoundError, KeyError):
+        rates = StageRates(prefill_per_chip=0.5, decode_per_chip=40.0)
+        src = "defaults (no dry-run records found)"
+    print(f"stage rates from {src}: prefill {rates.prefill_per_chip:.3f} req/s/chip, "
+          f"decode {rates.decode_per_chip:.1f} tok/s/chip")
+
+    model = ServingModel(rates, mean_output_tokens=args.mean_tokens)
+    alloc = model.plan(args.rate, k_max=args.chips, t_max=args.t_max)
+    split = model.split(alloc)
+    print(f"DRS allocation (Program {'6' if args.t_max else '4'}): {split} "
+          f"-> model E[T] = {alloc.expected_sojourn:.3f}s")
+
+    sim = ServingSimulation(model, args.rate, horizon=args.horizon, warmup=args.horizon / 10)
+    rep = sim.run(split)
+    print(json.dumps(rep.as_dict(), indent=2))
+
+
+if __name__ == "__main__":
+    main()

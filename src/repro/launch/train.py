@@ -1,0 +1,67 @@
+"""Training driver.
+
+Smoke-scale runs execute for real on CPU; full configs are dry-run-only
+(use launch/dryrun.py for those).  Demonstrates the full fault-tolerance
+loop: checkpoint/resume, straggler logging, DRS-scheduled data pipeline.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+      --preset smoke --steps 200 --ckpt /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from ..configs import ARCHS, get_config
+from ..data.pipeline import DataConfig
+from ..training.loop import LoopConfig, TrainLoop
+from ..training.optimizer import AdamWConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCHS, default="llama3.2-1b")
+    ap.add_argument("--preset", choices=["smoke", "full"], default="smoke")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--crash-at", type=int, default=None,
+                    help="simulate a failure after this step (restart demo)")
+    args = ap.parse_args()
+
+    if args.preset == "full":
+        raise SystemExit(
+            "full configs are dry-run-only on CPU; use "
+            "`python -m repro.launch.dryrun --arch ... --shape train_4k`"
+        )
+    cfg = get_config(args.arch, "smoke")
+    loop = TrainLoop(
+        cfg,
+        AdamWConfig(lr=args.lr, warmup_steps=10, decay_steps=args.steps),
+        LoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every, log_every=10),
+        ckpt_dir=args.ckpt,
+        data_cfg=DataConfig(vocab=cfg.vocab, batch=args.batch, seq_len=args.seq_len),
+        on_metrics=lambda step, m: print(
+            f"step {step:5d} loss {m['loss']:.4f} lr {m['lr']:.2e} "
+            f"gnorm {m['grad_norm']:.2f} {m['step_time']*1e3:.0f} ms"
+        ),
+    )
+    try:
+        loop.run(crash_at=args.crash_at)
+    except RuntimeError as e:
+        print(f"!! {e} — run again to resume from the latest checkpoint")
+        raise SystemExit(1) from None
+    print(json.dumps({
+        "final_loss": loop.metrics_history[-1]["loss"],
+        "steps": len(loop.metrics_history),
+        "stragglers": len(loop.straggler_events),
+        "checkpoints": loop.store.latest_step(),
+    }, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Model zoo: all assigned architectures as ModelConfig-driven JAX models."""
+
+from .common import ModelConfig, axis_rules, cross_entropy_loss, logical_to_spec
+from .transformer import forward, init_params, loss_fn
+from . import serve
+
+__all__ = [
+    "ModelConfig",
+    "axis_rules",
+    "cross_entropy_loss",
+    "logical_to_spec",
+    "forward",
+    "init_params",
+    "loss_fn",
+    "serve",
+]

@@ -1,0 +1,233 @@
+"""GQA attention: training (full / sliding-window / cross) and KV-cache decode.
+
+Training attention is pure jnp (XLA fuses it well and the flash_attention
+Pallas kernel in kernels/flash_attention is the TPU drop-in); decode
+attention reads a cache laid out as [B, S_max, Hkv, Dh] whose **sequence
+axis is sharded over the "model" mesh axis** (flash-decoding style): GSPMD
+turns the softmax reduction over the sharded axis into partial reductions
++ an all-reduce, which is exactly the sequence-parallel decode schedule we
+want on TPU (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, apply_mrope, apply_rope, shard
+
+__all__ = ["KVCache", "attention_train", "attention_decode", "init_kv_cache"]
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # [L, B, S_max, Hkv, Dh]
+    v: jnp.ndarray  # [L, B, S_max, Hkv, Dh]
+    length: jnp.ndarray  # [] int32 — tokens currently filled
+
+
+def _repeat_kv(x: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """[B, S, Hkv, Dh] -> [B, S, Hkv * n_rep, Dh] (GQA head expansion)."""
+    if n_rep == 1:
+        return x
+    b, s, h, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(
+        b, s, h * n_rep, d
+    )
+
+
+def _causal_mask(s_q: int, s_k: int, window: int | None, offset: int = 0) -> jnp.ndarray:
+    """Boolean [s_q, s_k]: True = attend. offset = k positions before q[0]."""
+    q_pos = jnp.arange(s_q)[:, None] + offset
+    k_pos = jnp.arange(s_k)[None, :]
+    mask = k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    return mask
+
+
+def attention_train(
+    q: jnp.ndarray,  # [B, S, Hq, Dh]
+    k: jnp.ndarray,  # [B, Skv, Hkv, Dh]
+    v: jnp.ndarray,  # [B, Skv, Hkv, Dh]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    impl: str = "naive",  # naive | chunked
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Batched multi-head attention; returns [B, S, Hq, Dh].
+
+    impl="naive" materialises the (S, S) logits — the paper-faithful
+    baseline the dry-run records first.  impl="chunked" is the XLA-level
+    flash attention (online softmax over KV chunks inside a scan): HBM
+    traffic drops from O(S^2) to O(S^2/q_chunk * Dh) reads of K/V and the
+    (S, S) intermediate never exists; the Pallas kernel
+    (kernels/flash_attention) is the same algorithm tiled for VMEM.
+    """
+    if (
+        impl == "chunked"
+        and q.shape[1] > q_chunk
+        and q.shape[1] % q_chunk == 0
+        and k.shape[1] % kv_chunk == 0
+    ):
+        return _attention_chunked(
+            q, k, v, causal=causal, window=window, q_chunk=q_chunk, kv_chunk=kv_chunk
+        )
+    b, s_q, hq, dh = q.shape
+    _, s_k, hkv, _ = k.shape
+    k = _repeat_kv(k, hq // hkv)
+    v = _repeat_kv(v, hq // hkv)
+    q = shard(q, ("batch", "seq", "heads", None))
+    scale = 1.0 / math.sqrt(dh)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = _causal_mask(s_q, s_k, window, offset=s_k - s_q)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return shard(out, ("batch", "seq", "heads", None))
+
+
+def _attention_chunked(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool,
+    window: int | None,
+    q_chunk: int,
+    kv_chunk: int,
+) -> jnp.ndarray:
+    """Blockwise online-softmax attention (flash attention in pure XLA)."""
+    b, s_q, hq, dh = q.shape
+    _, s_k, hkv, _ = k.shape
+    assert s_q % q_chunk == 0 and s_k % kv_chunk == 0, (s_q, s_k, q_chunk, kv_chunk)
+    n_rep = hq // hkv
+    scale = 1.0 / math.sqrt(dh)
+    nq, nk = s_q // q_chunk, s_k // kv_chunk
+    offset = s_k - s_q
+    f32 = jnp.float32
+
+    kc = k.reshape(b, nk, kv_chunk, hkv, dh)
+    vc = v.reshape(b, nk, kv_chunk, hkv, dh)
+    qc = q.reshape(b, nq, q_chunk, hq, dh)
+
+    def q_block(iq, qb):  # qb: [B, q_chunk, Hq, Dh]
+        qb = (qb.astype(f32) * scale).reshape(b, q_chunk, hkv, n_rep, dh)
+        q_start = iq * q_chunk + offset
+
+        def kv_step(carry, ik):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_index_in_dim(kc, ik, axis=1, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vc, ik, axis=1, keepdims=False)
+            s = jnp.einsum("bqhrd,bkhd->bhrqk", qb, kb.astype(f32))
+            if causal:
+                q_pos = q_start + jnp.arange(q_chunk)[:, None]
+                k_pos = ik * kv_chunk + jnp.arange(kv_chunk)[None, :]
+                mask = k_pos <= q_pos
+                if window is not None:
+                    mask = mask & (k_pos > q_pos - window)
+                s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhrqk,bkhd->bhrqd", p, vb.astype(f32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, n_rep, q_chunk), -1e30, f32)
+        l0 = jnp.zeros((b, hkv, n_rep, q_chunk), f32)
+        a0 = jnp.zeros((b, hkv, n_rep, q_chunk, dh), f32)
+        if causal:
+            # skip fully-masked kv chunks: the last relevant chunk index
+            ik_hi = jnp.minimum((q_start + q_chunk - 1) // kv_chunk + 1, nk)
+        else:
+            ik_hi = nk
+        (m, l, acc), _ = jax.lax.scan(
+            lambda c, ik: jax.lax.cond(
+                ik < ik_hi, lambda cc: kv_step(cc, ik), lambda cc: (cc, None), c
+            ),
+            (m0, l0, a0),
+            jnp.arange(nk),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, q_chunk, hq, dh).astype(q.dtype)
+
+    outs = jax.vmap(q_block, in_axes=(0, 1), out_axes=1)(jnp.arange(nq), qc)
+    return outs.reshape(b, s_q, hq, dh)
+
+
+def attention_decode(
+    q: jnp.ndarray,  # [B, 1, Hq, Dh]
+    k_cache: jnp.ndarray,  # [B, S_max, Hkv, Dh] (seq sharded over "model")
+    v_cache: jnp.ndarray,  # [B, S_max, Hkv, Dh]
+    length: jnp.ndarray,  # [] int32 — valid prefix
+    *,
+    window: int | None = None,
+) -> jnp.ndarray:
+    """Single-token decode against the cache; returns [B, 1, Hq, Dh].
+
+    The cache's S_max axis carries the "kv_seq" logical axis -> "model"
+    mesh axis; the masked softmax over it becomes partial-max/partial-sum
+    + all-reduce under GSPMD (flash-decoding).
+    """
+    b, _, hq, dh = q.shape
+    _, s_max, hkv, _ = k_cache.shape
+    k_cache = shard(k_cache, ("batch", "kv_seq", None, None))
+    v_cache = shard(v_cache, ("batch", "kv_seq", None, None))
+    n_rep = hq // hkv
+    scale = 1.0 / math.sqrt(dh)
+    qh = q[:, 0].reshape(b, hkv, n_rep, dh)  # group by kv head
+    logits = jnp.einsum("bhrd,bshd->bhrs", qh, k_cache).astype(jnp.float32) * scale
+    pos = jnp.arange(s_max)
+    valid = pos[None, None, None, :] < length
+    if window is not None:
+        valid &= pos[None, None, None, :] > (length - 1 - window)
+    logits = jnp.where(valid, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhrs,bshd->bhrd", probs, v_cache)
+    return out.reshape(b, 1, hq, dh)
+
+
+def init_kv_cache(
+    cfg: ModelConfig, batch: int, s_max: int, n_layers: int | None = None
+) -> KVCache:
+    n_layers = n_layers if n_layers is not None else cfg.n_layers
+    shape = (n_layers, batch, s_max, cfg.n_kv_heads, cfg.head_dim_)
+    return KVCache(
+        k=jnp.zeros(shape, dtype=cfg.dtype),
+        v=jnp.zeros(shape, dtype=cfg.dtype),
+        length=jnp.zeros((), dtype=jnp.int32),
+    )
+
+
+def project_qkv(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> tuple[jnp.ndarray, ...]:
+    """x [B, S, D] -> q [B,S,Hq,Dh], k/v [B,S,Hkv,Dh] (no biases — the
+    assigned archs are no-bias GQA designs)."""
+    b, s, _ = x.shape
+    q = (x @ params["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim_)
+    k = (x @ params["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim_)
+    v = (x @ params["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim_)
+    return q, k, v
+
+
+def rope_qk(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ModelConfig,
+    positions_3d: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    if cfg.m_rope and positions_3d is not None:
+        q = apply_mrope(q, positions_3d, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions_3d, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k

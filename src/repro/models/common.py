@@ -1,0 +1,347 @@
+"""Model substrate: config, logical-axis params, norms, RoPE, embeddings.
+
+All models are pure-functional JAX (params as pytrees).  Every parameter
+carries **logical axis names** (a parallel pytree of tuples) so the
+distribution layer (distributed/sharding.py) can map any architecture onto
+any mesh with a rule table — the same mechanism MaxText uses.  Sharding
+constraints inside model code go through :func:`shard` which resolves the
+current rule set (a context var); with no rules active it is a no-op, so
+models run unchanged on a single CPU device for smoke tests.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "ModelConfig",
+    "ParamStore",
+    "axis_rules",
+    "current_rules",
+    "logical_to_spec",
+    "shard",
+    "rms_norm",
+    "layer_norm",
+    "rope_frequencies",
+    "apply_rope",
+    "apply_mrope",
+    "cross_entropy_loss",
+]
+
+
+# --------------------------------------------------------------------- #
+# Config
+# --------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class ModelConfig:
+    """One config covers all 10 assigned architectures (see configs/)."""
+
+    arch: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    # attention
+    attention: str = "full"  # full | swa | none
+    swa_window: int = 4096
+    rope_theta: float = 500000.0
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0  # per-expert hidden (kimi: 2048); 0 -> d_ff
+    n_shared_experts: int = 0  # kimi: 1 shared expert
+    capacity_factor: float = 1.25
+    # SSM / hybrid
+    ssm_state: int = 0  # mamba2 state size (zamba2: 64) or rwkv head state
+    hybrid_attn_every: int = 0  # zamba2: shared attn block every N mamba blocks
+    # enc-dec (whisper)
+    enc_dec: bool = False
+    enc_layers: int = 0
+    enc_seq: int = 1500  # whisper: 30s of audio -> 1500 frames
+    # VLM (qwen2-vl)
+    m_rope: bool = False
+    mrope_sections: tuple[int, int, int] = (16, 24, 24)
+    # implementation selection (perf knobs; semantics-preserving)
+    attn_impl: str = "naive"  # naive | chunked  (chunked = XLA flash attention)
+    attn_q_chunk: int = 1024
+    attn_kv_chunk: int = 1024
+    moe_impl: str = "gspmd"  # gspmd | shard_map_ep
+    # numerics
+    dtype: Any = jnp.bfloat16
+    norm_eps: float = 1e-5
+    logit_softcap: float = 0.0
+    tie_embeddings: bool = False
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim_
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim_
+
+    @property
+    def expert_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    def params_count(self) -> int:
+        """Total parameter count (for roofline MODEL_FLOPS = 6*N*D)."""
+        d, hd = self.d_model, self.head_dim_
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        if self.family in ("ssm",):  # rwkv6: time-mix + channel-mix
+            per_layer = 4 * d * d + 2 * d * self.d_ff + d * d  # r,k,v,o,g + ffn
+        elif self.family == "hybrid":
+            # mamba2 block: in_proj (z,x: d->4d) + bc/dt proj + out_proj (2d->d)
+            d_inner = 2 * d
+            n_h = d_inner // 64
+            per_layer = (
+                d * 2 * d_inner + d * 2 * self.ssm_state + d * n_h + d_inner * d
+            )
+        else:
+            per_layer = attn + 3 * d * self.d_ff
+        if self.n_experts > 0:
+            moe = self.n_experts * 3 * d * self.expert_ff
+            dense_ffn = 3 * d * self.expert_ff * self.n_shared_experts
+            per_layer = attn + moe + dense_ffn + d * self.n_experts
+        if self.family == "audio":
+            # decoder: self-attn + cross-attn + 2-matrix GELU MLP
+            per_layer = 2 * attn + 2 * d * self.d_ff
+        n = self.n_layers * per_layer + self.vocab * d * (1 if self.tie_embeddings else 2)
+        if self.family == "hybrid":
+            n += attn + 3 * d * self.d_ff  # the single shared attn+MLP block
+        if self.enc_dec:
+            n += self.enc_layers * (attn + 2 * d * self.d_ff + attn)  # enc + cross
+        return n
+
+    def active_params_count(self) -> int:
+        """Active params per token (MoE: only top_k + shared experts)."""
+        if self.n_experts == 0:
+            return self.params_count()
+        d = self.d_model
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        active_moe = (self.top_k + self.n_shared_experts) * 3 * d * self.expert_ff
+        per_layer = attn + active_moe + d * self.n_experts
+        return self.n_layers * per_layer + self.vocab * d * 2
+
+
+# --------------------------------------------------------------------- #
+# Logical axis rules (context) + sharding constraint helper
+# --------------------------------------------------------------------- #
+_RULES: contextvars.ContextVar[tuple[tuple[str, Any], ...] | None] = contextvars.ContextVar(
+    "axis_rules", default=None
+)
+_MESH: contextvars.ContextVar[Any] = contextvars.ContextVar("model_mesh", default=None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: dict[str, Any], mesh: Any = None):
+    """Activate logical->mesh axis rules, e.g. {"batch": ("pod", "data"),
+    "heads": "model"}.  Values may be str, tuple or None.  The optional
+    mesh is what shard_map-based layers (ffn.moe_layer_ep) run over."""
+    tok = _RULES.set(tuple(rules.items()))
+    tok_m = _MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _RULES.reset(tok)
+        _MESH.reset(tok_m)
+
+
+def current_rules() -> dict[str, Any]:
+    r = _RULES.get()
+    return dict(r) if r else {}
+
+
+def current_mesh():
+    return _MESH.get()
+
+
+def logical_to_spec(axes: tuple[str | None, ...], rules: dict[str, Any] | None = None) -> P:
+    """Map logical axis names to a PartitionSpec under the given rules.
+
+    Guards against reusing one mesh axis for two tensor dims (illegal in
+    GSPMD): later dims that would reuse an axis get None.
+    """
+    rules = current_rules() if rules is None else rules
+    used: set[str] = set()
+    spec = []
+    for ax in axes:
+        m = rules.get(ax) if ax is not None else None
+        if m is None:
+            spec.append(None)
+            continue
+        parts = (m,) if isinstance(m, str) else tuple(m)
+        free = tuple(p for p in parts if p not in used)
+        if not free:
+            spec.append(None)
+            continue
+        used.update(free)
+        spec.append(free[0] if len(free) == 1 else free)
+    return P(*spec)
+
+
+def shard(x: jnp.ndarray, axes: tuple[str | None, ...]) -> jnp.ndarray:
+    """Apply a sharding constraint if rules are active; no-op otherwise."""
+    rules = current_rules()
+    if not rules:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, logical_to_spec(axes, rules))
+    except (ValueError, RuntimeError):
+        return x  # outside a mesh context
+
+
+# --------------------------------------------------------------------- #
+# Parameter store with logical axes
+# --------------------------------------------------------------------- #
+class ParamStore:
+    """Accumulates params + their logical axes during init."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.bfloat16):
+        self._key = key
+        self.dtype = dtype
+        self.params: dict[str, Any] = {}
+        self.axes: dict[str, Any] = {}
+
+    def _split(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def param(
+        self,
+        name: str,
+        shape: tuple[int, ...],
+        axes: tuple[str | None, ...],
+        *,
+        init: str = "normal",
+        scale: float | None = None,
+        dtype=None,
+    ) -> jnp.ndarray:
+        assert len(shape) == len(axes), (name, shape, axes)
+        dtype = dtype or self.dtype
+        if init == "normal":
+            scale = scale if scale is not None else 1.0 / math.sqrt(shape[-2] if len(shape) >= 2 else shape[-1])
+            x = jax.random.normal(self._split(), shape, dtype=jnp.float32) * scale
+        elif init == "zeros":
+            x = jnp.zeros(shape, dtype=jnp.float32)
+        elif init == "ones":
+            x = jnp.ones(shape, dtype=jnp.float32)
+        elif init == "uniform":
+            s = scale if scale is not None else 1.0
+            x = jax.random.uniform(self._split(), shape, minval=-s, maxval=s, dtype=jnp.float32)
+        else:
+            raise ValueError(f"unknown init {init!r}")
+        x = x.astype(dtype)
+        _assign(self.params, name, x)
+        _assign(self.axes, name, axes)
+        return x
+
+
+def _assign(tree: dict, dotted: str, value: Any) -> None:
+    parts = dotted.split(".")
+    for p in parts[:-1]:
+        tree = tree.setdefault(p, {})
+    tree[parts[-1]] = value
+
+
+# --------------------------------------------------------------------- #
+# Numerics
+# --------------------------------------------------------------------- #
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(
+    x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray | None, eps: float = 1e-5
+) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    x = x * weight.astype(jnp.float32)
+    if bias is not None:
+        x = x + bias.astype(jnp.float32)
+    return x.astype(dt)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies for rotary embeddings [head_dim // 2]."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [B, S, H, Dh]; positions: [B, S] int32 -> rotated x."""
+    dh = x.shape[-1]
+    inv = rope_frequencies(dh, theta)  # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * inv  # [B, S, Dh/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray,
+    positions_3d: jnp.ndarray,
+    theta: float,
+    sections: tuple[int, int, int],
+) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE: positions_3d [3, B, S] (t, h, w ids).
+
+    The head-dim half is split into `sections` (t, h, w) frequency bands;
+    each band rotates by its own position stream (arXiv:2409.12191 §3.1).
+    """
+    dh = x.shape[-1]
+    assert sum(sections) == dh // 2, (sections, dh)
+    inv = rope_frequencies(dh, theta)  # [Dh/2]
+    # Select which position stream drives each frequency band.
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=dh // 2
+    )  # [Dh/2] in {0,1,2}
+    pos = positions_3d.astype(jnp.float32)  # [3, B, S]
+    # angles[b, s, f] = pos[sec_id[f], b, s] * inv[f]
+    pos_sel = pos[sec_id, :, :]  # [Dh/2, B, S]
+    angles = jnp.transpose(pos_sel, (1, 2, 0)) * inv  # [B, S, Dh/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy_loss(
+    logits: jnp.ndarray, labels: jnp.ndarray, mask: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """Mean next-token cross entropy; logits [B, S, V], labels [B, S]."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

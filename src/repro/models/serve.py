@@ -1,0 +1,348 @@
+"""Serving paths: cache init, prefill, and single-token decode per family.
+
+``decode_step`` is the unit the dry-run lowers for ``decode_32k`` /
+``long_500k`` (one new token against a cache of seq_len).  Cache layouts:
+
+  dense/moe/vlm : k/v  [L, B, S_max, Hkv, Dh]  (kv_seq sharded on "model")
+  ssm (rwkv6)   : wkv  [L, B, H, Dk, Dv] f32 + token shifts [L, B, D]
+  hybrid        : ssm  [L, B, H, Dst, 64] f32 + shared-attn k/v
+                  [G, B, S_max, Hkv, Dh]  (G = number of shared-block sites)
+  audio         : decoder self k/v [L, B, S_max, Hkv, Dh] + precomputed
+                  cross k/v [L, B, S_enc, Hkv, Dh]
+
+The KV sequence axis carries the "kv_seq" logical axis; with the decode
+rule table it maps onto the "model" mesh axis (flash-decoding sequence
+sharding, DESIGN.md §6) — that is what makes 500k-token caches fit.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention_decode, attention_train
+from .common import ModelConfig, apply_mrope, apply_rope, rms_norm, shard
+from .ffn import moe_layer, swiglu
+from .ssm import rwkv6_step, ssd_step
+from .transformer import (
+    Cache,
+    _attn_block,
+    _ffn_block,
+    _mamba2_mixer,
+    _rwkv_layers,
+    _shared_attn_apply,
+    _whisper_encoder,
+    _whisper_views,
+    _zamba_layers,
+)
+
+__all__ = ["init_cache", "prefill", "decode_step"]
+
+
+def _n_shared_sites(cfg: ModelConfig) -> int:
+    every = max(cfg.hybrid_attn_every, 1)
+    return (cfg.n_layers + every - 1) // every
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int) -> Cache:
+    L, dt = cfg.n_layers, cfg.dtype
+    dh = cfg.head_dim_
+    if cfg.family in ("dense", "moe", "vlm"):
+        return {
+            "k": jnp.zeros((L, batch, s_max, cfg.n_kv_heads, dh), dt),
+            "v": jnp.zeros((L, batch, s_max, cfg.n_kv_heads, dh), dt),
+            "length": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "ssm":
+        d = cfg.d_model
+        hd = d // cfg.n_heads
+        return {
+            "wkv": jnp.zeros((L, batch, cfg.n_heads, hd, hd), jnp.float32),
+            "tm_shift": jnp.zeros((L, batch, d), dt),
+            "cm_shift": jnp.zeros((L, batch, d), dt),
+            "length": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "hybrid":
+        g = _n_shared_sites(cfg)
+        n_h = (2 * cfg.d_model) // 64
+        return {
+            "ssm": jnp.zeros((L, batch, n_h, cfg.ssm_state, 64), jnp.float32),
+            "k": jnp.zeros((g, batch, s_max, cfg.n_kv_heads, dh), dt),
+            "v": jnp.zeros((g, batch, s_max, cfg.n_kv_heads, dh), dt),
+            "length": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "audio":
+        Ld = cfg.n_layers
+        return {
+            "k": jnp.zeros((Ld, batch, s_max, cfg.n_kv_heads, dh), dt),
+            "v": jnp.zeros((Ld, batch, s_max, cfg.n_kv_heads, dh), dt),
+            "xk": jnp.zeros((Ld, batch, cfg.enc_seq, cfg.n_kv_heads, dh), dt),
+            "xv": jnp.zeros((Ld, batch, cfg.enc_seq, cfg.n_kv_heads, dh), dt),
+            "length": jnp.zeros((), jnp.int32),
+        }
+    raise ValueError(cfg.family)
+
+
+# --------------------------------------------------------------------- #
+# Prefill
+# --------------------------------------------------------------------- #
+def prefill(
+    params: dict, cfg: ModelConfig, batch: dict, cache: Cache
+) -> tuple[jnp.ndarray, Cache]:
+    """Process the prompt; fill the cache; return last-position logits."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    window = cfg.swa_window if cfg.attention == "swa" else None
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        positions_3d = batch.get("positions_3d")
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            x = jnp.concatenate([batch["patch_embeds"].astype(cfg.dtype), x], axis=1)
+            s = x.shape[1]
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        def body(h, lp):
+            h, (k, v) = _attn_block(lp, h, cfg, positions, positions_3d, window=window)
+            h, _ = _ffn_block(lp, h, cfg)
+            return h, (k, v)
+
+        x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+        cache = dict(cache)
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], ks.astype(cfg.dtype), (0, 0, 0, 0, 0)
+        )
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], vs.astype(cfg.dtype), (0, 0, 0, 0, 0)
+        )
+        cache["length"] = jnp.int32(s)
+    elif cfg.family == "ssm":
+        x, _, new_cache = _rwkv_layers(params, x, cfg, None)
+        cache = {**new_cache, "length": jnp.int32(s)}
+    elif cfg.family == "hybrid":
+        x, cache = _zamba_prefill(params, x, cfg, positions, cache)
+        cache["length"] = jnp.int32(s)
+    elif cfg.family == "audio":
+        p = _whisper_views(params)
+        enc = _whisper_encoder(p, batch["frames"].astype(cfg.dtype), cfg)
+        x, cache = _whisper_prefill(p, x, enc, cfg, positions, cache)
+        cache["length"] = jnp.int32(s)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (x @ head)[:, 0], cache
+
+
+def _zamba_prefill(params, x, cfg, positions, cache):
+    b, s, d = x.shape
+    L = cfg.n_layers
+    every = max(cfg.hybrid_attn_every, 1)
+    n_h = (2 * d) // 64
+    ssm0 = jnp.zeros((L, b, n_h, cfg.ssm_state, 64), jnp.float32)
+
+    def body(h, layer_in):
+        lp, st0 = layer_in
+        a = rms_norm(h, lp["norm"], cfg.norm_eps)
+        o, st1 = _mamba2_mixer(lp, a, cfg, st0)
+        return h + o, st1
+
+    n_groups = _n_shared_sites(cfg)
+    states, kss, vss = [], [], []
+    idx = 0
+    for g in range(n_groups):
+        span = min(every, L - idx)
+        grp = jax.tree.map(lambda t: t[idx : idx + span], params["layers"])
+        x, st_new = jax.lax.scan(body, x, (grp, ssm0[idx : idx + span]))
+        states.append(st_new)
+        x, (k, v) = _shared_attn_apply(params, x, cfg, positions)
+        kss.append(k)
+        vss.append(v)
+        idx += span
+    cache = dict(cache)
+    cache["ssm"] = jnp.concatenate(states, axis=0)
+    ks = jnp.stack(kss, axis=0).astype(cfg.dtype)  # [G, B, S, Hkv, Dh]
+    vs = jnp.stack(vss, axis=0).astype(cfg.dtype)
+    cache["k"] = jax.lax.dynamic_update_slice(cache["k"], ks, (0, 0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(cache["v"], vs, (0, 0, 0, 0, 0))
+    return x, cache
+
+
+def _whisper_prefill(p, x, enc_out, cfg, positions, cache):
+    b, s, d = x.shape
+    be, se, _ = enc_out.shape
+
+    def body(h, lp):
+        h2 = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        q = (h2 @ lp["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim_)
+        k = (h2 @ lp["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim_)
+        v = (h2 @ lp["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim_)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        o = attention_train(q, k, v, causal=True)
+        h = h + o.reshape(b, s, cfg.q_dim) @ lp["wo"]
+        h2 = rms_norm(h, lp["xattn_norm"], cfg.norm_eps)
+        q = (h2 @ lp["xq"]).reshape(b, s, cfg.n_heads, cfg.head_dim_)
+        xk = (enc_out @ lp["xk"]).reshape(be, se, cfg.n_kv_heads, cfg.head_dim_)
+        xv = (enc_out @ lp["xv"]).reshape(be, se, cfg.n_kv_heads, cfg.head_dim_)
+        o = attention_train(q, xk, xv, causal=False)
+        h = h + o.reshape(b, s, cfg.q_dim) @ lp["xo"]
+        f = rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+        f = jax.nn.gelu((f @ lp["wi"]).astype(jnp.float32)).astype(h.dtype)
+        return h + f @ lp["wo_ffn"], (k, v, xk, xv)
+
+    x, (ks, vs, xks, xvs) = jax.lax.scan(body, x, p["dec_layers_view"])
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice(cache["k"], ks.astype(cfg.dtype), (0, 0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(cache["v"], vs.astype(cfg.dtype), (0, 0, 0, 0, 0))
+    cache["xk"] = xks.astype(cfg.dtype)
+    cache["xv"] = xvs.astype(cfg.dtype)
+    return x, cache
+
+
+# --------------------------------------------------------------------- #
+# Decode (one token)
+# --------------------------------------------------------------------- #
+def decode_step(
+    params: dict, cfg: ModelConfig, tokens: jnp.ndarray, cache: Cache
+) -> tuple[jnp.ndarray, Cache]:
+    """tokens [B] int32 -> (logits [B, V], updated cache)."""
+    b = tokens.shape[0]
+    x = params["embed"][tokens][:, None].astype(cfg.dtype)  # [B,1,D]
+    length = cache["length"]
+    positions = jnp.broadcast_to(length[None, None], (b, 1)).astype(jnp.int32)
+    window = cfg.swa_window if cfg.attention == "swa" else None
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        positions_3d = (
+            jnp.broadcast_to(length[None, None, None], (3, b, 1)).astype(jnp.int32)
+            if cfg.m_rope
+            else None
+        )
+
+        def body(h, layer_in):
+            lp, k_row, v_row = layer_in
+            h2 = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+            q = h2 @ lp["wq"]
+            k = h2 @ lp["wk"]
+            v = h2 @ lp["wv"]
+            if "bq" in lp:
+                q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+            q = q.reshape(b, 1, cfg.n_heads, cfg.head_dim_)
+            k = k.reshape(b, 1, cfg.n_kv_heads, cfg.head_dim_)
+            v = v.reshape(b, 1, cfg.n_kv_heads, cfg.head_dim_)
+            if cfg.m_rope and positions_3d is not None:
+                q = apply_mrope(q, positions_3d, cfg.rope_theta, cfg.mrope_sections)
+                k = apply_mrope(k, positions_3d, cfg.rope_theta, cfg.mrope_sections)
+            else:
+                q = apply_rope(q, positions, cfg.rope_theta)
+                k = apply_rope(k, positions, cfg.rope_theta)
+            k_row = jax.lax.dynamic_update_slice(k_row, k.astype(cfg.dtype), (0, length, 0, 0))
+            v_row = jax.lax.dynamic_update_slice(v_row, v.astype(cfg.dtype), (0, length, 0, 0))
+            o = attention_decode(q, k_row, v_row, length + 1, window=window)
+            h = h + o.reshape(b, 1, cfg.q_dim) @ lp["wo"]
+            h, _ = _ffn_block(lp, h, cfg)
+            return h, (k_row, v_row)
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+        cache = {**cache, "k": ks, "v": vs, "length": length + 1}
+    elif cfg.family == "ssm":
+        serve_cache = {k: cache[k] for k in ("wkv", "tm_shift", "cm_shift")}
+        x, _, new_cache = _rwkv_layers(params, x, cfg, serve_cache)
+        cache = {**new_cache, "length": length + 1}
+    elif cfg.family == "hybrid":
+        x, cache = _zamba_decode(params, x, cfg, positions, cache)
+        cache["length"] = length + 1
+    elif cfg.family == "audio":
+        p = _whisper_views(params)
+        x, cache = _whisper_decode(p, x, cfg, positions, cache)
+        cache["length"] = length + 1
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (x @ head)[:, 0], cache
+
+
+def _zamba_decode(params, x, cfg, positions, cache):
+    b = x.shape[0]
+    d = cfg.d_model
+    L = cfg.n_layers
+    every = max(cfg.hybrid_attn_every, 1)
+    length = cache["length"]
+
+    def body(h, layer_in):
+        lp, st0 = layer_in
+        a = rms_norm(h, lp["norm"], cfg.norm_eps)
+        o, st1 = _mamba2_mixer(lp, a, cfg, st0)
+        return h + o, st1
+
+    sp = jax.tree.map(lambda t: t[0], params["shared_attn"])
+    n_groups = _n_shared_sites(cfg)
+    states, kss, vss = [], [], []
+    idx = 0
+    for g in range(n_groups):
+        span = min(every, L - idx)
+        grp = jax.tree.map(lambda t: t[idx : idx + span], params["layers"])
+        x, st_new = jax.lax.scan(body, x, (grp, cache["ssm"][idx : idx + span]))
+        states.append(st_new)
+        # shared attn decode against this site's kv cache
+        h2 = rms_norm(x, sp["attn_norm"], cfg.norm_eps)
+        q = (h2 @ sp["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim_)
+        k = (h2 @ sp["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim_)
+        v = (h2 @ sp["wv"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim_)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        k_row = jax.lax.dynamic_update_slice(
+            cache["k"][g], k.astype(cfg.dtype), (0, length, 0, 0)
+        )
+        v_row = jax.lax.dynamic_update_slice(
+            cache["v"][g], v.astype(cfg.dtype), (0, length, 0, 0)
+        )
+        kss.append(k_row)
+        vss.append(v_row)
+        o = attention_decode(q, k_row, v_row, length + 1)
+        x = x + o.reshape(b, 1, cfg.q_dim) @ sp["wo"]
+        f = rms_norm(x, sp["ffn_norm"], cfg.norm_eps)
+        x = x + swiglu({"wi_gate": sp["wi_gate"], "wi_up": sp["wi_up"], "wo": sp["wo_ffn"]}, f)
+        idx += span
+    cache = {
+        **cache,
+        "ssm": jnp.concatenate(states, axis=0),
+        "k": jnp.stack(kss, axis=0),
+        "v": jnp.stack(vss, axis=0),
+    }
+    return x, cache
+
+
+def _whisper_decode(p, x, cfg, positions, cache):
+    b = x.shape[0]
+    length = cache["length"]
+
+    def body(h, layer_in):
+        lp, k_row, v_row, xk, xv = layer_in
+        h2 = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        q = (h2 @ lp["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim_)
+        k = (h2 @ lp["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim_)
+        v = (h2 @ lp["wv"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim_)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        k_row = jax.lax.dynamic_update_slice(k_row, k.astype(cfg.dtype), (0, length, 0, 0))
+        v_row = jax.lax.dynamic_update_slice(v_row, v.astype(cfg.dtype), (0, length, 0, 0))
+        o = attention_decode(q, k_row, v_row, length + 1)
+        h = h + o.reshape(b, 1, cfg.q_dim) @ lp["wo"]
+        h2 = rms_norm(h, lp["xattn_norm"], cfg.norm_eps)
+        q = (h2 @ lp["xq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim_)
+        o = attention_decode(q, xk, xv, jnp.int32(cfg.enc_seq))
+        h = h + o.reshape(b, 1, cfg.q_dim) @ lp["xo"]
+        f = rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+        f = jax.nn.gelu((f @ lp["wi"]).astype(jnp.float32)).astype(h.dtype)
+        return h + f @ lp["wo_ffn"], (k_row, v_row)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (p["dec_layers_view"], cache["k"], cache["v"], cache["xk"], cache["xv"])
+    )
+    return x, {**cache, "k": ks, "v": vs}

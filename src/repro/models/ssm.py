@@ -1,0 +1,232 @@
+"""SSM blocks: RWKV6 "Finch" time-mix and Mamba2 SSD (for zamba2 hybrid).
+
+Both are linear-recurrence layers with O(1) decode state — which is why
+the rwkv6 / zamba2 / mixtral(SWA) architectures are the ones that run the
+``long_500k`` shape (DESIGN.md §5).
+
+Training uses the **chunked** formulation (the standard linear-attention
+chunking: intra-chunk quadratic term masked by decay + inter-chunk
+recurrent state carried by a scan over chunks).  This is the TPU-native
+adaptation: the per-token recurrence becomes MXU matmuls of size
+chunk x chunk and chunk x state, and the sequential scan shrinks from
+seq_len steps to seq_len / chunk steps.  kernels/rwkv6_scan holds the
+Pallas version of the intra-chunk hot loop; this file is the reference
+path the dry-run compiles.
+
+RWKV6 (arXiv:2404.05892): per head h, state S in R^{dk x dv};
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t       (w_t: data-dependent decay)
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)   (u: bonus for current token)
+
+Mamba2 SSD (arXiv:2405.21060): scalar-per-head decay a_t = exp(dt * A):
+    S_t = a_t S_{t-1} + dt_t B_t^T x_t ;  y_t = C_t S_t + D x_t
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, shard
+
+__all__ = [
+    "rwkv6_chunked",
+    "rwkv6_step",
+    "ssd_chunked",
+    "ssd_step",
+    "SSMState",
+]
+
+
+class SSMState(NamedTuple):
+    state: jnp.ndarray  # rwkv: [L, B, H, Dk, Dv]; mamba2: [L, B, H, Dst, Dh]
+    token_shift: jnp.ndarray  # rwkv: [L, B, D] last hidden (for time-shift); mamba2: conv state
+
+
+# --------------------------------------------------------------------- #
+# RWKV6
+# --------------------------------------------------------------------- #
+def rwkv6_chunked(
+    r: jnp.ndarray,  # [B, S, H, Dk]
+    k: jnp.ndarray,  # [B, S, H, Dk]
+    v: jnp.ndarray,  # [B, S, H, Dv]
+    w: jnp.ndarray,  # [B, S, H, Dk]  decay in (0,1), data-dependent
+    u: jnp.ndarray,  # [H, Dk]        current-token bonus
+    *,
+    chunk: int = 32,
+    initial_state: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked WKV6; returns (out [B,S,H,Dv], final_state [B,H,Dk,Dv]).
+
+    Numerics: intra-chunk decays are products of exponentials whose
+    exponents span chunk * |log w|; the model layer clamps per-token decay
+    to w >= ~0.1 and the default chunk of 32 keeps exp() within f32 range
+    (see models/transformer.py rwkv parametrisation).
+
+    Within a chunk of length C (positions i, j):
+      intra[i,j] = r_i . (prod_{m=j+1..i-1} w_m) k_j   for j < i
+                   r_i . (u k_i)                       for j == i
+      cross[i]   = r_i . (prod_{m<i} w_m) S_in
+    and the state update uses the chunk's total decay + decayed k v outer
+    products.  All products are computed in log space for stability.
+    """
+    b, s, h, dk = r.shape
+    dv = v.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    f32 = jnp.float32
+
+    # Keep the scan xs in the INPUT dtype and derive all f32 cumulative-
+    # decay factors INSIDE the chunk step: materialising full-sequence f32
+    # pcum/exp tensors outside the scan costs ~6 x (B,S,H,Dk) f32 of HBM
+    # per layer (the dominant memory term of the rwkv6 train cell before
+    # this change — EXPERIMENTS.md §Perf).  In-chunk, they are (B,C,H,Dk)
+    # working-set values XLA keeps fused.
+    rr = r.reshape(b, n, chunk, h, dk)
+    kk = k.reshape(b, n, chunk, h, dk)
+    vv = v.reshape(b, n, chunk, h, dv)
+    ww = w.reshape(b, n, chunk, h, dk)
+
+    if initial_state is None:
+        s0 = jnp.zeros((b, h, dk, dv), dtype=f32)
+    else:
+        s0 = initial_state.astype(f32)
+
+    def chunk_step(state, inputs):
+        rc_raw, kc_raw, vc_raw, wc_raw = inputs  # [B,C,H,Dk] input dtype
+        rc = rc_raw.astype(f32)
+        kc = kc_raw.astype(f32)
+        vc = vc_raw.astype(f32)
+        lw = jnp.log(jnp.clip(wc_raw.astype(f32), 1e-8, 1.0))
+        pc = jnp.cumsum(lw, axis=1)  # [B,C,H,Dk]
+        tot = pc[:, -1]  # [B,H,Dk]
+        # pc_{i-1}: cumulative log-decay *before* token i (0 for i = 0)
+        pc_prev = jnp.concatenate([jnp.zeros_like(pc[:, :1]), pc[:, :-1]], axis=1)
+        # cross-chunk: o_i += (r_i * exp(pc_{i-1})) @ S_in
+        r_dec = rc * jnp.exp(pc_prev)  # [B,C,H,Dk]
+        cross = jnp.einsum("bchk,bhkv->bchv", r_dec, state)
+        # intra-chunk: att[i,j] = r_i . (exp(pc_{i-1} - pc_j) k_j) for j < i
+        att = jnp.einsum("bchk,bdhk->bhcd", r_dec, kc * jnp.exp(-pc))  # [B,H,C,C]
+        idx = jnp.arange(chunk)
+        mask = (idx[:, None] > idx[None, :]).astype(f32)  # strict lower
+        att = att * mask[None, None]
+        # diagonal (current token, bonus u)
+        diag = jnp.einsum("bchk,bchk->bch", rc * u[None, None], kc)  # [B,C,H]
+        intra = jnp.einsum("bhcd,bdhv->bchv", att, vc) + diag[..., None] * vc
+        out_c = cross + intra
+        # state update: S' = diag(exp(tot)) S + sum_j exp(tot - pc_j) k_j v_j^T
+        k_dec = kc * jnp.exp(tot[:, None] - pc)  # [B,C,H,Dk]
+        state = jnp.exp(tot)[..., None] * state + jnp.einsum(
+            "bchk,bchv->bhkv", k_dec, vc
+        )
+        return state, out_c
+
+    inputs = (
+        jnp.moveaxis(rr, 1, 0),
+        jnp.moveaxis(kk, 1, 0),
+        jnp.moveaxis(vv, 1, 0),
+        jnp.moveaxis(ww, 1, 0),
+    )
+    final_state, outs = jax.lax.scan(chunk_step, s0, inputs)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, dv)
+    return out.astype(r.dtype), final_state
+
+
+def rwkv6_step(
+    r: jnp.ndarray,  # [B, H, Dk]
+    k: jnp.ndarray,
+    v: jnp.ndarray,  # [B, H, Dv]
+    w: jnp.ndarray,  # [B, H, Dk]
+    u: jnp.ndarray,  # [H, Dk]
+    state: jnp.ndarray,  # [B, H, Dk, Dv]
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token WKV6 recurrence (decode path)."""
+    f32 = jnp.float32
+    rf, kf, vf, wf = (x.astype(f32) for x in (r, k, v, w))
+    kv = kf[..., :, None] * vf[..., None, :]  # [B,H,Dk,Dv]
+    out = jnp.einsum("bhk,bhkv->bhv", rf, state + u[None, ..., None] * kv)
+    new_state = wf[..., None] * state + kv
+    return out.astype(r.dtype), new_state
+
+
+# --------------------------------------------------------------------- #
+# Mamba2 SSD
+# --------------------------------------------------------------------- #
+def ssd_chunked(
+    x: jnp.ndarray,  # [B, S, H, Dh]   (already dt-scaled input)
+    a: jnp.ndarray,  # [B, S, H]       log-decay per step (dt * A, <= 0)
+    bmat: jnp.ndarray,  # [B, S, H, Dst]
+    cmat: jnp.ndarray,  # [B, S, H, Dst]
+    *,
+    chunk: int = 64,
+    initial_state: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD (Mamba2); returns (y [B,S,H,Dh], state [B,H,Dst,Dh]).
+
+    y_t = C_t . S_t with S_t = exp(a_t) S_{t-1} + B_t^T x_t.
+    """
+    b, s, h, dh = x.shape
+    dst = bmat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    f32 = jnp.float32
+
+    # As in rwkv6_chunked: xs stay in the input dtype; all f32 cumulative-
+    # decay factors are derived inside the chunk (HBM-traffic motivation
+    # in EXPERIMENTS.md §Perf).
+    xx = x.reshape(b, n, chunk, h, dh)
+    aa = a.reshape(b, n, chunk, h)
+    bb = bmat.reshape(b, n, chunk, h, dst)
+    cc = cmat.reshape(b, n, chunk, h, dst)
+
+    if initial_state is None:
+        s0 = jnp.zeros((b, h, dst, dh), dtype=f32)
+    else:
+        s0 = initial_state.astype(f32)
+
+    def chunk_step(state, inputs):
+        xc_raw, ac_raw, bc_raw, cc_raw = inputs
+        xc = xc_raw.astype(f32)
+        ac = ac_raw.astype(f32)
+        bc = bc_raw.astype(f32)
+        ccc = cc_raw.astype(f32)
+        pc = jnp.cumsum(ac, axis=1)  # [B,C,H]
+        tot = pc[:, -1]  # [B,H]
+        # cross: y_i += (C_i exp(pc_i)) @ S_in   (state S includes decay to i)
+        c_dec = ccc * jnp.exp(pc)[..., None]  # [B,C,H,Dst]
+        cross = jnp.einsum("bchs,bhsd->bchd", c_dec, state)
+        # intra: y_i += sum_{j<=i} exp(pc_i - pc_j) (C_i.B_j) x_j
+        att = jnp.einsum("bchs,bdhs->bhcd", c_dec, bc * jnp.exp(-pc)[..., None])
+        idx = jnp.arange(chunk)
+        mask = (idx[:, None] >= idx[None, :]).astype(f32)  # includes diagonal
+        att = att * mask[None, None]
+        intra = jnp.einsum("bhcd,bdhe->bche", att, xc)
+        y_c = cross + intra
+        # state: S' = exp(tot) S + sum_j exp(tot - pc_j) B_j^T x_j
+        b_dec = bc * jnp.exp(tot[:, None] - pc)[..., None]
+        state = jnp.exp(tot)[..., None, None] * state + jnp.einsum(
+            "bchs,bchd->bhsd", b_dec, xc
+        )
+        return state, y_c
+
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (xx, aa, bb, cc))
+    final_state, ys = jax.lax.scan(chunk_step, s0, inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, dh)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_step(
+    x: jnp.ndarray,  # [B, H, Dh]
+    a: jnp.ndarray,  # [B, H] log decay
+    bvec: jnp.ndarray,  # [B, H, Dst]
+    cvec: jnp.ndarray,  # [B, H, Dst]
+    state: jnp.ndarray,  # [B, H, Dst, Dh]
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token SSD recurrence (decode path)."""
+    f32 = jnp.float32
+    xf, af, bf, cf = (t.astype(f32) for t in (x, a, bvec, cvec))
+    new_state = jnp.exp(af)[..., None, None] * state + bf[..., :, None] * xf[..., None, :]
+    y = jnp.einsum("bhs,bhsd->bhd", cf, new_state)
+    return y.astype(x.dtype), new_state

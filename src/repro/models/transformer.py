@@ -1,0 +1,554 @@
+"""Model assembly for all assigned architecture families.
+
+Families (config.family):
+  dense   — llama3.2-1b / yi-34b / phi3-medium-14b / command-r-35b (GQA,
+            RoPE, SwiGLU, RMSNorm, no biases)
+  moe     — mixtral-8x22b (8e top-2, SWA) / kimi-k2 (384e top-8 + shared)
+  vlm     — qwen2-vl-2b backbone (M-RoPE; patch embeddings are stub inputs)
+  ssm     — rwkv6-1.6b (Finch time-mix + channel-mix; attention-free)
+  hybrid  — zamba2-7b (mamba2 SSD blocks + one shared GQA block every N)
+  audio   — whisper-medium (enc-dec; mel frontend is a stub input)
+
+Layers are `lax.scan`ned with stacked params so the HLO contains ONE layer
+body regardless of depth (kimi-k2: 61 layers, 384 experts — unrolled HLO
+would be unlowerable).  Each param carries logical axes for the rule-based
+sharding in distributed/sharding.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention_decode, attention_train
+from .common import (
+    ModelConfig,
+    ParamStore,
+    apply_mrope,
+    apply_rope,
+    cross_entropy_loss,
+    layer_norm,
+    rms_norm,
+    shard,
+)
+from .ffn import moe_layer, moe_layer_ep, swiglu
+from .ssm import rwkv6_chunked, rwkv6_step, ssd_chunked, ssd_step
+
+__all__ = ["init_params", "forward", "loss_fn", "Cache"]
+
+Cache = dict[str, jnp.ndarray]
+
+_RWKV_W_MIN = 0.05  # decay floor — keeps chunked exp() inside f32 (ssm.py)
+_SSD_LOGA_MIN = -6.0
+
+
+# ===================================================================== #
+# Parameter init
+# ===================================================================== #
+def init_params(cfg: ModelConfig, key: jax.Array) -> tuple[dict, dict]:
+    """Returns (params, logical_axes) pytrees."""
+    st = ParamStore(key, dtype=cfg.dtype)
+    d, v = cfg.d_model, cfg.vocab
+    L = cfg.n_layers
+
+    st.param("embed", (v, d), ("vocab", "d_model"), scale=0.02)
+    if not cfg.tie_embeddings:
+        st.param("lm_head", (d, v), ("d_model", "vocab"))
+    st.param("final_norm", (d,), ("d_model",), init="ones")
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        _init_decoder_stack(st, cfg, "layers", L)
+    elif cfg.family == "ssm":
+        _init_rwkv_stack(st, cfg, L)
+    elif cfg.family == "hybrid":
+        _init_zamba_stack(st, cfg, L)
+    elif cfg.family == "audio":
+        _init_whisper(st, cfg)
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    return st.params, st.axes
+
+
+def _init_attn(st: ParamStore, cfg: ModelConfig, pfx: str, L: int, bias: bool = False):
+    d = cfg.d_model
+    st.param(f"{pfx}.attn_norm", (L, d), ("layers", "d_model"), init="ones")
+    st.param(f"{pfx}.wq", (L, d, cfg.q_dim), ("layers", "d_model", "heads"))
+    st.param(f"{pfx}.wk", (L, d, cfg.kv_dim), ("layers", "d_model", "kv_heads"))
+    st.param(f"{pfx}.wv", (L, d, cfg.kv_dim), ("layers", "d_model", "kv_heads"))
+    st.param(f"{pfx}.wo", (L, cfg.q_dim, d), ("layers", "heads", "d_model"))
+    if bias:
+        st.param(f"{pfx}.bq", (L, cfg.q_dim), ("layers", "heads"), init="zeros")
+        st.param(f"{pfx}.bk", (L, cfg.kv_dim), ("layers", "kv_heads"), init="zeros")
+        st.param(f"{pfx}.bv", (L, cfg.kv_dim), ("layers", "kv_heads"), init="zeros")
+
+
+def _init_decoder_stack(st: ParamStore, cfg: ModelConfig, pfx: str, L: int):
+    d = cfg.d_model
+    _init_attn(st, cfg, pfx, L, bias=cfg.m_rope)  # qwen2-vl uses qkv biases
+    st.param(f"{pfx}.ffn_norm", (L, d), ("layers", "d_model"), init="ones")
+    if cfg.n_experts > 0:
+        f = cfg.expert_ff
+        st.param(f"{pfx}.router", (L, d, cfg.n_experts), ("layers", "d_model", "experts"))
+        st.param(f"{pfx}.moe_wi_gate", (L, cfg.n_experts, d, f), ("layers", "experts", "d_model", "d_ff"))
+        st.param(f"{pfx}.moe_wi_up", (L, cfg.n_experts, d, f), ("layers", "experts", "d_model", "d_ff"))
+        st.param(f"{pfx}.moe_wo", (L, cfg.n_experts, f, d), ("layers", "experts", "d_ff", "d_model"))
+        if cfg.n_shared_experts > 0:
+            fs = cfg.expert_ff * cfg.n_shared_experts
+            st.param(f"{pfx}.shared.wi_gate", (L, d, fs), ("layers", "d_model", "d_ff"))
+            st.param(f"{pfx}.shared.wi_up", (L, d, fs), ("layers", "d_model", "d_ff"))
+            st.param(f"{pfx}.shared.wo", (L, fs, d), ("layers", "d_ff", "d_model"))
+    else:
+        st.param(f"{pfx}.wi_gate", (L, d, cfg.d_ff), ("layers", "d_model", "d_ff"))
+        st.param(f"{pfx}.wi_up", (L, d, cfg.d_ff), ("layers", "d_model", "d_ff"))
+        st.param(f"{pfx}.wo_ffn", (L, cfg.d_ff, d), ("layers", "d_ff", "d_model"))
+
+
+def _init_rwkv_stack(st: ParamStore, cfg: ModelConfig, L: int):
+    d, f = cfg.d_model, cfg.d_ff
+    lora = max(32, d // 32)
+    st.param("layers.tm_norm", (L, d), ("layers", "d_model"), init="ones")
+    for nm in ("mu_r", "mu_k", "mu_v", "mu_w", "mu_g"):
+        st.param(f"layers.{nm}", (L, d), ("layers", "d_model"), init="uniform", scale=0.5)
+    for nm in ("wr", "wk", "wv", "wg"):
+        st.param(f"layers.{nm}", (L, d, d), ("layers", "d_model", "heads"))
+    st.param("layers.w_base", (L, d), ("layers", "d_model"), init="zeros")
+    st.param("layers.w_lora_a", (L, d, lora), ("layers", "d_model", None))
+    st.param("layers.w_lora_b", (L, lora, d), ("layers", None, "d_model"), init="zeros")
+    st.param("layers.bonus_u", (L, d), ("layers", "d_model"), init="uniform", scale=0.3)
+    st.param("layers.ln_x", (L, d), ("layers", "d_model"), init="ones")
+    st.param("layers.wo", (L, d, d), ("layers", "heads", "d_model"))
+    st.param("layers.cm_norm", (L, d), ("layers", "d_model"), init="ones")
+    st.param("layers.cm_mu_k", (L, d), ("layers", "d_model"), init="uniform", scale=0.5)
+    st.param("layers.cm_mu_r", (L, d), ("layers", "d_model"), init="uniform", scale=0.5)
+    st.param("layers.cm_wk", (L, d, f), ("layers", "d_model", "d_ff"))
+    st.param("layers.cm_wv", (L, f, d), ("layers", "d_ff", "d_model"))
+    st.param("layers.cm_wr", (L, d, d), ("layers", "d_model", "heads"))
+
+
+def _init_zamba_stack(st: ParamStore, cfg: ModelConfig, L: int):
+    d = cfg.d_model
+    d_inner = 2 * d
+    n_h = d_inner // 64  # mamba2 head dim 64
+    dst = cfg.ssm_state
+    st.param("layers.norm", (L, d), ("layers", "d_model"), init="ones")
+    st.param("layers.in_proj", (L, d, 2 * d_inner), ("layers", "d_model", "heads"))
+    st.param("layers.bc_proj", (L, d, 2 * dst), ("layers", "d_model", None))
+    st.param("layers.dt_proj", (L, d, n_h), ("layers", "d_model", None))
+    st.param("layers.dt_bias", (L, n_h), ("layers", None), init="zeros")
+    st.param("layers.a_log", (L, n_h), ("layers", None), init="uniform", scale=1.0)
+    st.param("layers.d_skip", (L, n_h), ("layers", None), init="ones")
+    st.param("layers.out_proj", (L, d_inner, d), ("layers", "heads", "d_model"))
+    # NOTE: zamba2 mamba layers have NO per-layer MLP — the only MLP lives
+    # in the shared attention block below (that is what keeps 81 layers at
+    # ~7B params).
+    # shared attention block (ONE set of params, applied every N layers)
+    cfg1 = dataclasses.replace(cfg)
+    _init_attn(st, cfg1, "shared_attn", 1)
+    st.param("shared_attn.ffn_norm", (1, d), ("layers", "d_model"), init="ones")
+    st.param("shared_attn.wi_gate", (1, d, cfg.d_ff), ("layers", "d_model", "d_ff"))
+    st.param("shared_attn.wi_up", (1, d, cfg.d_ff), ("layers", "d_model", "d_ff"))
+    st.param("shared_attn.wo_ffn", (1, cfg.d_ff, d), ("layers", "d_ff", "d_model"))
+
+
+def _init_whisper(st: ParamStore, cfg: ModelConfig):
+    d = cfg.d_model
+    Le = cfg.enc_layers or cfg.n_layers
+    Ld = cfg.n_layers
+    # encoder (frames arrive pre-embedded: conv frontend is a stub input)
+    st.param("enc.pos_scale", (1,), (None,), init="ones")
+    _init_attn(st, cfg, "enc", Le)
+    st.param("enc.ffn_norm", (Le, d), ("layers", "d_model"), init="ones")
+    st.param("enc.wi", (Le, d, cfg.d_ff), ("layers", "d_model", "d_ff"))
+    st.param("enc.wo_ffn", (Le, cfg.d_ff, d), ("layers", "d_ff", "d_model"))
+    st.param("enc.final_norm", (d,), ("d_model",), init="ones")
+    # decoder: self-attn + cross-attn + mlp
+    _init_attn(st, cfg, "dec", Ld)
+    st.param("dec.xattn_norm", (Ld, d), ("layers", "d_model"), init="ones")
+    st.param("dec.xq", (Ld, d, cfg.q_dim), ("layers", "d_model", "heads"))
+    st.param("dec.xk", (Ld, d, cfg.kv_dim), ("layers", "d_model", "kv_heads"))
+    st.param("dec.xv", (Ld, d, cfg.kv_dim), ("layers", "d_model", "kv_heads"))
+    st.param("dec.xo", (Ld, cfg.q_dim, d), ("layers", "heads", "d_model"))
+    st.param("dec.ffn_norm", (Ld, d), ("layers", "d_model"), init="ones")
+    st.param("dec.wi", (Ld, d, cfg.d_ff), ("layers", "d_model", "d_ff"))
+    st.param("dec.wo_ffn", (Ld, cfg.d_ff, d), ("layers", "d_ff", "d_model"))
+
+
+# ===================================================================== #
+# Blocks (train path)
+# ===================================================================== #
+def _attn_block(
+    lp: dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    positions_3d: jnp.ndarray | None,
+    *,
+    window: int | None,
+) -> jnp.ndarray:
+    b, s, d = x.shape
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    q = h @ lp["wq"]
+    k = h @ lp["wk"]
+    v = h @ lp["wv"]
+    if "bq" in lp:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim_)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim_)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim_)
+    if cfg.m_rope and positions_3d is not None:
+        q = apply_mrope(q, positions_3d, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions_3d, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    o = attention_train(
+        q, k, v, causal=True, window=window,
+        impl=cfg.attn_impl, q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+    )
+    return x + o.reshape(b, s, cfg.q_dim) @ lp["wo"], (k, v)
+
+
+def _ffn_block(lp: dict, x: jnp.ndarray, cfg: ModelConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    h = rms_norm(x, lp["ffn_norm"], cfg.norm_eps)
+    if cfg.n_experts > 0:
+        moe_params = {
+            "router": lp["router"],
+            "wi_gate": lp["moe_wi_gate"],
+            "wi_up": lp["moe_wi_up"],
+            "wo": lp["moe_wo"],
+        }
+        if cfg.n_shared_experts > 0:
+            moe_params["shared"] = {
+                "wi_gate": lp["shared"]["wi_gate"],
+                "wi_up": lp["shared"]["wi_up"],
+                "wo": lp["shared"]["wo"],
+            }
+        impl = moe_layer_ep if cfg.moe_impl == "shard_map_ep" else moe_layer
+        o, aux = impl(moe_params, h, cfg)
+        return x + o, aux
+    o = swiglu({"wi_gate": lp["wi_gate"], "wi_up": lp["wi_up"], "wo": lp["wo_ffn"]}, h)
+    return x + o, jnp.zeros((), jnp.float32)
+
+
+def _decoder_layers(
+    params: dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    positions_3d: jnp.ndarray | None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    window = cfg.swa_window if cfg.attention == "swa" else None
+
+    def body(carry, lp):
+        h, aux = carry
+        h = shard(h, ("batch", "seq_sp", "d_model"))
+        h, _kv = _attn_block(lp, h, cfg, positions, positions_3d, window=window)
+        h, a = _ffn_block(lp, h, cfg)
+        return (h, aux + a), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["layers"])
+    return x, aux
+
+
+# ---------------- RWKV6 ---------------- #
+def _rwkv_time_mix(lp, x, x_prev, cfg, state=None):
+    """x [B,S,D]; x_prev [B,D] last token of previous segment.
+    Returns (out, new_shift, final_state)."""
+    b, s, d = x.shape
+    n_h = cfg.n_heads
+    dh = d // n_h
+    xs = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)  # shifted
+
+    def mix(mu):
+        return x + (xs - x) * mu
+
+    r = mix(lp["mu_r"]) @ lp["wr"]
+    k = mix(lp["mu_k"]) @ lp["wk"]
+    v = mix(lp["mu_v"]) @ lp["wv"]
+    g = jax.nn.silu((mix(lp["mu_g"]) @ lp["wg"]).astype(jnp.float32)).astype(x.dtype)
+    mw = mix(lp["mu_w"])
+    w_raw = lp["w_base"] + jnp.tanh(mw @ lp["w_lora_a"]) @ lp["w_lora_b"]
+    w = jnp.clip(
+        jnp.exp(-jax.nn.softplus(-w_raw.astype(jnp.float32))), _RWKV_W_MIN, 0.9995
+    )
+    hs = lambda t: t.reshape(b, s, n_h, dh)
+    u = lp["bonus_u"].reshape(n_h, dh)
+    if s == 1 and state is not None:
+        o, new_state = rwkv6_step(
+            hs(r)[:, 0], hs(k)[:, 0], hs(v)[:, 0], w.reshape(b, s, n_h, dh)[:, 0], u, state
+        )
+        o = o[:, None]
+    else:
+        o, new_state = rwkv6_chunked(
+            hs(r), hs(k), hs(v), w.reshape(b, s, n_h, dh), u,
+            chunk=_pick_chunk(s), initial_state=state,
+        )
+    o = o.reshape(b, s, d)
+    o = rms_norm(o, lp["ln_x"], cfg.norm_eps) * g
+    return o @ lp["wo"], x[:, -1], new_state
+
+
+def _rwkv_channel_mix(lp, x, x_prev):
+    xs = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    mk = x + (xs - x) * lp["cm_mu_k"]
+    mr = x + (xs - x) * lp["cm_mu_r"]
+    k = jnp.square(jax.nn.relu((mk @ lp["cm_wk"]).astype(jnp.float32))).astype(x.dtype)
+    return jax.nn.sigmoid((mr @ lp["cm_wr"]).astype(jnp.float32)).astype(x.dtype) * (
+        k @ lp["cm_wv"]
+    ), x[:, -1]
+
+
+def _pick_chunk(s: int) -> int:
+    for c in (32, 16, 8, 4, 2, 1):
+        if s % c == 0:
+            return c
+    return 1
+
+
+def _rwkv_layers(params, x, cfg, cache: Cache | None):
+    """Scan over RWKV layers; returns (x, aux, new_cache)."""
+    b, s, d = x.shape
+    L = cfg.n_layers
+    zeros_shift = jnp.zeros((L, b, d), x.dtype)
+    tm_shift = cache["tm_shift"] if cache else zeros_shift
+    cm_shift = cache["cm_shift"] if cache else zeros_shift
+    wkv_state = (
+        cache["wkv"] if cache
+        else jnp.zeros((L, b, cfg.n_heads, d // cfg.n_heads, d // cfg.n_heads), jnp.float32)
+    )
+
+    def body(h, layer_in):
+        lp, tm_prev, cm_prev, st0 = layer_in
+        h = shard(h, ("batch", "seq_sp", "d_model"))
+        a = rms_norm(h, lp["tm_norm"], cfg.norm_eps)
+        o, tm_new, st1 = _rwkv_time_mix(lp, a, tm_prev, cfg, st0)
+        h = h + o
+        c = rms_norm(h, lp["cm_norm"], cfg.norm_eps)
+        o2, cm_new = _rwkv_channel_mix(lp, c, cm_prev)
+        h = h + o2
+        return h, (tm_new, cm_new, st1)
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    x, (tm_new, cm_new, st_new) = jax.lax.scan(
+        body, x, (params["layers"], tm_shift, cm_shift, wkv_state)
+    )
+    new_cache = {"tm_shift": tm_new, "cm_shift": cm_new, "wkv": st_new}
+    return x, jnp.zeros((), jnp.float32), new_cache
+
+
+# ---------------- zamba2 (mamba2 + shared attn) ---------------- #
+def _mamba2_mixer(lp, x, cfg, state=None):
+    """x [B,S,D] -> (y [B,S,D], final_state [B,H,Dst,64])."""
+    b, s, d = x.shape
+    d_inner = 2 * d
+    n_h = d_inner // 64
+    dst = cfg.ssm_state
+    zx = x @ lp["in_proj"]  # [B,S,2*d_inner]
+    z, xin = jnp.split(zx, 2, axis=-1)
+    bc = x @ lp["bc_proj"]  # [B,S,2*dst]
+    bmat, cmat = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus((x @ lp["dt_proj"] + lp["dt_bias"]).astype(jnp.float32))  # [B,S,H]
+    a_log = -jnp.exp(lp["a_log"].astype(jnp.float32))  # [H] negative
+    loga = jnp.clip(dt * a_log, _SSD_LOGA_MIN, 0.0)  # [B,S,H]
+    xh = xin.reshape(b, s, n_h, 64) * dt[..., None].astype(x.dtype)
+    bmat_h = jnp.broadcast_to(bmat[:, :, None, :], (b, s, n_h, dst))
+    cmat_h = jnp.broadcast_to(cmat[:, :, None, :], (b, s, n_h, dst))
+    if s == 1 and state is not None:
+        y, new_state = ssd_step(xh[:, 0], loga[:, 0], bmat_h[:, 0], cmat_h[:, 0], state)
+        y = y[:, None]
+    else:
+        y, new_state = ssd_chunked(
+            xh, loga, bmat_h, cmat_h, chunk=_pick_chunk_ssd(s), initial_state=state
+        )
+    y = y + xin.reshape(b, s, n_h, 64) * lp["d_skip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(b, s, d_inner) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return y @ lp["out_proj"], new_state
+
+
+def _pick_chunk_ssd(s: int) -> int:
+    for c in (64, 32, 16, 8, 4, 2, 1):
+        if s % c == 0:
+            return c
+    return 1
+
+
+def _shared_attn_apply(params, h, cfg, positions, kv_write=None):
+    """Apply the shared attention + MLP block (zamba2).  kv_write is used
+    by the serve path; training recomputes attention in-layer."""
+    sp = jax.tree.map(lambda t: t[0], params["shared_attn"])
+    h2, kv = _attn_block(sp, h, cfg, positions, None, window=None)
+    f = rms_norm(h2, sp["ffn_norm"], cfg.norm_eps)
+    o = swiglu({"wi_gate": sp["wi_gate"], "wi_up": sp["wi_up"], "wo": sp["wo_ffn"]}, f)
+    return h2 + o, kv
+
+
+def _zamba_layers(params, x, cfg, positions, cache: Cache | None):
+    b, s, d = x.shape
+    L = cfg.n_layers
+    every = max(cfg.hybrid_attn_every, 1)
+    d_inner = 2 * d
+    n_h = d_inner // 64
+    ssm_state = (
+        cache["ssm"] if cache
+        else jnp.zeros((L, b, n_h, cfg.ssm_state, 64), jnp.float32)
+    )
+
+    def body(h, layer_in):
+        lp, st0 = layer_in
+        h = shard(h, ("batch", "seq_sp", "d_model"))
+        a = rms_norm(h, lp["norm"], cfg.norm_eps)
+        o, st1 = _mamba2_mixer(lp, a, cfg, st0)
+        h = h + o
+        return h, st1
+
+    body = jax.checkpoint(body, prevent_cse=False)
+
+    # Scan mamba blocks in groups of `every`; apply the shared attention
+    # block between groups (the shared block is NOT scanned — one param set).
+    n_groups = (L + every - 1) // every
+    new_states = []
+    idx = 0
+    for g in range(n_groups):
+        span = min(every, L - idx)
+        grp = jax.tree.map(lambda t: t[idx : idx + span], params["layers"])
+        st_grp = ssm_state[idx : idx + span]
+        x, st_new = jax.lax.scan(body, x, (grp, st_grp))
+        new_states.append(st_new)
+        x, _ = _shared_attn_apply(params, x, cfg, positions)
+        idx += span
+    new_cache = {"ssm": jnp.concatenate(new_states, axis=0)}
+    return x, jnp.zeros((), jnp.float32), new_cache
+
+
+# ---------------- whisper ---------------- #
+def _sinusoidal(s: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def _whisper_encoder(params, frames, cfg):
+    """frames: [B, S_enc, D] pre-embedded (conv frontend stub)."""
+    b, s, d = frames.shape
+    x = frames + (_sinusoidal(s, d) * params["enc"]["pos_scale"]).astype(frames.dtype)
+
+    def body(h, lp):
+        h2 = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        q = (h2 @ lp["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim_)
+        k = (h2 @ lp["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim_)
+        v = (h2 @ lp["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim_)
+        o = attention_train(q, k, v, causal=False)
+        h = h + o.reshape(b, s, cfg.q_dim) @ lp["wo"]
+        f = rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+        f = jax.nn.gelu((f @ lp["wi"]).astype(jnp.float32)).astype(h.dtype)
+        return h + f @ lp["wo_ffn"], None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_layers_view"])
+    return rms_norm(x, params["enc"]["final_norm"], cfg.norm_eps)
+
+
+def _whisper_decoder(params, x, enc_out, cfg, positions):
+    b, s, d = x.shape
+    be, se, _ = enc_out.shape
+
+    def body(h, lp):
+        h2 = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        q = (h2 @ lp["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim_)
+        k = (h2 @ lp["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim_)
+        v = (h2 @ lp["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim_)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        o = attention_train(q, k, v, causal=True)
+        h = h + o.reshape(b, s, cfg.q_dim) @ lp["wo"]
+        # cross attention
+        h2 = rms_norm(h, lp["xattn_norm"], cfg.norm_eps)
+        q = (h2 @ lp["xq"]).reshape(b, s, cfg.n_heads, cfg.head_dim_)
+        k = (enc_out @ lp["xk"]).reshape(be, se, cfg.n_kv_heads, cfg.head_dim_)
+        v = (enc_out @ lp["xv"]).reshape(be, se, cfg.n_kv_heads, cfg.head_dim_)
+        o = attention_train(q, k, v, causal=False)
+        h = h + o.reshape(b, s, cfg.q_dim) @ lp["xo"]
+        f = rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+        f = jax.nn.gelu((f @ lp["wi"]).astype(jnp.float32)).astype(h.dtype)
+        return h + f @ lp["wo_ffn"], None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec_layers_view"])
+    return x
+
+
+def _whisper_views(params: dict) -> dict:
+    """Group per-layer whisper params into scan-able stacked trees."""
+    enc_keys = ("attn_norm", "wq", "wk", "wv", "wo", "ffn_norm", "wi", "wo_ffn")
+    dec_keys = enc_keys + ("xattn_norm", "xq", "xk", "xv", "xo")
+    p = dict(params)
+    p["enc_layers_view"] = {k: params["enc"][k] for k in enc_keys}
+    p["dec_layers_view"] = {k: params["dec"][k] for k in dec_keys}
+    return p
+
+
+# ===================================================================== #
+# Forward + loss
+# ===================================================================== #
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    batch: dict[str, jnp.ndarray],
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Training/eval forward: returns (logits [B,S,V], aux_loss []).
+
+    batch keys: "tokens" [B,S] always; family extras:
+      vlm:   "patch_embeds" [B,P,D], "positions_3d" [3,B,S+P]
+      audio: "frames" [B,S_enc,D] (stub mel embeddings), tokens are the
+             decoder side.
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = shard(x, ("batch", "seq_sp", "d_model"))
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    positions_3d = batch.get("positions_3d")
+
+    if cfg.family in ("dense", "moe"):
+        x, aux = _decoder_layers(params, x, cfg, positions, None)
+    elif cfg.family == "vlm":
+        patches = batch["patch_embeds"].astype(cfg.dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+        p = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(p)[None], (b, p))
+        x, aux = _decoder_layers(params, x, cfg, positions, positions_3d)
+        x = x[:, patches.shape[1] :]
+    elif cfg.family == "ssm":
+        x, aux, _ = _rwkv_layers(params, x, cfg, None)
+    elif cfg.family == "hybrid":
+        x, aux, _ = _zamba_layers(params, x, cfg, positions, None)
+    elif cfg.family == "audio":
+        p = _whisper_views(params)
+        enc = _whisper_encoder(p, batch["frames"].astype(cfg.dtype), cfg)
+        x = _whisper_decoder(p, x, enc, cfg, positions)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    if cfg.logit_softcap > 0:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    logits = shard(logits, ("batch", "seq_sp", "vocab"))
+    return logits, aux
+
+
+def loss_fn(
+    params: dict, cfg: ModelConfig, batch: dict[str, jnp.ndarray], aux_weight: float = 0.01
+) -> tuple[jnp.ndarray, dict]:
+    logits, aux = forward(params, cfg, batch)
+    loss = cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux_loss": aux, "total": total}

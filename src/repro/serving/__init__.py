@@ -1,0 +1,9 @@
+"""Serving substrate: DRS-scheduled prefill/decode disaggregation."""
+
+from .pipeline import ServingModel, StageRates, rates_from_dryrun
+from .router import ServingReport, ServingSimulation
+
+__all__ = [
+    "ServingModel", "StageRates", "rates_from_dryrun",
+    "ServingReport", "ServingSimulation",
+]

@@ -1,0 +1,138 @@
+"""LLM serving as a DRS-scheduled operator network (DESIGN.md §2).
+
+The serving pipeline has two device-side operators — **prefill** and
+**decode** — plus host-side tokenize/detokenize.  Autoregressive decoding
+is a Jackson self-loop: a request that just produced a token returns to
+the decode queue with probability p = 1 - 1/E[output_len], so the traffic
+equations automatically give lambda_decode = lambda_0 * E[output_len].
+DRS Program (4)/(6) then splits chips between the prefill and decode
+groups — the principled version of the disaggregated-serving capacity
+split (DistServe et al. tune this by hand).
+
+Service rates come from the dry-run roofline (model-based prior; the
+measurer corrects online):  a chip group of size k running the compiled
+step whose roofline bound is T_bound(chips_0) has
+
+    mu(k) ~ batch_unit / (T_bound * chips_0 / k)        (work-conserving)
+
+i.e. replica/group scaling per OperatorSpec.scaling (see core/jackson.py).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass
+from pathlib import Path
+
+import numpy as np
+
+from ..core.allocator import AllocationResult, allocate
+from ..core.jackson import OperatorSpec, Topology
+
+__all__ = ["StageRates", "ServingModel", "rates_from_dryrun"]
+
+
+@dataclass(frozen=True)
+class StageRates:
+    """Per-chip service rates (requests/sec/chip) for the two stages."""
+
+    prefill_per_chip: float  # prompts/sec per chip
+    decode_per_chip: float  # tokens/sec per chip (one decode visit = 1 token)
+
+
+def rates_from_dryrun(
+    arch: str,
+    results_dir: str | Path,
+    mesh: str = "pod16x16",
+) -> StageRates:
+    """Derive mu priors from the dry-run roofline records.
+
+    The bound time for the compiled step is max(compute, memory,
+    collective); the step processes `global_batch` requests (prefill) or
+    `global_batch` tokens (decode) on `chips` chips.
+    """
+    results_dir = Path(results_dir)
+
+    def load(shape):
+        p = results_dir / f"{arch}--{shape}--{mesh}.json"
+        rec = json.loads(p.read_text())
+        if rec.get("status") != "ok":
+            raise FileNotFoundError(f"no ok dry-run for {arch} x {shape}")
+        r = rec["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        return bound, rec
+
+    pre_bound, pre = load("prefill_32k")
+    dec_bound, dec = load("decode_32k")
+    pre_batch = 32  # requests per compiled prefill step
+    dec_batch = 128  # tokens per compiled decode step
+    chips = pre["chips"]
+    return StageRates(
+        prefill_per_chip=pre_batch / (pre_bound * chips),
+        decode_per_chip=dec_batch / (dec_bound * chips),
+    )
+
+
+class ServingModel:
+    """Jackson model of the serving pipeline + DRS allocation calls."""
+
+    def __init__(
+        self,
+        rates: StageRates,
+        *,
+        mean_output_tokens: float = 64.0,
+        group_alpha: float = 0.01,
+        host_tokenize_rate: float = 2000.0,
+    ):
+        if mean_output_tokens < 1:
+            raise ValueError("mean_output_tokens must be >= 1")
+        self.rates = rates
+        self.mean_out = mean_output_tokens
+        self.group_alpha = group_alpha
+        self.host_rate = host_tokenize_rate
+
+    def topology(self, lam0: float) -> Topology:
+        """Operators: tokenize(host) -> prefill -> decode (self-loop) ->
+        detokenize(host).  Chip-group stages use "group" scaling (one gang
+        per stage; mu grows ~linearly with the group's chips, with an
+        efficiency rolloff alpha from the collective share)."""
+        p_loop = 1.0 - 1.0 / self.mean_out
+        ops = [
+            OperatorSpec("tokenize", mu=self.host_rate, scaling="replica"),
+            OperatorSpec(
+                "prefill", mu=self.rates.prefill_per_chip, scaling="group",
+                group_alpha=self.group_alpha,
+            ),
+            OperatorSpec(
+                "decode", mu=self.rates.decode_per_chip, scaling="group",
+                group_alpha=self.group_alpha,
+            ),
+            OperatorSpec("detokenize", mu=self.host_rate, scaling="replica"),
+        ]
+        routing = np.zeros((4, 4))
+        routing[0][1] = 1.0  # tokenize -> prefill
+        routing[1][2] = 1.0  # prefill -> decode (first token)
+        routing[2][2] = p_loop  # decode -> decode (next token)
+        routing[2][3] = 1.0 - p_loop  # decode -> detokenize (request done)
+        lam0_vec = np.array([lam0, 0.0, 0.0, 0.0])
+        return Topology(ops, lam0_vec, routing)
+
+    def plan(
+        self,
+        lam0: float,
+        *,
+        k_max: int | None = None,
+        t_max: float | None = None,
+    ) -> AllocationResult:
+        """DRS allocation for the pipeline (Program 4 and/or 6)."""
+        return allocate(self.topology(lam0), k_max=k_max, t_max=t_max)
+
+    def split(self, alloc: AllocationResult) -> dict[str, int]:
+        names = ["tokenize", "prefill", "decode", "detokenize"]
+        return dict(zip(names, alloc.k.tolist()))
+
+    def expected_latency(self, lam0: float, k: dict[str, int]) -> float:
+        top = self.topology(lam0)
+        kv = np.array([k["tokenize"], k["prefill"], k["decode"], k["detokenize"]])
+        return top.expected_sojourn(kv)

@@ -1,0 +1,127 @@
+"""Serving runtime: request router + continuous batching + DRS control.
+
+Runs in **simulated time** on the DES substrate (streaming/des.py) —
+the same queueing dynamics a real router sees, with service rates taken
+from the dry-run roofline — and exposes the DRS control loop end-to-end:
+requests arrive, the measurer estimates (lambda, mu), the scheduler
+rebalances chips between prefill and decode groups, latency recovers.
+
+benchmarks/bench_serving.py drives this to produce the DRS-vs-static
+comparison; examples/serve_drs.py is the narrative walkthrough.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.allocator import assign_processors
+from ..core.jackson import Topology
+from ..streaming.des import ArrivalProcess, NetworkSimulator, ServiceProcess, SimConfig
+from .pipeline import ServingModel
+
+__all__ = ["ServingSimulation", "ServingReport"]
+
+
+@dataclass
+class ServingReport:
+    mean_latency: float
+    p95_latency: float
+    completed: int
+    allocation: dict[str, int]
+    model_latency: float
+    sojourn_series: list = field(default_factory=list)
+
+    def as_dict(self) -> dict:
+        return {
+            "mean_latency": self.mean_latency,
+            "p95_latency": self.p95_latency,
+            "completed": self.completed,
+            "allocation": self.allocation,
+            "model_latency": self.model_latency,
+        }
+
+
+class ServingSimulation:
+    """DES-backed serving run under a fixed or DRS-chosen allocation."""
+
+    def __init__(
+        self,
+        model: ServingModel,
+        lam0: float,
+        *,
+        seed: int = 0,
+        horizon: float = 600.0,
+        warmup: float = 60.0,
+    ):
+        self.model = model
+        self.lam0 = lam0
+        self.seed = seed
+        self.horizon = horizon
+        self.warmup = warmup
+
+    def run(
+        self,
+        allocation: dict[str, int],
+        *,
+        rebalance_to: dict[str, int] | None = None,
+        rebalance_at: float | None = None,
+        arrival_kind: str = "exponential",
+    ) -> ServingReport:
+        top = self.model.topology(self.lam0)
+        k = np.array(
+            [allocation[n] for n in ("tokenize", "prefill", "decode", "detokenize")]
+        )
+        # group-scaled stages are modeled in the DES as single fast servers
+        # (M/M/1 at mu_eff) to mirror OperatorSpec.scaling="group".
+        services, k_eff = [], []
+        for i, op in enumerate(top.operators):
+            if op.scaling == "group":
+                eff = 1.0 / (1.0 + op.group_alpha * (int(k[i]) - 1))
+                services.append(ServiceProcess(rate=op.mu * int(k[i]) * eff))
+                k_eff.append(1)
+            else:
+                services.append(ServiceProcess(rate=op.mu))
+                k_eff.append(int(k[i]))
+        arrivals = [
+            ArrivalProcess(rate=float(top.lam0[i]), kind=arrival_kind)
+            for i in range(top.n)
+        ]
+        sim = NetworkSimulator(
+            top,
+            np.array(k_eff),
+            config=SimConfig(seed=self.seed, horizon=self.horizon, warmup=self.warmup),
+            arrivals=arrivals,
+            services=services,
+        )
+        if rebalance_to is not None and rebalance_at is not None:
+            k2 = np.array(
+                [rebalance_to[n] for n in ("tokenize", "prefill", "decode", "detokenize")]
+            )
+            k2_eff = []
+            for i, op in enumerate(top.operators):
+                k2_eff.append(1 if op.scaling == "group" else int(k2[i]))
+            # service-rate changes for the group stages
+            for i, op in enumerate(top.operators):
+                if op.scaling == "group":
+                    eff = 1.0 / (1.0 + op.group_alpha * (int(k2[i]) - 1))
+                    sim.schedule_rate_change(rebalance_at, i, op.mu * int(k2[i]) * eff)
+            sim.rebalance_at(rebalance_at, np.array(k2_eff), pause=1.0)
+        res = sim.run()
+        return ServingReport(
+            mean_latency=res.mean_sojourn,
+            p95_latency=res.p95_sojourn,
+            completed=res.completed,
+            allocation=dict(allocation),
+            model_latency=float(top.expected_sojourn(self._k_model(top, k))),
+            sojourn_series=res.sojourn_series,
+        )
+
+    @staticmethod
+    def _k_model(top: Topology, k: np.ndarray) -> np.ndarray:
+        return k
+
+    def drs_allocation(self, k_max: int) -> dict[str, int]:
+        alloc = assign_processors(self.model.topology(self.lam0), k_max)
+        return self.model.split(alloc)

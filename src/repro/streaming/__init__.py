@@ -1,0 +1,23 @@
+"""Streaming substrate: DES model-validation simulator + live JAX engine."""
+
+from .des import (
+    ArrivalProcess,
+    NetworkSimulator,
+    ServiceProcess,
+    SimConfig,
+    SimResult,
+    simulate_allocation,
+)
+from .engine import Operator, StreamEngine, StreamTuple
+
+__all__ = [
+    "ArrivalProcess",
+    "NetworkSimulator",
+    "ServiceProcess",
+    "SimConfig",
+    "SimResult",
+    "simulate_allocation",
+    "Operator",
+    "StreamEngine",
+    "StreamTuple",
+]

@@ -1,0 +1,1 @@
+"""The paper's two benchmark applications: VLD (SS V-A) and FPD (SS V-A)."""

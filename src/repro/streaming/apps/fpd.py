@@ -1,0 +1,213 @@
+"""Frequent pattern detection (FPD) — the paper's second application (§V-A).
+
+Topology (paper Fig. 5): two spouts (window-enter "+" and window-leave "-")
+-> pattern generator -> detector (with a SELF-LOOP for cross-instance
+state-change notifications) -> reporter.
+
+Implementation: transactions are itemsets over a vocabulary of
+``n_items <= 32`` items, packed into a uint32 **bitmask**.  A pattern
+(itemset) P is contained in transaction T iff ``P & T == P`` — support
+counting over the sliding window is a vectorised AND+compare in JAX.  A
+**maximal frequent pattern** (MFP, paper's definition) is a pattern whose
+occurrence count >= threshold while every superset's count < threshold.
+
+The detector's self-loop is semantically faithful: when a pattern's MFP
+state flips, a notification tuple is re-injected into the detector (the
+paper uses this to propagate state changes across the detector's sharded
+instances); the loop leaks — notifications do not spawn further
+notifications — so the Jackson stability condition holds.
+"""
+
+from __future__ import annotations
+
+import functools
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FPDConfig",
+    "pack_itemset",
+    "candidate_patterns",
+    "support_counts",
+    "maximal_frequent",
+    "SlidingWindowState",
+    "build_fpd_operators",
+]
+
+
+@dataclass(frozen=True)
+class FPDConfig:
+    n_items: int = 16  # vocabulary (<= 32 for uint32 packing)
+    max_pattern_size: int = 3  # candidate itemsets up to this many items
+    window: int = 512  # sliding window size in transactions (paper: 50000)
+    support_threshold: int = 32  # occurrence count for "frequent"
+    items_per_txn_lo: int = 2
+    items_per_txn_hi: int = 6
+
+
+def pack_itemset(items: list[int] | tuple[int, ...]) -> int:
+    mask = 0
+    for it in items:
+        mask |= 1 << it
+    return mask
+
+
+@functools.lru_cache(maxsize=8)
+def _all_patterns(n_items: int, max_size: int) -> np.ndarray:
+    """All candidate patterns (bitmasks) of size 1..max_size, sorted."""
+    pats = []
+    for size in range(1, max_size + 1):
+        for combo in itertools.combinations(range(n_items), size):
+            pats.append(pack_itemset(combo))
+    return np.asarray(sorted(pats), dtype=np.uint32)
+
+
+def candidate_patterns(transaction_mask: int, cfg: FPDConfig) -> np.ndarray:
+    """Patterns generated from one transaction: all sub-itemsets up to
+    max_pattern_size (the paper's pattern-generator bolt; 'exponential
+    number of possible non-empty combinations')."""
+    items = [i for i in range(cfg.n_items) if transaction_mask >> i & 1]
+    pats = []
+    for size in range(1, min(cfg.max_pattern_size, len(items)) + 1):
+        for combo in itertools.combinations(items, size):
+            pats.append(pack_itemset(combo))
+    return np.asarray(pats, dtype=np.uint32)
+
+
+@jax.jit
+def support_counts(patterns: jnp.ndarray, window_masks: jnp.ndarray) -> jnp.ndarray:
+    """Occurrence count of each pattern in the window.
+
+    patterns: uint32 [P]; window_masks: uint32 [W] -> int32 [P].
+    P is contained in T iff P & T == P.
+    """
+    contained = (window_masks[None, :] & patterns[:, None]) == patterns[:, None]
+    return contained.sum(axis=1).astype(jnp.int32)
+
+
+@jax.jit
+def _superset_matrix(patterns: jnp.ndarray) -> jnp.ndarray:
+    """is_superset[i, j] = True iff pattern j is a strict superset of i."""
+    sub = (patterns[None, :] & patterns[:, None]) == patterns[:, None]
+    return sub & (patterns[None, :] != patterns[:, None])
+
+
+@jax.jit
+def maximal_frequent(
+    patterns: jnp.ndarray, counts: jnp.ndarray, threshold: jnp.ndarray
+) -> jnp.ndarray:
+    """MFP mask: frequent and no frequent strict superset (paper's (a)+(b))."""
+    frequent = counts >= threshold
+    sup = _superset_matrix(patterns)
+    has_freq_superset = (sup & frequent[None, :]).any(axis=1)
+    return frequent & ~has_freq_superset
+
+
+@dataclass
+class SlidingWindowState:
+    """Detector state: window contents + per-pattern counts + MFP flags."""
+
+    cfg: FPDConfig
+    patterns: np.ndarray = field(default=None)
+    window: deque = field(default_factory=deque)
+    counts: np.ndarray = field(default=None)
+    mfp: np.ndarray = field(default=None)
+
+    def __post_init__(self):
+        if self.patterns is None:
+            self.patterns = _all_patterns(self.cfg.n_items, self.cfg.max_pattern_size)
+        if self.counts is None:
+            self.counts = np.zeros(len(self.patterns), dtype=np.int64)
+        if self.mfp is None:
+            self.mfp = np.zeros(len(self.patterns), dtype=bool)
+
+    def _delta(self, mask: int, sign: int) -> None:
+        contained = (self.patterns & np.uint32(mask)) == self.patterns
+        self.counts[contained] += sign
+
+    def apply(self, mask: int, entering: bool) -> list[int]:
+        """Apply a +/- event; returns indices of patterns whose MFP state
+        changed (these become self-loop notifications)."""
+        if entering:
+            self.window.append(mask)
+            self._delta(mask, +1)
+            evicted = None
+            if len(self.window) > self.cfg.window:
+                evicted = self.window.popleft()
+                self._delta(evicted, -1)
+        else:
+            if self.window:
+                try:
+                    self.window.remove(mask)
+                    self._delta(mask, -1)
+                except ValueError:
+                    pass
+        new_mfp = np.asarray(
+            maximal_frequent(
+                jnp.asarray(self.patterns),
+                jnp.asarray(self.counts.astype(np.int32)),
+                jnp.int32(self.cfg.support_threshold),
+            )
+        )
+        changed = np.nonzero(new_mfp != self.mfp)[0]
+        self.mfp = new_mfp
+        return changed.tolist()
+
+    def current_mfps(self) -> np.ndarray:
+        return self.patterns[self.mfp]
+
+
+def random_transaction(cfg: FPDConfig, rng: np.random.Generator) -> int:
+    """Skewed item popularity (Zipf-ish) so real frequent patterns emerge."""
+    n = rng.integers(cfg.items_per_txn_lo, cfg.items_per_txn_hi + 1)
+    probs = 1.0 / np.arange(1, cfg.n_items + 1)
+    probs /= probs.sum()
+    items = rng.choice(cfg.n_items, size=min(n, cfg.n_items), replace=False, p=probs)
+    return pack_itemset(items.tolist())
+
+
+def build_fpd_operators(cfg: FPDConfig):
+    """Operators for the StreamEngine: generate -> detect (self-loop) -> report.
+
+    Payloads: (mask, entering) -> ("pattern-event", ...) -> notifications.
+    """
+    from ..engine import Operator
+
+    state = SlidingWindowState(cfg)
+    reports: list[tuple[int, bool]] = []
+    state_lock = __import__("threading").Lock()
+
+    def generate_fn(payload):
+        mask, entering = payload
+        # The generator bolt expands candidates (cost ~ 2^|txn|); the
+        # expansion result is folded into the event for the detector.
+        cands = candidate_patterns(mask, cfg)
+        return [("detect", (mask, entering, cands))]
+
+    def detect_fn(payload):
+        if payload[0] == "notify":
+            # Self-loop notification: cross-instance state sync. Leaks (no
+            # further emissions) — Jackson stability.
+            return []
+        mask, entering, _cands = payload
+        with state_lock:
+            changed = state.apply(mask, entering)
+        out = [("report", (int(i), bool(state.mfp[i]))) for i in changed]
+        out += [("detect", ("notify", int(i))) for i in changed]
+        return out
+
+    def report_fn(payload):
+        reports.append(payload)
+        return []
+
+    ops = [
+        Operator("generate", generate_fn),
+        Operator("detect", detect_fn),
+        Operator("report", report_fn),
+    ]
+    return ops, state, reports

@@ -1,0 +1,377 @@
+"""Discrete-event simulator for operator networks (model validation).
+
+The paper validates its Erlang/Jackson model against a live Storm cluster;
+this container has one CPU, so we validate against a faithful discrete-
+event simulation of the same queueing dynamics instead — and additionally
+use it to reproduce the paper's Figures 6-10 behaviourally (see
+benchmarks/bench_model_accuracy.py and bench_rebalance.py).
+
+The simulator models exactly what the DSMS does:
+
+* external tuples arrive at source operators via a configurable arrival
+  process (exponential, uniform — the paper's VLD uses uniform [1,25] fps —
+  or deterministic);
+* each operator has one FIFO queue and ``k_i`` parallel servers with a
+  configurable service-time distribution (exponential by default, but the
+  paper stresses robustness to violations, so deterministic/uniform/
+  lognormal are supported);
+* on completion at operator *i*, derived tuples are spawned downstream per
+  the routing matrix (integer part deterministic + Bernoulli fractional
+  part, so the *mean* multiplicity matches the Jackson weight);
+* a per-root outstanding-tuple counter implements the paper's "fully
+  processed" definition: the **complete sojourn time** of an external tuple
+  is from its arrival until its whole processing tree has drained;
+* optional per-hop network delay models the out-of-model cost that causes
+  the paper's Fig. 8 underestimation;
+* ``rebalance_at(t, k_new, pause)`` changes the allocation mid-run with a
+  processing pause, reproducing the Fig. 9/10 experiments;
+* the DRS :class:`~repro.core.measurer.Measurer` can be attached so the
+  whole control loop (measure -> model -> reallocate) runs in simulated
+  time end-to-end.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from ..core.jackson import Topology
+from ..core.measurer import Measurer
+
+__all__ = ["ArrivalProcess", "ServiceProcess", "SimConfig", "SimResult", "NetworkSimulator"]
+
+
+@dataclass(frozen=True)
+class ArrivalProcess:
+    """Inter-arrival time generator for a source operator."""
+
+    rate: float
+    kind: str = "exponential"  # exponential | uniform | deterministic
+
+    def sample(self, rng: np.random.Generator) -> float:
+        if self.rate <= 0:
+            return math.inf
+        mean = 1.0 / self.rate
+        if self.kind == "exponential":
+            return rng.exponential(mean)
+        if self.kind == "uniform":
+            # uniform on [0, 2*mean] — mean preserved, like the paper's fps
+            return rng.uniform(0.0, 2.0 * mean)
+        if self.kind == "deterministic":
+            return mean
+        raise ValueError(f"unknown arrival kind {self.kind!r}")
+
+
+@dataclass(frozen=True)
+class ServiceProcess:
+    """Service-time generator for an operator's servers."""
+
+    rate: float
+    kind: str = "exponential"  # exponential | uniform | deterministic | lognormal
+    cv: float = 1.0  # coefficient of variation for lognormal
+
+    def sample(self, rng: np.random.Generator) -> float:
+        mean = 1.0 / self.rate
+        if self.kind == "exponential":
+            return rng.exponential(mean)
+        if self.kind == "uniform":
+            return rng.uniform(0.0, 2.0 * mean)
+        if self.kind == "deterministic":
+            return mean
+        if self.kind == "lognormal":
+            sigma2 = math.log(1.0 + self.cv**2)
+            mu = math.log(mean) - sigma2 / 2.0
+            return rng.lognormal(mu, math.sqrt(sigma2))
+        raise ValueError(f"unknown service kind {self.kind!r}")
+
+
+@dataclass
+class SimConfig:
+    seed: int = 0
+    warmup: float = 10.0  # ignore completions before this time
+    horizon: float = 120.0
+    network_delay: float = 0.0  # fixed per-hop delay (out-of-model cost, Fig. 8)
+    max_events: int = 5_000_000
+    queue_capacity: int | None = None  # None = unbounded
+
+
+@dataclass
+class SimResult:
+    completed: int
+    mean_sojourn: float  # complete sojourn (tree completion) — what the paper measures
+    std_sojourn: float
+    mean_visit_sum: float  # sum of per-visit sojourns (what Eq. 3 predicts exactly)
+    p95_sojourn: float
+    per_op_arrival_rate: np.ndarray
+    per_op_mean_service: np.ndarray
+    per_op_mean_wait: np.ndarray
+    dropped: int
+    sojourn_series: list[tuple[float, float]] = field(default_factory=list)
+
+    def as_dict(self) -> dict:
+        return {
+            "completed": self.completed,
+            "mean_sojourn": self.mean_sojourn,
+            "std_sojourn": self.std_sojourn,
+            "mean_visit_sum": self.mean_visit_sum,
+            "p95_sojourn": self.p95_sojourn,
+            "per_op_arrival_rate": self.per_op_arrival_rate.tolist(),
+            "dropped": self.dropped,
+        }
+
+
+# Event kinds (ordering tiebreaker: sequence number)
+_ARRIVAL, _SERVICE_DONE, _CONTROL = 0, 1, 2
+
+
+@dataclass
+class _Root:
+    t_arrival: float
+    outstanding: int = 0
+    visit_time_sum: float = 0.0
+
+
+class NetworkSimulator:
+    """Event-driven simulation of an operator network under allocation k."""
+
+    def __init__(
+        self,
+        topology: Topology,
+        k: np.ndarray | list[int],
+        *,
+        config: SimConfig | None = None,
+        arrivals: list[ArrivalProcess] | None = None,
+        services: list[ServiceProcess] | None = None,
+        measurer: Measurer | None = None,
+    ):
+        self.top = topology
+        self.cfg = config or SimConfig()
+        self.k = np.asarray(k, dtype=np.int64).copy()
+        n = topology.n
+        self.arrivals = arrivals or [
+            ArrivalProcess(rate=float(topology.lam0[i])) for i in range(n)
+        ]
+        self.services = services or [
+            ServiceProcess(rate=op.mu) for op in topology.operators
+        ]
+        self.measurer = measurer
+        self._probes = (
+            [measurer.new_probe(op.name) for op in topology.operators]
+            if measurer is not None
+            else None
+        )
+        self.rng = np.random.default_rng(self.cfg.seed)
+        self._seq = itertools.count()
+        self._events: list[tuple[float, int, int, tuple]] = []
+        self._queues: list[list[tuple[float, int]]] = [[] for _ in range(n)]
+        self._busy = np.zeros(n, dtype=np.int64)
+        self._paused_until = 0.0
+        self._roots: dict[int, _Root] = {}
+        self._root_ids = itertools.count()
+        self._sojourns: list[float] = []
+        self._visit_sums: list[float] = []
+        self._series: list[tuple[float, float]] = []
+        self._op_arrivals = np.zeros(n, dtype=np.int64)
+        self._op_service_sum = np.zeros(n)
+        self._op_service_n = np.zeros(n, dtype=np.int64)
+        self._op_wait_sum = np.zeros(n)
+        self._op_wait_n = np.zeros(n, dtype=np.int64)
+        self._dropped = 0
+        self._rebalances: list[tuple[float, np.ndarray, float]] = []
+        self.now = 0.0
+
+    # ------------------------------------------------------------------ #
+    def rebalance_at(self, t: float, k_new: np.ndarray | list[int], pause: float = 0.0) -> None:
+        """Schedule an allocation change (with optional processing pause)."""
+        self._push(t, _CONTROL, ("rebalance", np.asarray(k_new, dtype=np.int64), pause))
+
+    def schedule_rate_change(self, t: float, op_index: int, new_rate: float, kind: str | None = None) -> None:
+        """Change an operator's service rate mid-run (workload shift / straggler)."""
+        self._push(t, _CONTROL, ("mu", op_index, new_rate, kind))
+
+    def schedule_arrival_change(self, t: float, op_index: int, new_rate: float) -> None:
+        self._push(t, _CONTROL, ("lam0", op_index, new_rate))
+
+    def _push(self, t: float, kind: int, payload: tuple) -> None:
+        heapq.heappush(self._events, (t, kind, next(self._seq), payload))
+
+    # ------------------------------------------------------------------ #
+    def _spawn_external(self, i: int) -> None:
+        dt = self.arrivals[i].sample(self.rng)
+        if math.isfinite(dt):
+            self._push(self.now + dt, _ARRIVAL, ("external", i))
+
+    def _admit(self, i: int, root_id: int) -> None:
+        """Tuple arrives at operator i's queue tail."""
+        self._op_arrivals[i] += 1
+        if self._probes is not None:
+            self._probes[i].on_enqueue()
+        cap = self.cfg.queue_capacity
+        if cap is not None and len(self._queues[i]) >= cap:
+            # Dropped tuple never joins the tree; a rejected external tuple
+            # (outstanding == 0) is removed outright.
+            self._dropped += 1
+            if self._roots[root_id].outstanding == 0:
+                del self._roots[root_id]
+            return
+        self._roots[root_id].outstanding += 1
+        self._queues[i].append((self.now, root_id))
+        self._try_start(i)
+
+    def _try_start(self, i: int) -> None:
+        if self.now < self._paused_until:
+            return
+        while self._busy[i] < self.k[i] and self._queues[i]:
+            t_enq, root_id = self._queues[i].pop(0)
+            wait = self.now - t_enq
+            self._op_wait_sum[i] += wait
+            self._op_wait_n[i] += 1
+            st = self.services[i].sample(self.rng)
+            self._op_service_sum[i] += st
+            self._op_service_n[i] += 1
+            if self._probes is not None:
+                self._probes[i].on_processed(st)
+            self._busy[i] += 1
+            root = self._roots[root_id]
+            root.visit_time_sum += wait + st
+            self._push(self.now + st, _SERVICE_DONE, (i, root_id))
+
+    def _finish_derived(self, root_id: int) -> None:
+        root = self._roots[root_id]
+        root.outstanding -= 1
+        if root.outstanding == 0:
+            sojourn = self.now - root.t_arrival
+            if self.now >= self.cfg.warmup:
+                self._sojourns.append(sojourn)
+                self._visit_sums.append(root.visit_time_sum)
+                self._series.append((self.now, sojourn))
+            if self.measurer is not None:
+                self.measurer.on_tuple_complete(sojourn)
+            del self._roots[root_id]
+
+    def _route_downstream(self, i: int, root_id: int) -> None:
+        routing = self.top.routing
+        root = self._roots[root_id]
+        spawned = 0
+        for j in range(self.top.n):
+            w = routing[i][j]
+            if w <= 0:
+                continue
+            count = int(w) + (1 if self.rng.random() < (w - int(w)) else 0)
+            for _ in range(count):
+                spawned += 1
+                delay = self.cfg.network_delay
+                if delay > 0:
+                    root.outstanding += 1  # in-flight on the wire
+                    self._push(self.now + delay, _ARRIVAL, ("hop", j, root_id))
+                else:
+                    self._admit(j, root_id)
+        # No children and nothing outstanding is handled by _finish_derived.
+
+    # ------------------------------------------------------------------ #
+    def run(self) -> SimResult:
+        cfg = self.cfg
+        for i in range(self.top.n):
+            if self.top.lam0[i] > 0:
+                self._spawn_external(i)
+        events = 0
+        while self._events and events < cfg.max_events:
+            t, kind, _, payload = heapq.heappop(self._events)
+            if t > cfg.horizon:
+                break
+            self.now = t
+            events += 1
+            if kind == _ARRIVAL:
+                if payload[0] == "external":
+                    i = payload[1]
+                    root_id = next(self._root_ids)
+                    self._roots[root_id] = _Root(t_arrival=self.now)
+                    if self.measurer is not None:
+                        self.measurer.on_external_arrival()
+                    self._admit(i, root_id)
+                    self._spawn_external(i)
+                else:  # network hop delivery
+                    _, j, root_id = payload
+                    self._admit(j, root_id)
+                    self._finish_derived(root_id)  # wire leg done
+            elif kind == _SERVICE_DONE:
+                i, root_id = payload
+                self._busy[i] -= 1
+                self._route_downstream(i, root_id)
+                self._finish_derived(root_id)
+                self._try_start(i)
+            else:  # _CONTROL
+                if payload[0] == "rebalance":
+                    _, k_new, pause = payload
+                    self.k = k_new.copy()
+                    self._rebalances.append((self.now, k_new.copy(), pause))
+                    if pause > 0:
+                        self._paused_until = self.now + pause
+                        self._push(self._paused_until, _CONTROL, ("resume",))
+                    else:
+                        for i in range(self.top.n):
+                            self._try_start(i)
+                elif payload[0] == "resume":
+                    for i in range(self.top.n):
+                        self._try_start(i)
+                elif payload[0] == "mu":
+                    _, i, rate, svc_kind = payload
+                    old = self.services[i]
+                    self.services[i] = ServiceProcess(rate, svc_kind or old.kind, old.cv)
+                elif payload[0] == "lam0":
+                    _, i, rate = payload
+                    had = self.arrivals[i].rate > 0
+                    self.arrivals[i] = ArrivalProcess(rate, self.arrivals[i].kind)
+                    if not had and rate > 0:
+                        self._spawn_external(i)
+        measured_span = max(self.now - cfg.warmup, 1e-9)
+        soj = np.asarray(self._sojourns) if self._sojourns else np.array([np.nan])
+        vs = np.asarray(self._visit_sums) if self._visit_sums else np.array([np.nan])
+        return SimResult(
+            completed=len(self._sojourns),
+            mean_sojourn=float(np.mean(soj)),
+            std_sojourn=float(np.std(soj)),
+            mean_visit_sum=float(np.mean(vs)),
+            p95_sojourn=float(np.percentile(soj, 95)),
+            per_op_arrival_rate=self._op_arrivals / max(self.now, 1e-9),
+            per_op_mean_service=np.where(
+                self._op_service_n > 0, self._op_service_sum / np.maximum(self._op_service_n, 1), np.nan
+            ),
+            per_op_mean_wait=np.where(
+                self._op_wait_n > 0, self._op_wait_sum / np.maximum(self._op_wait_n, 1), np.nan
+            ),
+            dropped=self._dropped,
+            sojourn_series=self._series,
+        )
+
+
+def simulate_allocation(
+    topology: Topology,
+    k: np.ndarray | list[int],
+    *,
+    seed: int = 0,
+    horizon: float = 120.0,
+    warmup: float = 10.0,
+    network_delay: float = 0.0,
+    arrival_kind: str = "exponential",
+    service_kind: str = "exponential",
+) -> SimResult:
+    """One-call helper: simulate topology under allocation k."""
+    n = topology.n
+    arrivals = [
+        ArrivalProcess(rate=float(topology.lam0[i]), kind=arrival_kind) for i in range(n)
+    ]
+    services = [ServiceProcess(rate=op.mu, kind=service_kind) for op in topology.operators]
+    sim = NetworkSimulator(
+        topology,
+        k,
+        config=SimConfig(seed=seed, horizon=horizon, warmup=warmup, network_delay=network_delay),
+        arrivals=arrivals,
+        services=services,
+    )
+    return sim.run()

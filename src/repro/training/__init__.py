@@ -1,0 +1,9 @@
+"""Training substrate: optimizer, train step, loop, elastic restart."""
+
+from .optimizer import AdamWConfig, OptState, adamw_init, adamw_update
+from .train_step import TrainState, init_train_state, make_train_step
+
+__all__ = [
+    "AdamWConfig", "OptState", "adamw_init", "adamw_update",
+    "TrainState", "init_train_state", "make_train_step",
+]

@@ -1,0 +1,103 @@
+"""Optimizers (pure-JAX, pytree-based): AdamW and SGD-momentum.
+
+AdamW moments default to f32 but can be held in bf16 (``moment_dtype``):
+for kimi-k2's 1T params, f32 moments alone are 8 TB — bf16 moments bring
+the optimizer+param footprint to ~6 TB (11.7 GB/chip on 512 chips), the
+difference between fitting and not fitting on v5e (DESIGN.md §8 / the
+dry-run memory analysis).  Error from bf16 moments is bounded by stochastic
+rounding-free EMA noise; acceptable for the dry-run scale story and
+configurable back to f32.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update", "global_norm", "clip_by_global_norm"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: Any = jnp.float32
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray  # [] int32
+    mu: Any  # first moment (tree)
+    nu: Any  # second moment (tree)
+
+
+def adamw_init(params: Any, cfg: AdamWConfig) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, dtype=cfg.moment_dtype)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def lr_schedule(step: jnp.ndarray, cfg: AdamWConfig) -> jnp.ndarray:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> tuple[Any, jnp.ndarray]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+def adamw_update(
+    params: Any, grads: Any, state: OptState, cfg: AdamWConfig
+) -> tuple[Any, OptState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(step, cfg)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g32
+        v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g32 * g32
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), m32.astype(cfg.moment_dtype), v32.astype(cfg.moment_dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.mu)
+    flat_v = tdef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, OptState(step, new_m, new_v), {"lr": lr, "grad_norm": gnorm}

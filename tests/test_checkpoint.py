@@ -1,0 +1,89 @@
+"""CheckpointStore: atomicity, async, exotic dtypes, pruning, elasticity."""
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import CheckpointStore
+
+
+def tree(seed=0, dtype=jnp.float32):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 4), dtype=dtype), "b": jnp.zeros((4,), dtype)},
+        "step": jnp.int32(7),
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    st = CheckpointStore(tmp_path)
+    t = tree()
+    st.save(10, t, extra={"data": {"step": 10}})
+    out, extra = st.restore(t)
+    np.testing.assert_array_equal(out["params"]["w"], t["params"]["w"])
+    assert extra["data"]["step"] == 10
+    assert st.latest_step() == 10
+
+
+def test_bfloat16_roundtrip(tmp_path):
+    st = CheckpointStore(tmp_path)
+    t = tree(dtype=jnp.bfloat16)
+    st.save(1, t)
+    out, _ = st.restore(t)
+    np.testing.assert_array_equal(
+        np.asarray(out["params"]["w"], np.float32), np.asarray(t["params"]["w"], np.float32)
+    )
+    assert out["params"]["w"].dtype == jnp.bfloat16
+
+
+def test_dtype_cast_on_restore(tmp_path):
+    """f32 checkpoint restores onto a bf16 template (elastic moment dtype)."""
+    st = CheckpointStore(tmp_path)
+    t32 = tree(dtype=jnp.float32)
+    st.save(1, t32)
+    t16 = jax.tree.map(
+        lambda x: x.astype(jnp.bfloat16) if x.dtype == jnp.float32 else x, t32
+    )
+    out, _ = st.restore(t16)
+    assert out["params"]["w"].dtype == jnp.bfloat16
+
+
+def test_async_save_then_wait(tmp_path):
+    st = CheckpointStore(tmp_path)
+    st.save_async(5, tree())
+    st.wait()
+    assert st.latest_step() == 5
+
+
+def test_shape_mismatch_raises(tmp_path):
+    st = CheckpointStore(tmp_path)
+    st.save(1, tree())
+    bad = tree()
+    bad["params"]["w"] = jnp.zeros((9, 4))
+    with pytest.raises(ValueError, match="shape mismatch"):
+        st.restore(bad)
+
+
+def test_prune_keeps_newest(tmp_path):
+    st = CheckpointStore(tmp_path)
+    for s in (1, 2, 3, 4, 5):
+        st.save(s, tree())
+    removed = st.prune(keep=2)
+    assert removed == 3
+    assert st.latest_step() == 5
+    with pytest.raises(Exception):
+        st.restore(tree(), step=1)  # pruned
+
+
+def test_atomic_overwrite(tmp_path):
+    """Re-saving the same step replaces it atomically (no .tmp residue)."""
+    st = CheckpointStore(tmp_path)
+    st.save(1, tree(seed=0))
+    st.save(1, tree(seed=1))
+    out, _ = st.restore(tree(), step=1)
+    np.testing.assert_array_equal(out["params"]["w"], tree(seed=1)["params"]["w"])
+    assert not list(tmp_path.glob("*.tmp"))

@@ -1,0 +1,150 @@
+"""Tests for Algorithm 1 / Programs (4) and (6) — incl. Theorem 1."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocator import (
+    InsufficientResourcesError,
+    allocate,
+    assign_processors,
+    assign_processors_naive,
+    brute_force_optimal,
+    min_processors,
+)
+from repro.core.jackson import OperatorSpec, Topology
+
+
+def vld_like(lam0=13.0, mus=(2.0, 5.0, 50.0)):
+    return Topology.chain(
+        [("extract", mus[0]), ("match", mus[1]), ("agg", mus[2])], lam0=lam0
+    )
+
+
+def test_insufficient_resources_raises():
+    top = vld_like()
+    k_min = int(top.min_feasible_allocation().sum())
+    with pytest.raises(InsufficientResourcesError):
+        assign_processors(top, k_min - 1)
+
+
+def test_heap_matches_naive_reference():
+    top = vld_like()
+    for k_max in range(11, 30):
+        a = assign_processors(top, k_max)
+        b = assign_processors_naive(top, k_max)
+        assert a.expected_sojourn == pytest.approx(b.expected_sojourn, rel=1e-12)
+        np.testing.assert_array_equal(a.k, b.k)
+
+
+def test_theorem1_optimality_vs_brute_force():
+    """Theorem 1: Algorithm 1 returns the exact optimum of Program (4)."""
+    top = vld_like()
+    for k_max in [11, 13, 16, 20, 22]:
+        greedy = assign_processors(top, k_max)
+        _, best_t = brute_force_optimal(top, k_max)
+        assert greedy.expected_sojourn == pytest.approx(best_t, rel=1e-12)
+
+
+def test_theorem1_on_loop_topology():
+    ops = [OperatorSpec("gen", 4.0), OperatorSpec("det", 3.0), OperatorSpec("rep", 30.0)]
+    routing = np.zeros((3, 3))
+    routing[0][1] = 2.0
+    routing[1][1] = 0.3
+    routing[1][2] = 0.7
+    top = Topology(ops, np.array([5.0, 0, 0]), routing)
+    for k_max in [10, 12, 15]:
+        greedy = assign_processors(top, k_max)
+        _, best_t = brute_force_optimal(top, k_max)
+        assert greedy.expected_sojourn == pytest.approx(best_t, rel=1e-12)
+
+
+@given(
+    lam0=st.floats(min_value=1.0, max_value=20.0),
+    mu1=st.floats(min_value=0.5, max_value=10.0),
+    mu2=st.floats(min_value=0.5, max_value=10.0),
+    extra=st.integers(min_value=0, max_value=8),
+)
+@settings(max_examples=60, deadline=None)
+def test_theorem1_property(lam0, mu1, mu2, extra):
+    top = Topology.chain([("a", mu1), ("b", mu2)], lam0=lam0)
+    k_min = int(top.min_feasible_allocation().sum())
+    k_max = k_min + extra
+    greedy = assign_processors(top, k_max)
+    _, best_t = brute_force_optimal(top, k_max)
+    if math.isfinite(best_t):
+        assert greedy.expected_sojourn == pytest.approx(best_t, rel=1e-9)
+
+
+def test_budget_fully_used_when_beneficial():
+    top = vld_like()
+    res = assign_processors(top, 22)
+    assert res.total == 22  # every extra processor still reduces E[T]
+
+
+def test_paper_style_allocation_shape():
+    """Qualitative check mirroring the paper's VLD result (10:11:1):
+    the bottleneck operators get nearly all processors; the cheap
+    aggregator gets the minimum."""
+    top = vld_like()
+    res = assign_processors(top, 22)
+    k = res.k
+    assert k[2] <= 2  # aggregator is 50 tup/s: one or two processors suffice
+    assert k[0] + k[1] >= 20
+
+
+def test_program6_meets_tmax_minimally():
+    top = vld_like()
+    t_max = 1.2
+    res = min_processors(top, t_max)
+    assert res.expected_sojourn <= t_max
+    # Dropping any single processor (where feasible) must violate T_max:
+    k_min = top.min_feasible_allocation()
+    for i in range(top.n):
+        if res.k[i] > k_min[i]:
+            k2 = res.k.copy()
+            k2[i] -= 1
+            assert top.expected_sojourn(k2) > t_max
+
+
+def test_program6_unreachable_tmax_raises():
+    top = vld_like()
+    # Service-time floor = 1/2 + 1/5 + 1/50 = 0.72; below it -> infeasible.
+    with pytest.raises(InsufficientResourcesError):
+        min_processors(top, 0.5)
+
+
+def test_program6_floor_is_tight():
+    top = vld_like()
+    res = min_processors(top, 0.75)  # just above the 0.72 floor
+    assert res.expected_sojourn <= 0.75
+
+
+def test_allocate_dispatch():
+    top = vld_like()
+    r4 = allocate(top, k_max=22)
+    assert r4.total == 22
+    r6 = allocate(top, t_max=1.2)
+    assert r6.expected_sojourn <= 1.2
+    # both: Program 6 result fits within k_max -> returned as-is
+    r_both = allocate(top, k_max=50, t_max=1.2)
+    assert r_both.total == r6.total
+    # both, but budget binds -> falls back to Program 4 at k_max
+    k_min = int(top.min_feasible_allocation().sum())
+    r_tight = allocate(top, k_max=k_min + 1, t_max=1e-9)
+    assert r_tight.total == k_min + 1
+
+
+def test_evaluation_count_heap_beats_naive():
+    """The heap allocator's O((K-K0) log N) work: far fewer evaluations."""
+    ops = [OperatorSpec(f"op{i}", 2.0 + 0.3 * i) for i in range(12)]
+    routing = np.zeros((12, 12))
+    for i in range(11):
+        routing[i][i + 1] = 1.0
+    top = Topology(ops, np.array([5.0] + [0.0] * 11), routing)
+    naive = assign_processors_naive(top, 120)
+    heap = assign_processors(top, 120)
+    np.testing.assert_array_equal(naive.k, heap.k)
+    assert heap.evaluations < naive.evaluations / 3

@@ -1,0 +1,119 @@
+"""Tests for the Erlang M/M/k model (paper Eq. 1-2)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.erlang import (
+    erlang_b,
+    erlang_c,
+    expected_sojourn,
+    expected_sojourn_factorial,
+    marginal_benefit,
+    min_stable_k,
+    sojourn_curve,
+)
+
+
+def test_mm1_closed_form():
+    # M/M/1: E[T] = 1 / (mu - lam)
+    lam, mu = 3.0, 10.0
+    assert expected_sojourn(1, lam, mu) == pytest.approx(1.0 / (mu - lam), rel=1e-12)
+
+
+def test_unstable_branch_is_infinite():
+    assert expected_sojourn(1, 10.0, 10.0) == math.inf  # k*mu == lam
+    assert expected_sojourn(2, 30.0, 10.0) == math.inf  # k*mu < lam
+    assert expected_sojourn(3, 30.0, 10.0) == math.inf  # k == lam/mu exactly
+    assert math.isfinite(expected_sojourn(4, 30.0, 10.0))
+
+
+def test_zero_arrivals_gives_pure_service_time():
+    assert expected_sojourn(3, 0.0, 4.0) == pytest.approx(0.25)
+
+
+@given(
+    k=st.integers(min_value=1, max_value=60),
+    lam=st.floats(min_value=0.1, max_value=50.0),
+    mu=st.floats(min_value=0.1, max_value=20.0),
+)
+@settings(max_examples=200, deadline=None)
+def test_stable_recursion_matches_paper_factorial_form(k, lam, mu):
+    a, b = expected_sojourn(k, lam, mu), expected_sojourn_factorial(k, lam, mu)
+    if math.isinf(a) or math.isinf(b):
+        assert math.isinf(a) and math.isinf(b)
+    else:
+        assert a == pytest.approx(b, rel=1e-9)
+
+
+def test_large_k_does_not_overflow():
+    # factorial form dies around k ~ 170; stable form must not.
+    t = expected_sojourn(4096, 100000.0, 30.0)
+    assert math.isfinite(t)
+    assert t >= 1.0 / 30.0
+
+
+@given(
+    lam=st.floats(min_value=0.1, max_value=100.0),
+    mu=st.floats(min_value=0.1, max_value=20.0),
+)
+@settings(max_examples=200, deadline=None)
+def test_sojourn_monotone_decreasing_and_convex_in_k(lam, mu):
+    """Convexity premise of Theorem 1 (paper Ineq. 5)."""
+    k0 = min_stable_k(lam, mu)
+    ks = range(k0, k0 + 12)
+    ts = [expected_sojourn(k, lam, mu) for k in ks]
+    assert all(math.isfinite(t) for t in ts)
+    # monotone decreasing
+    for t1, t2 in zip(ts, ts[1:]):
+        assert t2 <= t1 + 1e-12
+    # convex: second differences >= 0  <=>  diminishing marginal benefit
+    diffs = [t1 - t2 for t1, t2 in zip(ts, ts[1:])]
+    for d1, d2 in zip(diffs, diffs[1:]):
+        assert d2 <= d1 + 1e-9
+
+
+@given(
+    lam=st.floats(min_value=0.1, max_value=100.0),
+    mu=st.floats(min_value=0.1, max_value=20.0),
+)
+@settings(max_examples=100, deadline=None)
+def test_marginal_benefit_nonincreasing(lam, mu):
+    k0 = min_stable_k(lam, mu)
+    deltas = [marginal_benefit(k, lam, mu) for k in range(k0, k0 + 10)]
+    for d1, d2 in zip(deltas, deltas[1:]):
+        assert d2 <= d1 + 1e-9
+
+
+def test_sojourn_limits_to_service_time():
+    # As k -> inf, E[T] -> 1/mu (no queueing).
+    assert expected_sojourn(500, 10.0, 2.0) == pytest.approx(0.5, rel=1e-9)
+
+
+def test_sojourn_curve_matches_pointwise():
+    lam, mu = 22.0, 3.0
+    lo, hi = 1, 40
+    curve = sojourn_curve(lam, mu, lo, hi)
+    for idx, k in enumerate(range(lo, hi + 1)):
+        expect = expected_sojourn(k, lam, mu)
+        if math.isinf(expect):
+            assert math.isinf(curve[idx])
+        else:
+            assert curve[idx] == pytest.approx(expect, rel=1e-12)
+
+
+def test_min_stable_k():
+    assert min_stable_k(10.0, 3.0) == 4  # ceil(3.33)
+    assert min_stable_k(9.0, 3.0) == 4  # integral ratio needs the bump
+    assert min_stable_k(0.0, 3.0) == 1
+
+
+def test_erlang_b_c_basic():
+    # Known value: B(1, a) = a / (1 + a)
+    assert erlang_b(1, 0.5) == pytest.approx(0.5 / 1.5)
+    # C(k, a) in [B, 1]
+    for k, a in [(2, 1.0), (5, 3.0), (10, 8.0)]:
+        b, c = erlang_b(k, a), erlang_c(k, a)
+        assert b <= c <= 1.0

@@ -1,0 +1,125 @@
+"""Tests for the Jackson network model (paper Eq. 3 + traffic equations)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.jackson import (
+    OperatorSpec,
+    Topology,
+    UnstableTopologyError,
+    solve_traffic_equations,
+)
+
+
+def test_chain_arrival_rates():
+    # VLD-like chain: spout -> extractor -> matcher -> aggregator
+    top = Topology.chain([("ext", 2.0), ("match", 5.0), ("agg", 50.0)], lam0=13.0)
+    np.testing.assert_allclose(top.arrival_rates, [13.0, 13.0, 13.0])
+    np.testing.assert_allclose(top.visit_counts, [1.0, 1.0, 1.0])
+
+
+def test_fanout_multiplicity():
+    # Extractor emits on average 7 features per frame (routing weight > 1).
+    ops = [OperatorSpec("ext", 2.0), OperatorSpec("match", 30.0)]
+    routing = np.array([[0.0, 7.0], [0.0, 0.0]])
+    top = Topology(ops, np.array([13.0, 0.0]), routing)
+    np.testing.assert_allclose(top.arrival_rates, [13.0, 91.0])
+
+
+def test_split_join():
+    # A -> (B, C) -> D  (paper Fig. 2 without the loop)
+    ops = [OperatorSpec(n, 10.0) for n in "ABCD"]
+    routing = np.zeros((4, 4))
+    routing[0][1] = 0.5  # A->B with prob .5
+    routing[0][2] = 0.5  # A->C with prob .5
+    routing[1][3] = 1.0
+    routing[2][3] = 1.0
+    top = Topology(ops, np.array([8.0, 0, 0, 0]), routing)
+    np.testing.assert_allclose(top.arrival_rates, [8.0, 4.0, 4.0, 8.0])
+
+
+def test_feedback_loop():
+    # FPD-style self-loop: detector re-notifies itself with prob 0.4.
+    ops = [OperatorSpec("gen", 10.0), OperatorSpec("det", 10.0), OperatorSpec("rep", 10.0)]
+    routing = np.zeros((3, 3))
+    routing[0][1] = 1.0
+    routing[1][1] = 0.4  # self loop (leaks 0.6)
+    routing[1][2] = 0.6
+    top = Topology(ops, np.array([6.0, 0, 0]), routing)
+    lam = top.arrival_rates
+    # det sees gen traffic amplified by 1/(1-0.4)
+    assert lam[1] == pytest.approx(6.0 / 0.6)
+    assert lam[2] == pytest.approx(6.0)
+
+
+def test_decode_self_loop_visit_count():
+    """Autoregressive decode: loop prob p = 1 - 1/L gives L visits."""
+    L = 64.0
+    p = 1.0 - 1.0 / L
+    ops = [OperatorSpec("prefill", 5.0), OperatorSpec("decode", 500.0)]
+    routing = np.array([[0.0, 1.0], [0.0, p]])
+    top = Topology(ops, np.array([2.0, 0.0]), routing)
+    assert top.visit_counts[1] == pytest.approx(L)
+
+
+def test_non_leaking_loop_raises():
+    ops = [OperatorSpec("a", 1.0), OperatorSpec("b", 1.0)]
+    routing = np.array([[0.0, 1.0], [1.0, 0.0]])  # a->b->a forever
+    with pytest.raises(UnstableTopologyError):
+        Topology(ops, np.array([1.0, 0.0]), routing).arrival_rates
+
+
+def test_expected_sojourn_eq3_weighting():
+    # Two-op chain with known M/M/1 values.
+    ops = [OperatorSpec("a", 10.0), OperatorSpec("b", 20.0)]
+    routing = np.array([[0.0, 1.0], [0.0, 0.0]])
+    top = Topology(ops, np.array([4.0, 0.0]), routing)
+    t = top.expected_sojourn([1, 1])
+    expect = 1.0 / (10 - 4) + 1.0 / (20 - 4)
+    assert t == pytest.approx(expect, rel=1e-12)
+
+
+def test_sojourn_infinite_when_any_operator_unstable():
+    top = Topology.chain([("a", 10.0), ("b", 1.0)], lam0=4.0)
+    assert top.expected_sojourn([1, 1]) == math.inf  # b: k*mu=1 < 4
+    assert math.isfinite(top.expected_sojourn([1, 5]))
+
+
+def test_min_feasible_allocation():
+    top = Topology.chain([("a", 2.0), ("b", 5.0), ("c", 50.0)], lam0=13.0)
+    np.testing.assert_array_equal(top.min_feasible_allocation(), [7, 3, 1])
+
+
+@given(
+    lam0=st.floats(min_value=0.5, max_value=30.0),
+    p=st.floats(min_value=0.0, max_value=0.9),
+    fanout=st.floats(min_value=0.5, max_value=4.0),
+)
+@settings(max_examples=100, deadline=None)
+def test_traffic_equations_conservation(lam0, p, fanout):
+    """Solved rates satisfy lam = lam0 + P^T lam exactly."""
+    routing = np.array(
+        [
+            [0.0, fanout, 0.0],
+            [0.0, p, 1.0 - p],
+            [0.1, 0.0, 0.0],  # loop back to source with prob .1
+        ]
+    )
+    lam0_vec = np.array([lam0, 0.0, 0.0])
+    lam = solve_traffic_equations(lam0_vec, routing)
+    np.testing.assert_allclose(lam, lam0_vec + routing.T @ lam, rtol=1e-9, atol=1e-9)
+
+
+def test_group_scaling_mode():
+    """TPU chip-group extension: one gang with mu(k) = mu*k*eff(k)."""
+    op = OperatorSpec("train", mu=2.0, scaling="group", group_alpha=0.05)
+    # k=1: plain M/M/1 at mu=2
+    assert op.sojourn(1, 1.0) == pytest.approx(1.0 / (2.0 - 1.0))
+    # k=4: mu_eff = 2*4/(1+0.05*3) = 6.956...; still finite and smaller
+    t4 = op.sojourn(4, 1.0)
+    assert t4 < op.sojourn(1, 1.0)
+    assert op.min_feasible_k(10.0) >= 5  # needs mu_eff > 10
+    assert math.isfinite(op.sojourn(op.min_feasible_k(10.0), 10.0))

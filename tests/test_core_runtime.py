@@ -1,0 +1,294 @@
+"""Tests for measurer / scheduler / negotiator / rebalance modules."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DRSScheduler,
+    EwmaSmoother,
+    ExecutableCache,
+    Machine,
+    Measurer,
+    Negotiator,
+    OperatorSpec,
+    RebalanceCostModel,
+    ResourcePool,
+    SchedulerConfig,
+    StragglerDetector,
+    Topology,
+    WindowSmoother,
+)
+
+
+# --------------------------------------------------------------------- #
+# Measurer
+# --------------------------------------------------------------------- #
+def test_ewma_smoother():
+    s = EwmaSmoother(alpha=0.5)
+    assert s.update(10.0) == 10.0  # first sample initialises
+    assert s.update(20.0) == 15.0
+    assert s.update(20.0) == 17.5
+
+
+def test_window_smoother():
+    s = WindowSmoother(w=3)
+    s.update(1.0)
+    s.update(2.0)
+    assert s.update(3.0) == pytest.approx(2.0)
+    assert s.update(5.0) == pytest.approx(10.0 / 3.0)  # window slid
+
+
+def test_bilayer_sampling_and_rates():
+    m = Measurer(["a", "b"], n_m=5, smoother="ewma", smoother_kw={"alpha": 0.0})
+    pa = m.new_probe("a")
+    pb1 = m.new_probe("b")
+    pb2 = m.new_probe("b")  # two instances of b aggregate to operator level
+    m.pull(0.0)  # establish t0
+    for _ in range(100):
+        pa.on_enqueue()
+        pa.on_processed(service_time=0.05)
+    for p in (pb1, pb2):
+        for _ in range(50):
+            p.on_enqueue()
+            p.on_processed(service_time=0.1)
+    for _ in range(100):
+        m.on_external_arrival()
+        m.on_tuple_complete(sojourn=0.4)
+    snap = m.pull(10.0)
+    assert snap.lam_hat[0] == pytest.approx(10.0)  # 100 arrivals / 10s
+    assert snap.lam_hat[1] == pytest.approx(10.0)  # 2x50 aggregated
+    assert snap.mu_hat[0] == pytest.approx(20.0)  # 1/0.05
+    assert snap.mu_hat[1] == pytest.approx(10.0)
+    assert snap.lam0_hat == pytest.approx(10.0)
+    assert snap.sojourn_hat == pytest.approx(0.4)
+    assert snap.complete()
+
+
+def test_sampling_rate_respected():
+    m = Measurer(["a"], n_m=10)
+    p = m.new_probe("a")
+    for _ in range(95):
+        p.on_processed(0.01)
+    _, processed, _, sampled = p.drain()
+    assert processed == 95
+    assert sampled == 9  # every 10th
+
+
+# --------------------------------------------------------------------- #
+# Negotiator
+# --------------------------------------------------------------------- #
+def make_pool(n_machines=6, per=5):
+    return ResourcePool([Machine(f"m{i}", per) for i in range(n_machines)])
+
+
+def test_negotiator_grow_and_shrink():
+    pool = make_pool()
+    neg = Negotiator(pool, reserve=3)  # paper: 3 executors for spouts + DRS
+    neg.ensure(22)
+    assert neg.k_max >= 22
+    assert len(pool.leased) == 5  # 25 executors leased, 22 usable
+    neg.ensure(8)
+    assert neg.k_max >= 8
+    assert len(pool.leased) == 3  # 15 leased: 12 usable >= 8; 2 machines freed
+
+
+def test_negotiator_revocation():
+    pool = make_pool()
+    changes = []
+    neg = Negotiator(pool, on_change=changes.append)
+    neg.ensure(20)
+    lost = pool.leased[0].machine_id
+    ch = neg.handle_revocation(lost)
+    assert ch.delta == -5
+    assert neg.k_max == 15
+    assert changes  # callback fired
+
+
+# --------------------------------------------------------------------- #
+# Executable cache + cost model
+# --------------------------------------------------------------------- #
+def test_executable_cache_hit_miss_and_warm():
+    compiled = []
+
+    def fake_compile(stage, k, sig):
+        compiled.append((stage, k))
+        return f"exe:{stage}:{k}"
+
+    cache = ExecutableCache(fake_compile)
+    assert cache.get("prefill", 4) is None
+    v = cache.get_or_compile("prefill", 4)
+    assert v == "exe:prefill:4"
+    assert cache.get_or_compile("prefill", 4) == v
+    assert cache.hits == 1 and cache.misses >= 1
+    cache.warm_neighbours("prefill", 4, radius=1)
+    assert ("prefill", 3) in compiled and ("prefill", 5) in compiled
+
+
+def test_rebalance_plan_cost_benefit():
+    top = Topology.chain([("a", 2.0), ("b", 5.0)], lam0=5.0)
+    cm = RebalanceCostModel(pause_cache_hit=0.5, pause_cache_miss=30.0)
+    k_old = np.array([4, 2])
+    k_new = np.array([5, 3])
+    plan = cm.plan(top, k_old, k_new)
+    assert plan.total_cost_seconds > 0
+    assert plan.benefit_per_second > 0
+    # long horizon -> worthwhile; tiny horizon -> not
+    assert plan.worthwhile(3600.0, top.lam0_total)
+    assert not plan.worthwhile(1e-6, top.lam0_total)
+
+
+def test_rebalance_noop_never_worthwhile():
+    top = Topology.chain([("a", 2.0), ("b", 5.0)], lam0=5.0)
+    cm = RebalanceCostModel()
+    k = np.array([4, 2])
+    plan = cm.plan(top, k, k)
+    assert not plan.worthwhile(1e9, top.lam0_total)
+
+
+# --------------------------------------------------------------------- #
+# Scheduler end-to-end (synthetic measurements)
+# --------------------------------------------------------------------- #
+def drive_measurements(m: Measurer, lam0, mus, routing, t0, t1, k=None):
+    """Feed the measurer synthetic steady-state traffic between t0 and t1."""
+    lam0_vec = np.array([lam0] + [0.0] * (len(mus) - 1))
+    from repro.core.jackson import solve_traffic_equations
+
+    lam = solve_traffic_equations(lam0_vec, routing)
+    dt = t1 - t0
+    probes = [m.new_probe(n) for n in m.names]
+    m.pull(t0)
+    for i, p in enumerate(probes):
+        n_arr = int(lam[i] * dt)
+        p.on_enqueue(n_arr)
+        for _ in range(max(1, n_arr // m.n_m + 1)):
+            for _ in range(m.n_m - 1):
+                p.on_processed(0.0)  # not sampled
+            p.on_processed(1.0 / mus[i])  # sampled tick
+    m.on_external_arrival(int(lam0 * dt))
+    m.on_tuple_complete(0.9, n=int(lam0 * dt))
+    return m.pull(t1)
+
+
+def chain_routing(n):
+    r = np.zeros((n, n))
+    for i in range(n - 1):
+        r[i][i + 1] = 1.0
+    return r
+
+
+def test_scheduler_recommends_rebalance_toward_optimum():
+    names = ["extract", "match", "agg"]
+    routing = chain_routing(3)
+    mus = [2.0, 5.0, 50.0]
+    cfg = SchedulerConfig(k_max=22, min_improvement=0.01)
+    # Start from a deliberately bad allocation.
+    sched = DRSScheduler(names, routing, np.array([8, 12, 2]), cfg)
+    snap = drive_measurements(sched.measurer, 13.0, mus, routing, 0.0, 60.0)
+    top = sched.topology_from(snap)
+    d = sched.decide(top, snap, 60.0)
+    assert d.action == "rebalance"
+    # The model-optimal allocation concentrates on the two heavy bolts.
+    assert d.k_target is not None and d.k_target[2] <= 2
+    assert d.model_sojourn_target < d.model_sojourn_current
+
+
+def test_scheduler_none_when_already_optimal():
+    names = ["extract", "match", "agg"]
+    routing = chain_routing(3)
+    mus = [2.0, 5.0, 50.0]
+    cfg = SchedulerConfig(k_max=22, min_improvement=0.01)
+    sched = DRSScheduler(names, routing, np.array([8, 12, 2]), cfg)
+    snap = drive_measurements(sched.measurer, 13.0, mus, routing, 0.0, 60.0)
+    top = sched.topology_from(snap)
+    first = sched.decide(top, snap, 60.0)
+    assert first.action == "rebalance"
+    second = sched.decide(top, snap, 120.0)
+    assert second.action == "none"  # converged in one step (Theorem 1)
+
+
+def test_scheduler_scale_out_on_tmax_violation():
+    """ExpA of the paper (Fig. 10): T_max unreachable at K=17 -> add machines."""
+    names = ["extract", "match", "agg"]
+    routing = chain_routing(3)
+    mus = [2.0, 5.0, 50.0]
+    pool = ResourcePool([Machine(f"m{i}", 5) for i in range(10)])
+    neg = Negotiator(pool)
+    neg.ensure(17)
+    cfg = SchedulerConfig(t_max=0.73, min_improvement=0.01)  # tight; needs 20 > 17
+    sched = DRSScheduler(names, routing, np.array([8, 8, 1]), cfg, negotiator=neg)
+    snap = drive_measurements(sched.measurer, 13.0, mus, routing, 0.0, 60.0)
+    top = sched.topology_from(snap)
+    assert top.expected_sojourn(np.array([8, 8, 1])) > 0.73
+    d = sched.decide(top, snap, 60.0)
+    assert d.action == "scale_out"
+    assert neg.k_max > 17
+    assert top.expected_sojourn(d.k_current) <= 0.73
+
+
+def test_scheduler_scale_in_when_overprovisioned():
+    """ExpB of the paper: loose T_max -> release machines."""
+    names = ["extract", "match", "agg"]
+    routing = chain_routing(3)
+    mus = [2.0, 5.0, 50.0]
+    pool = ResourcePool([Machine(f"m{i}", 5) for i in range(10)])
+    neg = Negotiator(pool)
+    neg.ensure(40)
+    cfg = SchedulerConfig(t_max=2.0, scale_in_hysteresis=0.9)
+    sched = DRSScheduler(names, routing, np.array([20, 18, 2]), cfg, negotiator=neg)
+    snap = drive_measurements(sched.measurer, 13.0, mus, routing, 0.0, 60.0)
+    top = sched.topology_from(snap)
+    d = sched.decide(top, snap, 60.0)
+    assert d.action == "scale_in"
+    assert neg.k_max < 40
+    assert top.expected_sojourn(d.k_current) <= 2.0
+
+
+def test_scheduler_tracks_datadependent_fanout():
+    """More features per frame (paper §I example): lam_B rises while lam_A
+    stays flat; the rebuilt topology must reflect the new multiplicity."""
+    names = ["extract", "match"]
+    routing = np.zeros((2, 2))
+    routing[0][1] = 3.0  # declared fan-out 3 features/frame
+    cfg = SchedulerConfig(k_max=20)
+    sched = DRSScheduler(names, routing, np.array([10, 10]), cfg)
+    m = sched.measurer
+    p0, p1 = m.new_probe("extract"), m.new_probe("match")
+    m.pull(0.0)
+    p0.on_enqueue(130)
+    p1.on_enqueue(910)  # measured fan-out is 7, not 3
+    for p, st in ((p0, 0.5), (p1, 0.02)):
+        for _ in range(20):
+            for _ in range(m.n_m - 1):
+                p.on_processed(0.0)
+            p.on_processed(st)
+    m.on_external_arrival(130)
+    m.on_tuple_complete(1.0, 130)
+    snap = m.pull(10.0)
+    top = sched.topology_from(snap)
+    assert top.routing[0][1] == pytest.approx(7.0, rel=0.05)
+    assert top.arrival_rates[1] == pytest.approx(91.0, rel=0.05)
+
+
+def test_straggler_detector():
+    det = StragglerDetector(factor=2.0, window=3)
+    for t in range(3):
+        det.observe("match", 0, 10.0)
+        det.observe("match", 1, 10.5)
+        det.observe("match", 2, 2.0)  # straggler
+    assert det.stragglers() == [("match", 2)]
+
+
+def test_scheduler_reacts_to_straggler_mu_drop():
+    """DRS-native straggler handling: mu drop -> model violation -> realloc."""
+    names = ["extract", "match", "agg"]
+    routing = chain_routing(3)
+    cfg = SchedulerConfig(k_max=22, min_improvement=0.01)
+    sched = DRSScheduler(names, routing, np.array([10, 11, 1]), cfg)
+    # Healthy: mus (2, 5, 50). Straggler in 'extract' drags op mu to 1.4.
+    snap = drive_measurements(sched.measurer, 13.0, [1.4, 5.0, 50.0], routing, 0.0, 60.0)
+    top = sched.topology_from(snap)
+    d = sched.decide(top, snap, 60.0)
+    assert d.action == "rebalance"
+    assert d.k_target[0] > 10  # more processors pushed to the degraded operator

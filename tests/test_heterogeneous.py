@@ -1,0 +1,59 @@
+"""Heterogeneous-processor allocation (paper §III-A extension)."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import Topology, assign_processors
+from repro.core.allocator import InsufficientResourcesError
+from repro.core.heterogeneous import SpeedPool, assign_heterogeneous
+
+
+def vld():
+    return Topology.chain([("extract", 2.0), ("match", 5.0), ("agg", 50.0)], lam0=13.0)
+
+
+def test_homogeneous_pool_matches_algorithm1():
+    """Speed-1 pool must reproduce the homogeneous optimum exactly."""
+    top = vld()
+    pool = SpeedPool.of({1.0: 22})
+    het = assign_heterogeneous(top, pool)
+    hom = assign_processors(top, 22)
+    np.testing.assert_array_equal(het.k, hom.k)
+    assert het.expected_sojourn == pytest.approx(hom.expected_sojourn, rel=1e-9)
+
+
+def test_fast_processors_go_to_bottleneck():
+    top = vld()
+    pool = SpeedPool.of({2.0: 4, 1.0: 18})
+    het = assign_heterogeneous(top, pool)
+    assert math.isfinite(het.expected_sojourn)
+    # the 2x processors should land on the heavy operators (extract/match),
+    # not the idle aggregator
+    assert all(s == 1.0 for s in het.speeds[2])
+    fast_used = sum(s == 2.0 for ops in het.speeds for s in ops)
+    assert fast_used == 4
+    assert sum(s == 2.0 for s in het.speeds[0]) >= 2  # extract is the bottleneck
+
+
+def test_faster_pool_beats_slower_pool():
+    top = vld()
+    slow = assign_heterogeneous(top, SpeedPool.of({1.0: 22}))
+    fast = assign_heterogeneous(top, SpeedPool.of({2.0: 8, 1.0: 14}))
+    assert fast.expected_sojourn < slow.expected_sojourn
+
+
+def test_insufficient_heterogeneous_pool_raises():
+    top = vld()
+    with pytest.raises(InsufficientResourcesError):
+        assign_heterogeneous(top, SpeedPool.of({0.5: 10}))  # capacity 2.5*... < needs
+
+
+def test_mixed_pool_stabilises_all_operators():
+    top = vld()
+    het = assign_heterogeneous(top, SpeedPool.of({1.5: 6, 1.0: 10, 0.5: 10}))
+    mu_eff = het.effective_mu([op.mu for op in top.operators])
+    lam = top.arrival_rates
+    for i in range(top.n):
+        assert het.k[i] * mu_eff[i] > lam[i]  # stable everywhere

@@ -1,0 +1,101 @@
+"""l2_match Pallas kernel vs pure-jnp oracle (interpret mode on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.l2_match import kernel, ops, ref
+
+
+def rand(shape, dtype, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("m,n,d", [(128, 128, 64), (256, 128, 64), (128, 256, 100)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairwise_kernel_matches_ref(m, n, d, dtype):
+    a, b = rand((m, d), dtype, 0), rand((n, d), dtype, 1)
+    got = kernel.pairwise_sq_l2_pallas(a, b, interpret=True)
+    want = ref.pairwise_sq_l2(a, b)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("bm,bn", [(64, 64), (128, 64)])
+def test_block_shapes_same_result(bm, bn):
+    a, b = rand((128, 48), jnp.float32, 2), rand((128, 48), jnp.float32, 3)
+    got = kernel.pairwise_sq_l2_pallas(a, b, bm=bm, bn=bn, interpret=True)
+    want = ref.pairwise_sq_l2(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_fused_count_kernel_matches_ref():
+    a, b = rand((256, 64), jnp.float32, 4), rand((128, 64), jnp.float32, 5)
+    valid = jnp.arange(256) % 3 != 0  # some invalid rows
+    thresh = 9.0
+    got = kernel.match_count_pallas(a, b, valid, thresh, interpret=True)
+    want = ref.match_count(a, b, thresh, valid)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert int(got.sum()) > 0  # the threshold actually fires
+
+
+def test_fused_count_accumulates_across_m_blocks():
+    # m = 4 blocks of 64: accumulation across sequential grid steps.
+    a, b = rand((256, 32), jnp.float32, 6), rand((64, 32), jnp.float32, 7)
+    valid = jnp.ones(256, dtype=bool)
+    got = kernel.match_count_pallas(a, b, valid, 8.0, bm=64, bn=64, interpret=True)
+    want = ref.match_count(a, b, 8.0, valid)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(
+    m=st.integers(min_value=1, max_value=200),
+    n=st.integers(min_value=1, max_value=200),
+    d=st.integers(min_value=1, max_value=96),
+)
+@settings(max_examples=20, deadline=None)
+def test_ops_wrapper_pads_arbitrary_shapes(m, n, d):
+    """ops-level dispatch handles non-multiple shapes via padding."""
+    ops.set_mode("kernel_interpret")
+    try:
+        a, b = rand((m, d), jnp.float32, m * 7 + 1), rand((n, d), jnp.float32, n * 13 + 2)
+        got = ops.pairwise_sq_l2(a, b, bm=64, bn=64)
+        want = ref.pairwise_sq_l2(a, b)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    finally:
+        ops.set_mode("auto")
+
+
+def test_ops_match_count_padded():
+    ops.set_mode("kernel_interpret")
+    try:
+        a, b = rand((100, 50), jnp.float32, 8), rand((70, 50), jnp.float32, 9)
+        got = ops.match_count(a, b, 7.5)
+        want = ref.match_count(a, b, 7.5)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    finally:
+        ops.set_mode("auto")
+
+
+def test_padding_rows_do_not_pollute_counts():
+    """Padded (zero) query rows must not count as matches even when the
+    library contains a zero-ish row within threshold of zero."""
+    ops.set_mode("kernel_interpret")
+    try:
+        a = jnp.ones((3, 16))  # pads to 64 rows of zeros
+        b = jnp.zeros((2, 16))  # zero library rows: d2(pad, b) == 0 <= t2
+        got = ops.match_count(a, b, 1.0, bm=64, bn=64)
+        want = ref.match_count(a, b, 1.0)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    finally:
+        ops.set_mode("auto")
+
+
+def test_ref_zero_distance_diagonal():
+    a = rand((32, 16), jnp.float32, 10)
+    d2 = ref.pairwise_sq_l2(a, a)
+    assert float(jnp.abs(jnp.diagonal(d2)).max()) < 1e-4
+    assert float(d2.min()) >= 0.0

@@ -1,0 +1,97 @@
+"""Sharding rule table: divisibility guards, axis reuse, per-arch overrides."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models.common import logical_to_spec
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # single CPU device arranged as a (1,1,1) production-shaped mesh;
+    # axis sizes for divisibility tests come from a fake mesh below.
+    return jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+
+
+class FakeMesh:
+    """Shape-only stand-in (mesh.shape mapping) for divisibility logic."""
+
+    def __init__(self, **shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def test_safe_spec_divisible():
+    m = FakeMesh(pod=2, data=16, model=16)
+    spec = shd.safe_spec((256, 4096), ("batch", None), shd.TRAIN_RULES, m)
+    assert spec == P(("pod", "data"), None)
+
+
+def test_safe_spec_indivisible_falls_back():
+    m = FakeMesh(pod=2, data=16, model=16)
+    # whisper vocab 51865 is not divisible by 16 -> replicated
+    spec = shd.safe_spec((51865, 1024), ("vocab", "d_model"), shd.TRAIN_RULES, m)
+    assert spec[0] is None
+    # command-r vocab 256000 divides -> sharded
+    spec = shd.safe_spec((256000, 8192), ("vocab", "d_model"), shd.TRAIN_RULES, m)
+    assert spec[0] == "model"
+
+
+def test_safe_spec_partial_tuple():
+    m = FakeMesh(pod=2, data=16, model=16)
+    # batch 16 divides data(16) but not pod*data(32): keep only "pod" prefix
+    spec = shd.safe_spec((16,), ("batch",), shd.TRAIN_RULES, m)
+    # greedy prefix: pod (2) divides 16 -> then data (16): 16 % 32 != 0 -> stop
+    assert spec == P("pod")
+
+
+def test_safe_spec_axis_reuse_guard():
+    m = FakeMesh(data=16, model=16)
+    rules = {"a": "model", "b": "model"}
+    spec = shd.safe_spec((32, 32), ("a", "b"), rules, m)
+    assert spec == P("model", None)  # second use of "model" dropped
+
+
+def test_prune_rules_drops_missing_axes():
+    m = FakeMesh(data=16, model=16)  # no "pod"
+    pruned = shd.prune_rules(shd.TRAIN_RULES, m)
+    assert pruned["batch"] == "data"
+    assert pruned["heads"] == "model"
+
+
+def test_mixtral_arch_override():
+    r = shd.rules_for("decode", arch="mixtral-8x22b")
+    assert r["d_model"] == "data"  # FSDP weights at serve time (8 experts % 16 != 0)
+    r2 = shd.rules_for("decode", arch="llama3.2-1b")
+    assert r2["d_model"] is None
+
+
+def test_logical_to_spec_respects_rules_context():
+    from repro.models.common import axis_rules
+
+    with axis_rules({"batch": ("pod", "data"), "heads": "model"}):
+        assert logical_to_spec(("batch", "heads", None)) == P(("pod", "data"), "model", None)
+    assert logical_to_spec(("batch",)) == P(None)  # no rules active
+
+
+def test_cache_axes_cover_all_families():
+    for fam in ("dense", "moe", "vlm", "ssm", "hybrid", "audio"):
+        ax = shd.cache_axes(fam)
+        assert "length" in ax
+        assert all(isinstance(v, tuple) for v in ax.values())
+
+
+def test_decode_rules_shard_kv_seq_on_model():
+    m = FakeMesh(pod=2, data=16, model=16)
+    spec = shd.safe_spec(
+        (16, 128, 32768, 8, 128),
+        ("layers", "batch", "kv_seq", "kv_heads", None),
+        shd.rules_for("decode"),
+        m,
+    )
+    assert spec[2] == "model"  # flash-decoding sequence sharding
+    assert spec[1] == ("pod", "data")
+    assert spec[3] is None  # kv_heads=8 does not divide model=16 -> dropped

@@ -1,0 +1,234 @@
+"""Tests for the VLD / FPD applications and the live StreamEngine."""
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.streaming.apps.fpd import (
+    FPDConfig,
+    SlidingWindowState,
+    candidate_patterns,
+    maximal_frequent,
+    pack_itemset,
+    random_transaction,
+    support_counts,
+)
+from repro.streaming.apps.vld import (
+    VLDConfig,
+    aggregate_matches,
+    build_vld_operators,
+    extract_features,
+    logo_library,
+    make_frame,
+    match_features,
+)
+from repro.streaming.engine import Operator, StreamEngine
+
+
+# --------------------------------------------------------------------- #
+# VLD
+# --------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def vld():
+    cfg = VLDConfig()
+    lib = logo_library(cfg)
+    return cfg, lib
+
+
+def test_extract_features_shapes_and_validity(vld):
+    cfg, lib = vld
+    rng = np.random.default_rng(0)
+    frame = make_frame(cfg, rng, np.asarray(lib), with_logo=True)
+    desc, valid = extract_features(jnp.asarray(frame), cfg)
+    assert desc.shape == (cfg.max_keypoints, cfg.patch * cfg.patch)
+    assert valid.shape == (cfg.max_keypoints,)
+    assert bool(valid.any())
+    assert not bool(jnp.isnan(desc).any())
+    # descriptors are unit-normalised where valid
+    norms = jnp.linalg.norm(desc, axis=1)
+    assert bool(jnp.all(jnp.where(valid, jnp.abs(norms - 1.0) < 1e-3, True)))
+
+
+def test_logo_frames_detect_more_than_background(vld):
+    cfg, lib = vld
+    rng = np.random.default_rng(1)
+    hits_logo, hits_bg = 0, 0
+    for i in range(8):
+        for with_logo in (True, False):
+            frame = make_frame(cfg, rng, np.asarray(lib), with_logo=with_logo)
+            desc, valid = extract_features(jnp.asarray(frame), cfg)
+            counts = match_features(desc, valid, lib, cfg.match_threshold)
+            det = aggregate_matches(
+                counts, cfg.n_logos, cfg.descriptors_per_logo, cfg.detect_threshold
+            )
+            if with_logo:
+                hits_logo += int(det.sum())
+            else:
+                hits_bg += int(det.sum())
+    assert hits_logo > hits_bg  # logo frames must trigger more detections
+
+
+def test_feature_count_varies_with_content(vld):
+    """The data-dependent fan-out DRS must track (paper §I)."""
+    cfg, lib = vld
+    rng = np.random.default_rng(2)
+    counts = []
+    for _ in range(10):
+        frame = make_frame(cfg, rng, np.asarray(lib), with_logo=rng.random() < 0.5)
+        _, valid = extract_features(jnp.asarray(frame), cfg)
+        counts.append(int(valid.sum()))
+    assert len(set(counts)) > 1  # genuinely varies
+
+
+# --------------------------------------------------------------------- #
+# FPD
+# --------------------------------------------------------------------- #
+def test_pack_and_candidates():
+    cfg = FPDConfig(n_items=8, max_pattern_size=2)
+    mask = pack_itemset([1, 3, 5])
+    cands = candidate_patterns(mask, cfg)
+    # 3 singletons + 3 pairs
+    assert len(cands) == 6
+    assert pack_itemset([1, 3]) in cands
+    assert pack_itemset([1, 3, 5]) not in cands  # size > max_pattern_size
+
+
+def test_support_counts_basic():
+    pats = jnp.asarray(
+        [pack_itemset([0]), pack_itemset([1]), pack_itemset([0, 1])], dtype=jnp.uint32
+    )
+    window = jnp.asarray(
+        [pack_itemset([0, 1]), pack_itemset([0]), pack_itemset([0, 1, 2])],
+        dtype=jnp.uint32,
+    )
+    counts = support_counts(pats, window)
+    np.testing.assert_array_equal(np.asarray(counts), [3, 2, 2])
+
+
+def test_maximal_frequent_definition():
+    """MFP: frequent itself, no frequent strict superset (paper's (a)+(b))."""
+    pats = jnp.asarray(
+        [
+            pack_itemset([0]),
+            pack_itemset([1]),
+            pack_itemset([0, 1]),
+            pack_itemset([2]),
+        ],
+        dtype=jnp.uint32,
+    )
+    counts = jnp.asarray([10, 9, 8, 3], dtype=jnp.int32)
+    mfp = maximal_frequent(pats, counts, jnp.int32(5))
+    # {0},{1} are frequent but {0,1} is a frequent superset -> not maximal
+    np.testing.assert_array_equal(np.asarray(mfp), [False, False, True, False])
+
+
+def test_sliding_window_state_machine():
+    cfg = FPDConfig(n_items=6, max_pattern_size=2, window=4, support_threshold=3)
+    st = SlidingWindowState(cfg)
+    m = pack_itemset([0, 1])
+    changed_total = []
+    for _ in range(3):
+        changed_total += st.apply(m, entering=True)
+    assert len(changed_total) > 0  # {0,1} became MFP at count 3
+    assert pack_itemset([0, 1]) in st.current_mfps()
+    # Window overflow evicts the oldest and counts stay consistent.
+    for _ in range(4):
+        st.apply(pack_itemset([2]), entering=True)
+    idx = int(np.nonzero(st.patterns == np.uint32(m))[0][0])
+    assert st.counts[idx] < 3  # evicted below threshold
+    assert m not in st.current_mfps()
+
+
+def test_window_eviction_keeps_counts_nonnegative():
+    cfg = FPDConfig(n_items=5, max_pattern_size=2, window=8, support_threshold=2)
+    st = SlidingWindowState(cfg)
+    rng = np.random.default_rng(3)
+    for _ in range(50):
+        st.apply(random_transaction(cfg, rng), entering=True)
+    assert (st.counts >= 0).all()
+    assert len(st.window) <= cfg.window
+    # counts match a from-scratch recount of the window
+    recount = np.asarray(
+        support_counts(
+            jnp.asarray(st.patterns), jnp.asarray(np.array(st.window, dtype=np.uint32))
+        )
+    )
+    np.testing.assert_array_equal(st.counts, recount)
+
+
+# --------------------------------------------------------------------- #
+# Live engine end-to-end
+# --------------------------------------------------------------------- #
+def test_engine_chain_completes_and_measures():
+    log = []
+    ops = [
+        Operator("a", lambda x: [("b", x + 1)]),
+        Operator("b", lambda x: [("c", x * 2)]),
+        Operator("c", lambda x: log.append(x) or []),
+    ]
+    eng = StreamEngine(ops)
+    eng.measurer.pull(time.time())
+    eng.start({"a": 1, "b": 2, "c": 1})
+    for i in range(50):
+        eng.inject("a", i)
+    assert eng.drain(timeout=10.0)
+    eng.stop()
+    assert sorted(log) == [(i + 1) * 2 for i in range(50)]
+    assert len(eng.completed_sojourns) == 50
+    snap = eng.measurer.pull(time.time())
+    assert snap.lam_hat[0] > 0 and snap.lam0_hat > 0
+
+
+def test_engine_rescale_midstream():
+    ops = [Operator("a", lambda x: [])]
+    eng = StreamEngine(ops)
+    eng.start({"a": 1})
+    assert eng.k()["a"] == 1
+    eng.scale_to({"a": 4})
+    assert eng.k()["a"] == 4
+    for i in range(20):
+        eng.inject("a", i)
+    assert eng.drain(timeout=5.0)
+    eng.scale_to({"a": 2})
+    assert eng.k()["a"] == 2
+    for i in range(10):
+        eng.inject("a", i)
+    assert eng.drain(timeout=5.0)
+    eng.stop()
+    assert len(eng.completed_sojourns) == 30
+
+
+def test_engine_vld_end_to_end():
+    cfg = VLDConfig(height=32, width=32, max_keypoints=16, n_logos=4)
+    lib = logo_library(cfg)
+    ops, detections = build_vld_operators(cfg, lib)
+    eng = StreamEngine(ops)
+    eng.start({"extract": 2, "match": 1, "aggregate": 1})
+    rng = np.random.default_rng(5)
+    n = 12
+    for _ in range(n):
+        eng.inject("extract", make_frame(cfg, rng, np.asarray(lib), rng.random() < 0.5))
+    assert eng.drain(timeout=30.0)
+    eng.stop()
+    assert len(detections) == n
+    assert all(d.shape == (cfg.n_logos,) for d in detections)
+
+
+def test_engine_fpd_end_to_end_with_self_loop():
+    cfg = FPDConfig(n_items=8, max_pattern_size=2, window=16, support_threshold=4)
+    ops, state, reports = __import__(
+        "repro.streaming.apps.fpd", fromlist=["build_fpd_operators"]
+    ).build_fpd_operators(cfg)
+    eng = StreamEngine(ops)
+    eng.start({"generate": 1, "detect": 1, "report": 1})
+    rng = np.random.default_rng(6)
+    hot = pack_itemset([0, 1])
+    for i in range(24):
+        mask = hot if i % 2 == 0 else random_transaction(cfg, rng)
+        eng.inject("generate", (mask, True))
+    assert eng.drain(timeout=30.0)
+    eng.stop()
+    assert len(reports) > 0  # MFP state changes were reported
+    assert hot in state.current_mfps()  # the hot pattern is maximal-frequent
