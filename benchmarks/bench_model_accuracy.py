@@ -11,31 +11,34 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import OperatorSpec, Topology, assign_processors
-from repro.streaming.des import simulate_allocation
+from repro.api import AppGraph, Edge, OpDef
+from repro.core import assign_processors
 
 
-def vld_topology():
-    return Topology.chain(
+def vld_graph() -> AppGraph:
+    return AppGraph.chain(
         [("extract", 2.0), ("match", 5.0), ("agg", 50.0)], lam0=13.0
     )
 
 
-def fpd_topology():
+def fpd_graph() -> AppGraph:
     # generate -> detect (self-loop, leak .7) -> report; lam0 such that
     # detect is the heavy operator like the paper's (6:13:3).
-    ops = [OperatorSpec("generate", 4.0), OperatorSpec("detect", 3.0),
-           OperatorSpec("report", 12.0)]
-    routing = np.zeros((3, 3))
-    routing[0][1] = 1.0
-    routing[1][1] = 0.3
-    routing[1][2] = 0.7
-    top = Topology(ops, np.array([16.0, 0, 0]), routing)
-    return top
+    return AppGraph(
+        [OpDef("generate", 4.0), OpDef("detect", 3.0), OpDef("report", 12.0)],
+        [
+            Edge("generate", "detect"),
+            Edge("detect", "detect", multiplicity=0.3),
+            Edge("detect", "report", multiplicity=0.7),
+        ],
+        {"generate": 16.0},
+    )
 
 
-def run_app(name: str, top: Topology, k_max: int, configs: list[tuple[int, ...]]):
+def run_app(name: str, graph: AppGraph, k_max: int, configs: list[tuple[int, ...]]):
     rows = []
+    top = graph.topology()
+    session = graph.bind("des", horizon=800.0, warmup=80.0)
     best = assign_processors(top, k_max)
     star = tuple(best.k.tolist())
     all_cfgs = list(configs)
@@ -44,7 +47,7 @@ def run_app(name: str, top: Topology, k_max: int, configs: list[tuple[int, ...]]
     measured = {}
     for i, c in enumerate(all_cfgs):
         est = top.expected_sojourn(list(c))
-        sim = simulate_allocation(top, list(c), seed=100 + i, horizon=800.0, warmup=80.0)
+        sim = session.simulate(list(c), seed=100 + i)
         measured[c] = sim.mean_sojourn
         mark = "*DRS*" if c == star else ""
         rows.append((
@@ -68,11 +71,11 @@ def run_app(name: str, top: Topology, k_max: int, configs: list[tuple[int, ...]]
 def run() -> list[tuple[str, float, str]]:
     rows = []
     rows += run_app(
-        "vld", vld_topology(), 22,
+        "vld", vld_graph(), 22,
         [(10, 11, 1), (9, 12, 1), (11, 10, 1), (8, 12, 2), (12, 8, 2), (7, 13, 2)],
     )
     rows += run_app(
-        "fpd", fpd_topology(), 22,
+        "fpd", fpd_graph(), 22,
         [(6, 13, 3), (7, 12, 3), (5, 14, 3), (6, 12, 4), (8, 11, 3)],
     )
     return rows

@@ -12,9 +12,8 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from repro.core import Measurer, Topology, assign_processors, assign_processors_naive
+from repro.api import AppGraph
+from repro.core import Measurer, assign_processors, assign_processors_naive
 
 
 def time_fn(fn, *args, repeat=200) -> float:
@@ -32,9 +31,9 @@ def run() -> list[tuple[str, float, str]]:
     # allocation saturates; scaling matches their linear-growth regime).
     for k_max in (12, 24, 48, 96, 192, 1024, 4096):
         lam0 = 13.0 * k_max / 22.0
-        top = Topology.chain(
+        top = AppGraph.chain(
             [("extract", 2.0), ("match", 5.0), ("agg", 50.0)], lam0=lam0
-        )
+        ).topology()
         t_naive = time_fn(assign_processors_naive, top, k_max, repeat=20)
         t_heap = time_fn(assign_processors, top, k_max, repeat=20)
         rows.append((f"scheduling_naive_K{k_max}", t_naive * 1e6, "us (paper Algorithm 1)"))

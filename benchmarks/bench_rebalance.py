@@ -4,33 +4,34 @@ Fig. 9: runs starting from non-optimal allocations converge to the DRS
 optimum when rebalancing is enabled mid-run, with a small disruption.
 Fig. 10: ExpA (T_max tight, K grows via the negotiator) and ExpB (T_max
 loose, machines released) — resource adaptation in both directions.
+
+The VLD-shape application is declared once as an AppGraph; the DES runs
+through ``graph.bind("des")`` (no hand-built routing matrices or
+arrival/service lists).
 """
 
 from __future__ import annotations
 
 import numpy as np
 
+from repro.api import AppGraph
 from repro.core import (
     Machine,
     Negotiator,
     ResourcePool,
-    Topology,
     assign_processors,
     min_processors,
 )
-from repro.streaming.des import ArrivalProcess, NetworkSimulator, ServiceProcess, SimConfig
 
 
-def _run_with_rebalance(top, k0, k1, t_switch=400.0, horizon=800.0, pause=2.0, seed=0):
-    sim = NetworkSimulator(
-        top, np.asarray(k0),
-        config=SimConfig(seed=seed, horizon=horizon, warmup=0.0),
-        arrivals=[ArrivalProcess(float(top.lam0[i])) for i in range(top.n)],
-        services=[ServiceProcess(op.mu) for op in top.operators],
+def _run_with_rebalance(graph, k0, k1, t_switch=400.0, horizon=800.0, pause=2.0, seed=0):
+    session = graph.bind("des", seed=seed, horizon=horizon, warmup=0.0)
+    res = session.simulate(
+        k0,
+        rebalance_to=k1,
+        rebalance_at=t_switch if k1 is not None else None,
+        pause=pause,
     )
-    if k1 is not None:
-        sim.rebalance_at(t_switch, np.asarray(k1), pause=pause)
-    res = sim.run()
     ts = np.array([t for t, _ in res.sojourn_series])
     sj = np.array([s for _, s in res.sojourn_series])
     before = float(sj[(ts > 50) & (ts < t_switch)].mean())
@@ -43,13 +44,14 @@ def _run_with_rebalance(top, k0, k1, t_switch=400.0, horizon=800.0, pause=2.0, s
 
 def run() -> list[tuple[str, float, str]]:
     rows = []
-    top = Topology.chain([("extract", 2.0), ("match", 5.0), ("agg", 50.0)], lam0=13.0)
+    graph = AppGraph.chain([("extract", 2.0), ("match", 5.0), ("agg", 50.0)], lam0=13.0)
+    top = graph.topology()
     best = assign_processors(top, 22).k
 
     # Fig 9: three initial allocations, rebalance at t=400
     for i, k0 in enumerate(([8, 12, 2], [11, 9, 2], list(best))):
         k1 = None if list(k0) == list(best) else best
-        before, after, spike = _run_with_rebalance(top, k0, k1, seed=20 + i)
+        before, after, spike = _run_with_rebalance(graph, k0, k1, seed=20 + i)
         tag = "already-optimal" if k1 is None else "rebalanced"
         rows.append((f"fig9_init_{':'.join(map(str, k0))}_before", before * 1e3, "ms"))
         rows.append((
@@ -65,7 +67,7 @@ def run() -> list[tuple[str, float, str]]:
     need = min_processors(top, 0.73)
     neg.ensure(need.total)
     k_new = assign_processors(top, neg.k_max).k
-    before, after, _ = _run_with_rebalance(top, k17, k_new, seed=31)
+    before, after, _ = _run_with_rebalance(graph, k17, k_new, seed=31)
     rows.append(("fig10_expA_before_K17", before * 1e3, f"ms with k={k17.tolist()}"))
     rows.append((
         "fig10_expA_after_scaleout", after * 1e3,
@@ -81,7 +83,7 @@ def run() -> list[tuple[str, float, str]]:
     need_b = min_processors(top, 2.0)
     neg_b.ensure(need_b.total)
     k_small = assign_processors(top, neg_b.k_max).k
-    before, after, _ = _run_with_rebalance(top, k22, k_small, seed=32)
+    before, after, _ = _run_with_rebalance(graph, k22, k_small, seed=32)
     rows.append(("fig10_expB_before_K22", before * 1e3, f"ms with k={k22.tolist()}"))
     rows.append((
         "fig10_expB_after_scalein", after * 1e3,

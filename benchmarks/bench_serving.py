@@ -36,8 +36,7 @@ def run() -> list[tuple[str, float, str]]:
     for frac in (0.3, 0.5, 0.7):
         lam0 = sat * frac
         sim = ServingSimulation(model, lam0, horizon=max(1500.0, 800 / lam0), warmup=50 / lam0, seed=int(frac * 100))
-        top = model.topology(lam0)
-        k_min = top.min_feasible_allocation()
+        k_min = sim.graph.topology().min_feasible_allocation()
         drs = sim.drs_allocation(k_max)
         lat_drs = sim.run(drs).mean_latency
         rows.append((f"serving_drs_rho{frac}", lat_drs * 1e3, f"ms | split {drs} | {note}"))

@@ -10,10 +10,7 @@ deterministic per-hop cost prior, the underestimation shrinks.
 
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import OperatorSpec, Topology
-from repro.streaming.des import simulate_allocation
+from repro.api import AppGraph
 
 
 def run() -> list[tuple[str, float, str]]:
@@ -21,12 +18,15 @@ def run() -> list[tuple[str, float, str]]:
     hop = 0.004  # 4 ms per-hop network delay (out of model)
     for total_cpu_ms in (0.5, 2.0, 8.0, 32.0, 128.0, 512.0):
         mu = 3.0 / (total_cpu_ms / 1e3)  # 3 bolts, equal split
-        top = Topology.chain([("b1", mu), ("b2", mu), ("b3", mu)], lam0=min(0.5 * mu, 200.0))
-        k = list(top.min_feasible_allocation() + 1)
-        sim = simulate_allocation(
-            top, k, seed=11, horizon=max(400.0, 40000.0 / mu), warmup=20.0,
-            network_delay=hop,
+        graph = AppGraph.chain(
+            [("b1", mu), ("b2", mu), ("b3", mu)], lam0=min(0.5 * mu, 200.0)
         )
+        top = graph.topology()
+        k = list(top.min_feasible_allocation() + 1)
+        sim = graph.bind(
+            "des", seed=11, horizon=max(400.0, 40000.0 / mu), warmup=20.0,
+            network_delay=hop,
+        ).simulate(k)
         est = top.expected_sojourn(k)
         ratio = sim.mean_sojourn / est
         rows.append((

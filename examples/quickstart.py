@@ -1,43 +1,43 @@
-"""Quickstart: the DRS performance model + optimal allocator in 60 lines.
+"""Quickstart: declare the app graph once, model + simulate through it.
 
-Reproduces the paper's core loop on the VLD-like topology from §V:
-model the operators as an M/M/k Jackson network, ask Program (4) where
-processors should go, ask Program (6) how many are needed for a latency
-SLO, and check both against a discrete-event simulation.
+Reproduces the paper's core loop on the VLD-like topology from §V: declare
+the operators as an AppGraph (repro.api), ask Program (4) where processors
+should go, ask Program (6) how many are needed for a latency SLO, and
+check both against a discrete-event simulation — all through the SAME
+graph declaration.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import numpy as np
-
-from repro.core import Topology, assign_processors, min_processors
-from repro.streaming.des import simulate_allocation
+from repro.api import AppGraph
 
 # --- the application: spout -> extract -> match -> aggregate ----------- #
 # 13 frames/sec arrive; one processor extracts 2 frames/sec, matches 5
 # feature-sets/sec, aggregates 50 match-sets/sec (paper §V-B scale).
-top = Topology.chain([("extract", 2.0), ("match", 5.0), ("agg", 50.0)], lam0=13.0)
+graph = AppGraph.chain([("extract", 2.0), ("match", 5.0), ("agg", 50.0)], lam0=13.0)
+top = graph.topology()
 
 print("traffic (lambda_i):", top.arrival_rates)
 print("minimum feasible allocation:", top.min_feasible_allocation())
 
 # --- Program (4): best placement of 22 executors ----------------------- #
-best = assign_processors(top, k_max=22)
+session = graph.bind("des", horizon=400.0, warmup=40.0)
+best = session.plan(k_max=22)
 print(f"\nProgram (4) @ K=22  ->  k = {best.k.tolist()}  "
       f"E[T] = {best.expected_sojourn:.3f}s")
 
 # compare against the neighbouring configurations from the paper's Fig. 6
 for cand in ([8, 12, 2], [12, 8, 2], [7, 13, 2], best.k.tolist()):
     model_t = top.expected_sojourn(cand)
-    sim = simulate_allocation(top, cand, seed=1, horizon=400.0, warmup=40.0)
+    sim = session.simulate(cand, seed=1)
     star = " <- DRS" if cand == best.k.tolist() else ""
     print(f"  {cand}: model {model_t:.3f}s | simulated {sim.mean_sojourn:.3f}s{star}")
 
 # --- Program (6): how many executors for a 1.2s SLO? ------------------- #
-need = min_processors(top, t_max=1.2)
+need = session.plan(t_max=1.2)
 print(f"\nProgram (6) @ T_max=1.2s  ->  {need.total} processors, "
       f"k = {need.k.tolist()}, model E[T] = {need.expected_sojourn:.3f}s")
 
-sim = simulate_allocation(top, need.k, seed=2, horizon=400.0, warmup=40.0)
+sim = session.simulate(need.k, seed=2)
 print(f"simulated E[T] under that allocation: {sim.mean_sojourn:.3f}s "
       f"(SLO {'met' if sim.mean_sojourn <= 1.2 else 'MISSED'})")

@@ -1,10 +1,11 @@
 """DRS-scheduled LLM serving: prefill/decode chip split + live rebalance.
 
-The serving pipeline is a Jackson network in which autoregressive decoding
-is a SELF-LOOP (decode -> decode with p = 1 - 1/E[tokens]); DRS's traffic
-equations turn the request rate into per-stage load and Algorithm 1 splits
-the chip budget.  Stage service rates come from the multi-pod dry-run's
-roofline records when available.
+The serving pipeline is declared once (ServingModel.graph builds an
+AppGraph) in which autoregressive decoding is a typed SELF-LOOP edge
+(decode -> decode with p = 1 - 1/E[tokens]); DRS's traffic equations turn
+the request rate into per-stage load and Algorithm 1 splits the chip
+budget.  Stage service rates come from the multi-pod dry-run's roofline
+records when available.
 
     PYTHONPATH=src python examples/serve_drs.py
 """
@@ -39,9 +40,9 @@ horizon = max(1200.0, 3000.0 / lam0)
 sim = ServingSimulation(model, lam0, horizon=horizon, warmup=0.0, seed=7)
 
 # Decode visits are amplified 48x by the self-loop:
-top = model.topology(lam0)
-print("per-stage traffic:", dict(zip(
-    ["tokenize", "prefill", "decode", "detok"], np.round(top.arrival_rates, 1))))
+graph = model.graph(lam0)
+top = graph.topology()
+print("per-stage traffic:", dict(zip(graph.names, np.round(top.arrival_rates, 1))))
 
 drs = sim.drs_allocation(k_max=20)
 print("DRS split @ 20 chips:", drs)

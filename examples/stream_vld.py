@@ -1,9 +1,14 @@
 """The paper's VLD application end-to-end on the live JAX stream engine,
 with the DRS scheduler closing the loop: measure -> model -> rebalance.
 
+The application is declared ONCE as an AppGraph (repro.api); binding it to
+the engine backend yields a DRSSession that owns scheduler construction,
+measurer wiring, and decision application — the ~40 lines of hand-synced
+name/routing/k plumbing this file used to carry are gone.
+
 Frames flow through extract -> match -> aggregate while a deliberately
 bad allocation starves the extractor; after a measurement window the
-DRSScheduler recommends (and the engine applies) the optimal allocation.
+session's tick() recommends and applies the optimal allocation.
 
     PYTHONPATH=src python examples/stream_vld.py
 """
@@ -12,59 +17,47 @@ import time
 
 import numpy as np
 
-from repro.core import DRSScheduler, SchedulerConfig
-from repro.streaming.apps.vld import VLDConfig, build_vld_operators, logo_library, make_frame
-from repro.streaming.engine import StreamEngine
+from repro.api import SchedulerConfig
+from repro.streaming.apps.vld import VLDConfig, build_vld_graph, logo_library, make_frame
 
 cfg = VLDConfig(height=80, width=80, max_keypoints=24, n_logos=8)
 lib = logo_library(cfg)
-ops, detections = build_vld_operators(cfg, lib)
+graph, detections = build_vld_graph(cfg, lib)
 
-engine = StreamEngine(ops)
-routing = np.zeros((3, 3))
-routing[0][1] = 1.0
-routing[1][2] = 1.0
+session = graph.bind(
+    "engine",
+    config=SchedulerConfig(k_max=6, min_improvement=0.01, horizon_seconds=600.0),
+)
 
 bad = {"extract": 1, "match": 2, "aggregate": 1}
 print(f"[1] starting with a deliberately bad allocation: {bad}")
-engine.start(bad)
-
-sched = DRSScheduler(
-    ["extract", "match", "aggregate"],
-    routing,
-    np.array([bad["extract"], bad["match"], bad["aggregate"]]),
-    SchedulerConfig(k_max=6, min_improvement=0.01, horizon_seconds=600.0),
-    measurer=engine.measurer,
-)
+session.start(bad)
 
 rng = np.random.default_rng(0)
-engine.measurer.pull(time.time())
 t_end = time.time() + 6.0
 sent = 0
 while time.time() < t_end:
-    engine.inject("extract", make_frame(cfg, rng, np.asarray(lib), rng.random() < 0.4))
+    session.inject(make_frame(cfg, rng, np.asarray(lib), rng.random() < 0.4))
     sent += 1
     time.sleep(0.004)
 
-decision = sched.tick()
+decision = session.tick()  # pull -> model -> decide -> apply (if worthwhile)
 print(f"[2] after {sent} frames DRS says: action={decision.action} "
       f"k_target={None if decision.k_target is None else decision.k_target.tolist()}")
 if decision.action == "rebalance":
-    new_alloc = dict(zip(["extract", "match", "aggregate"], decision.k_current.tolist()))
-    print(f"[3] applying rebalance -> {new_alloc}")
-    engine.scale_to(new_alloc)
+    print(f"[3] rebalance applied -> {session.allocation}")
 else:
     print("[3] DRS judges the current allocation adequate (cost/benefit or "
           "<min_improvement) — also a valid outcome; no disruption incurred")
 
 t_end = time.time() + 4.0
 while time.time() < t_end:
-    engine.inject("extract", make_frame(cfg, rng, np.asarray(lib), rng.random() < 0.4))
+    session.inject(make_frame(cfg, rng, np.asarray(lib), rng.random() < 0.4))
     time.sleep(0.02)
 
-engine.drain(timeout=30.0)
-engine.stop()
-lat = np.array(engine.completed_sojourns)
+session.drain(timeout=30.0)
+session.stop()
+lat = np.array(session.completed_sojourns)
 print(f"[4] processed {len(detections)} frames; "
       f"mean sojourn {lat.mean()*1e3:.1f} ms, p95 {np.percentile(lat, 95)*1e3:.1f} ms")
 print(f"    detections fired on {int(sum(d.any() for d in detections))} frames")

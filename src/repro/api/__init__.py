@@ -1,0 +1,40 @@
+"""repro.api — the declarative AppGraph + DRSSession surface (DESIGN.md).
+
+Declare an application once as a typed graph; compile it to the Jackson
+performance model; bind it to any backend (live engine, DES, serving) and
+drive the DRS measure -> model -> rebalance loop through one facade::
+
+    from repro.api import AppGraph, Edge, OpDef, SchedulerConfig
+
+    graph = AppGraph(
+        [OpDef("extract", mu=2.0, fn=...), OpDef("match", mu=5.0, fn=...)],
+        [Edge("extract", "match")],
+        sources={"extract": 13.0},
+    )
+    session = graph.bind("engine", config=SchedulerConfig(k_max=22))
+
+``core.*`` primitives stay importable for backward compatibility; new code
+should declare topologies through this package.
+"""
+
+from ..core.allocator import AllocationResult, InsufficientResourcesError
+from ..core.jackson import Topology, UnstableTopologyError
+from ..core.scheduler import SchedulerConfig, SchedulerDecision
+from .graph import AppGraph, Edge, GraphValidationError, OpDef
+from .session import DESBackend, DRSSession, EngineBackend
+
+__all__ = [
+    "AppGraph",
+    "Edge",
+    "OpDef",
+    "GraphValidationError",
+    "DRSSession",
+    "EngineBackend",
+    "DESBackend",
+    "SchedulerConfig",
+    "SchedulerDecision",
+    "AllocationResult",
+    "InsufficientResourcesError",
+    "Topology",
+    "UnstableTopologyError",
+]

@@ -1,0 +1,386 @@
+"""DRSSession — one AppGraph bound to one backend (DESIGN.md §3).
+
+A session owns the whole measure -> model -> rebalance loop that every
+call site used to assemble by hand: scheduler construction (names, routing
+matrix, scaling lists all derived from the graph), measurer wiring,
+negotiator hookup, tick driving, and decision application.  The same
+``AppGraph`` binds unmodified to:
+
+* :class:`EngineBackend` — the live micro-batch ``StreamEngine`` (worker
+  threads, real wall-clock measurements);
+* :class:`DESBackend` — the discrete-event ``NetworkSimulator`` (simulated
+  time, statistically tight model validation), including the group-scaled
+  chip-gang conversion the serving router used to hand-roll.
+
+Typical use::
+
+    session = graph.bind("engine", config=SchedulerConfig(k_max=6))
+    session.start({"extract": 1, "match": 2, "aggregate": 1})
+    ...inject tuples...
+    session.tick()          # pulls measurements, decides, applies rescale
+    session.drain(); session.stop()
+
+    report = graph.bind("des", seed=3, horizon=2000.0).simulate(k)
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Mapping, Sequence
+
+import numpy as np
+
+from ..core.allocator import AllocationResult, allocate
+from ..core.jackson import Topology
+from ..core.measurer import Measurer
+from ..core.negotiator import Negotiator
+from ..core.rebalance import ExecutableCache, RebalanceCostModel
+from ..core.scheduler import DRSScheduler, SchedulerConfig, SchedulerDecision
+from .graph import AppGraph, GraphValidationError
+
+__all__ = ["DRSSession", "EngineBackend", "DESBackend"]
+
+
+def _group_effective_services(top: Topology, k_vec: np.ndarray):
+    """Convert group-scaled operators for the DES: one fast server at
+    ``mu * k * eff(k)`` instead of k parallel servers (mirrors
+    ``OperatorSpec.scaling == "group"``; DESIGN.md §2)."""
+    from ..streaming.des import ServiceProcess
+
+    services, k_eff = [], []
+    for i, op in enumerate(top.operators):
+        k_i = int(k_vec[i])
+        if op.scaling == "group":
+            eff = 1.0 / (1.0 + op.group_alpha * (k_i - 1))
+            services.append(ServiceProcess(rate=op.mu * k_i * eff))
+            k_eff.append(1)
+        else:
+            services.append(ServiceProcess(rate=op.mu))
+            k_eff.append(k_i)
+    return services, np.asarray(k_eff, dtype=np.int64)
+
+
+class EngineBackend:
+    """Live StreamEngine behind the backend protocol."""
+
+    kind = "engine"
+
+    def __init__(self, graph: AppGraph, *, queue_capacity: int = 10_000):
+        from ..streaming.engine import Operator, StreamEngine
+
+        missing = [op.name for op in graph.ops if op.fn is None]
+        if missing:
+            raise GraphValidationError(
+                f"engine backend needs a compute fn on every operator; "
+                f"missing: {missing} (attach with AppGraph.with_fns)"
+            )
+        self.graph = graph
+        self.engine = StreamEngine(
+            [Operator(op.name, op.fn) for op in graph.ops],
+            queue_capacity=queue_capacity,
+        )
+        self.measurer: Measurer = self.engine.measurer
+
+    def start(self, k: Mapping[str, int]) -> None:
+        self.engine.start(dict(k))
+
+    def apply_allocation(self, k: Mapping[str, int]) -> None:
+        self.engine.scale_to(dict(k))
+
+    def allocation(self) -> dict[str, int]:
+        return self.engine.k()
+
+    def inject(self, payload: Any, source: str | None = None) -> int:
+        if source is None:
+            srcs = self.graph.source_names
+            if len(srcs) != 1:
+                raise GraphValidationError(
+                    f"graph has {len(srcs)} sources {srcs}; pass source= explicitly"
+                )
+            source = srcs[0]
+        return self.engine.inject(source, payload)
+
+    def drain(self, timeout: float = 10.0) -> bool:
+        return self.engine.drain(timeout=timeout)
+
+    def stop(self) -> None:
+        self.engine.stop()
+
+    @property
+    def completed_sojourns(self) -> list[float]:
+        return self.engine.completed_sojourns
+
+
+class DESBackend:
+    """NetworkSimulator behind the backend protocol (simulated time)."""
+
+    kind = "des"
+
+    def __init__(
+        self,
+        graph: AppGraph,
+        *,
+        seed: int = 0,
+        horizon: float = 120.0,
+        warmup: float = 10.0,
+        network_delay: float = 0.0,
+        arrival_kind: str | None = None,
+        measurer: Measurer | None = None,
+    ):
+        self.graph = graph
+        self.seed = seed
+        self.horizon = horizon
+        self.warmup = warmup
+        self.network_delay = network_delay
+        self.arrival_kind = arrival_kind or graph.arrival_kind
+        self.measurer = measurer
+
+    # The DES is batch-simulated, not tick-driven: the live control-loop
+    # protocol fails with a pointer to simulate() instead of AttributeError.
+    def _not_live(self, method: str):
+        raise GraphValidationError(
+            f"DES backend is batch-simulated; {method}() is only available on "
+            "the engine backend — use simulate(k, rebalance_to=, rebalance_at=) "
+            "to run allocation changes in simulated time"
+        )
+
+    def start(self, k):
+        self._not_live("start")
+
+    def apply_allocation(self, k):
+        self._not_live("apply_allocation")
+
+    def allocation(self):
+        self._not_live("allocation")
+
+    def inject(self, payload, source=None):
+        self._not_live("inject")
+
+    def drain(self, timeout: float = 10.0):
+        self._not_live("drain")
+
+    def stop(self):
+        self._not_live("stop")
+
+    @property
+    def completed_sojourns(self):
+        self._not_live("completed_sojourns")
+
+    def simulator(
+        self,
+        k: Mapping[str, int] | Sequence[int] | np.ndarray,
+        *,
+        seed: int | None = None,
+        horizon: float | None = None,
+        warmup: float | None = None,
+    ):
+        """Build a NetworkSimulator for allocation ``k`` (group ops are
+        collapsed to single effective servers)."""
+        from ..streaming.des import ArrivalProcess, NetworkSimulator, ServiceProcess, SimConfig
+
+        graph = self.graph
+        top = graph.topology()
+        k_vec = graph.k_vector(k)
+        services, k_eff = _group_effective_services(top, k_vec)
+        # apply each op's declared DES service distribution, keeping the
+        # (possibly group-effective) rate the helper computed
+        for i, op in enumerate(graph.ops):
+            if op.service_kind != "exponential" or op.service_cv != 1.0:
+                services[i] = ServiceProcess(
+                    rate=services[i].rate, kind=op.service_kind, cv=op.service_cv
+                )
+        arrivals = [
+            ArrivalProcess(rate=float(top.lam0[i]), kind=self.arrival_kind)
+            for i in range(top.n)
+        ]
+        cfg = SimConfig(
+            seed=self.seed if seed is None else seed,
+            horizon=self.horizon if horizon is None else horizon,
+            warmup=self.warmup if warmup is None else warmup,
+            network_delay=self.network_delay,
+        )
+        return NetworkSimulator(
+            top, k_eff, config=cfg, arrivals=arrivals, services=services,
+            measurer=self.measurer,
+        )
+
+    def simulate(
+        self,
+        k: Mapping[str, int] | Sequence[int] | np.ndarray,
+        *,
+        rebalance_to: Mapping[str, int] | Sequence[int] | np.ndarray | None = None,
+        rebalance_at: float | None = None,
+        pause: float = 1.0,
+        seed: int | None = None,
+        horizon: float | None = None,
+        warmup: float | None = None,
+    ):
+        """Run the DES under ``k``; optionally switch to ``rebalance_to``
+        at ``rebalance_at`` (with a processing pause) mid-run."""
+        graph = self.graph
+        sim = self.simulator(k, seed=seed, horizon=horizon, warmup=warmup)
+        if rebalance_to is not None and rebalance_at is not None:
+            top = sim.top
+            k2 = graph.k_vector(rebalance_to)
+            services2, k2_eff = _group_effective_services(top, k2)
+            for i, op in enumerate(top.operators):
+                if op.scaling == "group":
+                    sim.schedule_rate_change(rebalance_at, i, services2[i].rate)
+            sim.rebalance_at(rebalance_at, k2_eff, pause=pause)
+        return sim.run()
+
+
+_BACKENDS = {"engine": EngineBackend, "des": DESBackend}
+
+
+class DRSSession:
+    """One AppGraph + one backend + the DRS control loop.
+
+    Construction wires the scheduler from the graph (names, routing matrix,
+    scaling modes — no positional hand-syncing) and the backend's measurer.
+    ``tick()`` pulls, models, decides, and *applies* the decision to the
+    backend; ``plan()``/``topology()`` expose the model side directly.
+    """
+
+    def __init__(
+        self,
+        graph: AppGraph,
+        backend: EngineBackend | DESBackend,
+        *,
+        config: SchedulerConfig | None = None,
+        negotiator: Negotiator | None = None,
+        cost_model: RebalanceCostModel | None = None,
+        executable_cache: ExecutableCache | None = None,
+        on_decision=None,
+    ):
+        self.graph = graph
+        self.backend = backend
+        self.config = config or SchedulerConfig()
+        self.negotiator = negotiator
+        self.cost_model = cost_model
+        self.executable_cache = executable_cache
+        self.on_decision = on_decision
+        self.scheduler: DRSScheduler | None = None
+
+    # Construction ------------------------------------------------------ #
+    @classmethod
+    def bind(cls, graph: AppGraph, backend: Any = "des", **kwargs) -> "DRSSession":
+        session_keys = ("config", "negotiator", "cost_model", "executable_cache", "on_decision")
+        session_kw = {k: kwargs.pop(k) for k in session_keys if k in kwargs}
+        if isinstance(backend, str):
+            try:
+                backend_cls = _BACKENDS[backend]
+            except KeyError:
+                raise GraphValidationError(
+                    f"unknown backend {backend!r}; expected one of {sorted(_BACKENDS)} "
+                    "or a backend instance"
+                ) from None
+            backend = backend_cls(graph, **kwargs)
+        elif kwargs:
+            raise GraphValidationError(
+                f"unexpected options for pre-built backend: {sorted(kwargs)}"
+            )
+        return cls(graph, backend, **session_kw)
+
+    # Model side --------------------------------------------------------- #
+    def topology(self, mu: Mapping[str, float] | None = None) -> Topology:
+        return self.graph.topology(mu)
+
+    def plan(
+        self, *, k_max: int | None = None, t_max: float | None = None
+    ) -> AllocationResult:
+        """Program (4)/(6) on the declared graph (priors, not measurements)."""
+        k_max = k_max if k_max is not None else self.config.k_max
+        t_max = t_max if t_max is not None else self.config.t_max
+        if k_max is None and t_max is None:
+            raise GraphValidationError(
+                "plan() needs a budget: pass k_max= or t_max=, or bind with "
+                "config=SchedulerConfig(k_max=..., t_max=...)"
+            )
+        return allocate(self.topology(), k_max=k_max, t_max=t_max)
+
+    def split(self, alloc: AllocationResult | Sequence[int] | np.ndarray) -> dict[str, int]:
+        k = alloc.k if isinstance(alloc, AllocationResult) else alloc
+        return self.graph.k_dict(k)
+
+    # Control loop ------------------------------------------------------- #
+    def _build_scheduler(self, k0: np.ndarray) -> DRSScheduler:
+        scaling, group_alpha = self.graph.scaling_lists()
+        return DRSScheduler(
+            self.graph.names,
+            self.graph.routing_matrix(),
+            k0,
+            self.config,
+            measurer=self.backend.measurer,
+            negotiator=self.negotiator,
+            cost_model=self.cost_model,
+            executable_cache=self.executable_cache,
+            scaling=scaling,
+            group_alpha=group_alpha,
+            on_decision=self.on_decision,
+        )
+
+    def start(
+        self, k0: Mapping[str, int] | Sequence[int] | np.ndarray | None = None
+    ) -> dict[str, int]:
+        """Start the backend under ``k0`` (default: the planned optimum)
+        and arm the scheduler.  Returns the starting allocation."""
+        if k0 is None:
+            k0_vec = self.plan().k
+        else:
+            k0_vec = self.graph.k_vector(k0)
+        self.scheduler = self._build_scheduler(k0_vec.copy())
+        self.backend.start(self.graph.k_dict(k0_vec))
+        # Anchor the measurer's pull clock so the first tick has a window.
+        self.backend.measurer.pull(time.time())
+        return self.graph.k_dict(k0_vec)
+
+    def tick(self, now: float | None = None) -> SchedulerDecision:
+        """One scheduler tick: pull -> model -> decide -> apply."""
+        if self.scheduler is None:
+            raise RuntimeError("session not started; call start() first")
+        decision = self.scheduler.tick(now)
+        if decision.action in ("rebalance", "scale_out", "scale_in"):
+            self.backend.apply_allocation(self.graph.k_dict(decision.k_current))
+        return decision
+
+    @property
+    def allocation(self) -> dict[str, int]:
+        if self.scheduler is not None:
+            return self.graph.k_dict(self.scheduler.k_current)
+        return self.backend.allocation()
+
+    @property
+    def history(self) -> list[SchedulerDecision]:
+        return [] if self.scheduler is None else self.scheduler.history
+
+    # Backend pass-throughs ---------------------------------------------- #
+    def inject(self, payload: Any, source: str | None = None) -> int:
+        return self.backend.inject(payload, source=source)
+
+    def drain(self, timeout: float = 10.0) -> bool:
+        return self.backend.drain(timeout=timeout)
+
+    def stop(self) -> None:
+        self.backend.stop()
+
+    @property
+    def completed_sojourns(self) -> list[float]:
+        return self.backend.completed_sojourns
+
+    def simulate(self, k=None, **kwargs):
+        """DES-mode: simulate allocation ``k`` (default: planned optimum)."""
+        if not isinstance(self.backend, DESBackend):
+            raise GraphValidationError(
+                f"simulate() needs a DES backend, have {self.backend.kind!r}"
+            )
+        if k is None:
+            k = self.plan().k
+        return self.backend.simulate(k, **kwargs)
+
+    def run(self, k=None, **kwargs):
+        """One-call entry point: DES -> :meth:`simulate`; engine ->
+        :meth:`start` (then inject/tick/drain at your own pace)."""
+        if isinstance(self.backend, DESBackend):
+            return self.simulate(k, **kwargs)
+        return self.start(k)

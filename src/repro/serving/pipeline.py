@@ -25,10 +25,9 @@ import math
 from dataclasses import dataclass
 from pathlib import Path
 
-import numpy as np
-
+from ..api import AppGraph, Edge, OpDef
 from ..core.allocator import AllocationResult, allocate
-from ..core.jackson import OperatorSpec, Topology
+from ..core.jackson import Topology
 
 __all__ = ["StageRates", "ServingModel", "rates_from_dryrun"]
 
@@ -91,32 +90,52 @@ class ServingModel:
         self.mean_out = mean_output_tokens
         self.group_alpha = group_alpha
         self.host_rate = host_tokenize_rate
+        self._names: list[str] | None = None
+
+    def graph(self, lam0: float) -> AppGraph:
+        """The pipeline as a declarative AppGraph: tokenize(host) ->
+        prefill -> decode (leaking self-loop) -> detokenize(host).
+
+        Chip-group stages use "group" scaling (one gang per stage; mu
+        grows ~linearly with the group's chips, with an efficiency rolloff
+        alpha from the collective share).  Autoregressive decoding is the
+        typed edge ``decode -> decode`` at ``p = 1 - 1/E[output_len]`` —
+        the traffic equations then give lambda_decode = lam0 * E[len].
+        """
+        p_loop = 1.0 - 1.0 / self.mean_out
+        edges = [
+            Edge("tokenize", "prefill"),
+            Edge("prefill", "decode"),  # first token
+            Edge("decode", "detokenize", multiplicity=1.0 - p_loop),
+        ]
+        if p_loop > 0:  # mean_output_tokens == 1: single visit, no loop
+            edges.append(Edge("decode", "decode", multiplicity=p_loop))
+        return AppGraph(
+            [
+                OpDef("tokenize", mu=self.host_rate),
+                OpDef(
+                    "prefill", mu=self.rates.prefill_per_chip, scaling="group",
+                    group_alpha=self.group_alpha,
+                ),
+                OpDef(
+                    "decode", mu=self.rates.decode_per_chip, scaling="group",
+                    group_alpha=self.group_alpha,
+                ),
+                OpDef("detokenize", mu=self.host_rate),
+            ],
+            edges,
+            {"tokenize": lam0},
+        )
+
+    @property
+    def names(self) -> list[str]:
+        if self._names is None:
+            self._names = self.graph(0.0).names
+        return self._names
 
     def topology(self, lam0: float) -> Topology:
-        """Operators: tokenize(host) -> prefill -> decode (self-loop) ->
-        detokenize(host).  Chip-group stages use "group" scaling (one gang
-        per stage; mu grows ~linearly with the group's chips, with an
-        efficiency rolloff alpha from the collective share)."""
-        p_loop = 1.0 - 1.0 / self.mean_out
-        ops = [
-            OperatorSpec("tokenize", mu=self.host_rate, scaling="replica"),
-            OperatorSpec(
-                "prefill", mu=self.rates.prefill_per_chip, scaling="group",
-                group_alpha=self.group_alpha,
-            ),
-            OperatorSpec(
-                "decode", mu=self.rates.decode_per_chip, scaling="group",
-                group_alpha=self.group_alpha,
-            ),
-            OperatorSpec("detokenize", mu=self.host_rate, scaling="replica"),
-        ]
-        routing = np.zeros((4, 4))
-        routing[0][1] = 1.0  # tokenize -> prefill
-        routing[1][2] = 1.0  # prefill -> decode (first token)
-        routing[2][2] = p_loop  # decode -> decode (next token)
-        routing[2][3] = 1.0 - p_loop  # decode -> detokenize (request done)
-        lam0_vec = np.array([lam0, 0.0, 0.0, 0.0])
-        return Topology(ops, lam0_vec, routing)
+        """Compiled Jackson model of :meth:`graph` (back-compat surface)."""
+        return self.graph(lam0).topology()
 
     def plan(
         self,
@@ -129,10 +148,8 @@ class ServingModel:
         return allocate(self.topology(lam0), k_max=k_max, t_max=t_max)
 
     def split(self, alloc: AllocationResult) -> dict[str, int]:
-        names = ["tokenize", "prefill", "decode", "detokenize"]
-        return dict(zip(names, alloc.k.tolist()))
+        return dict(zip(self.names, alloc.k.tolist()))
 
     def expected_latency(self, lam0: float, k: dict[str, int]) -> float:
-        top = self.topology(lam0)
-        kv = np.array([k["tokenize"], k["prefill"], k["decode"], k["detokenize"]])
-        return top.expected_sojourn(kv)
+        graph = self.graph(lam0)
+        return graph.topology().expected_sojourn(graph.k_vector(k))

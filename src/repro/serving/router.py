@@ -1,10 +1,13 @@
 """Serving runtime: request router + continuous batching + DRS control.
 
-Runs in **simulated time** on the DES substrate (streaming/des.py) —
-the same queueing dynamics a real router sees, with service rates taken
-from the dry-run roofline — and exposes the DRS control loop end-to-end:
-requests arrive, the measurer estimates (lambda, mu), the scheduler
-rebalances chips between prefill and decode groups, latency recovers.
+Runs in **simulated time** on the DES substrate via the declarative API
+(``ServingModel.graph(lam0).bind("des")``) — the same queueing dynamics a
+real router sees, with service rates taken from the dry-run roofline —
+and exposes the DRS control loop end-to-end: requests arrive, the measurer
+estimates (lambda, mu), the scheduler rebalances chips between prefill and
+decode groups, latency recovers.  The group-scaled chip-gang conversion
+(one effective server at ``mu * k * eff(k)`` per gang, DESIGN.md §2) is
+owned by :class:`~repro.api.DESBackend`, not hand-rolled here.
 
 benchmarks/bench_serving.py drives this to produce the DRS-vs-static
 comparison; examples/serve_drs.py is the narrative walkthrough.
@@ -14,11 +17,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-import numpy as np
-
+from ..api import DRSSession
 from ..core.allocator import assign_processors
-from ..core.jackson import Topology
-from ..streaming.des import ArrivalProcess, NetworkSimulator, ServiceProcess, SimConfig
 from .pipeline import ServingModel
 
 __all__ = ["ServingSimulation", "ServingReport"]
@@ -60,6 +60,17 @@ class ServingSimulation:
         self.seed = seed
         self.horizon = horizon
         self.warmup = warmup
+        self.graph = model.graph(lam0)
+
+    def session(self, *, arrival_kind: str = "exponential") -> DRSSession:
+        """The serving graph bound to the DES backend."""
+        return self.graph.bind(
+            "des",
+            seed=self.seed,
+            horizon=self.horizon,
+            warmup=self.warmup,
+            arrival_kind=arrival_kind,
+        )
 
     def run(
         self,
@@ -69,59 +80,23 @@ class ServingSimulation:
         rebalance_at: float | None = None,
         arrival_kind: str = "exponential",
     ) -> ServingReport:
-        top = self.model.topology(self.lam0)
-        k = np.array(
-            [allocation[n] for n in ("tokenize", "prefill", "decode", "detokenize")]
+        session = self.session(arrival_kind=arrival_kind)
+        res = session.simulate(
+            allocation,
+            rebalance_to=rebalance_to,
+            rebalance_at=rebalance_at,
+            pause=1.0,
         )
-        # group-scaled stages are modeled in the DES as single fast servers
-        # (M/M/1 at mu_eff) to mirror OperatorSpec.scaling="group".
-        services, k_eff = [], []
-        for i, op in enumerate(top.operators):
-            if op.scaling == "group":
-                eff = 1.0 / (1.0 + op.group_alpha * (int(k[i]) - 1))
-                services.append(ServiceProcess(rate=op.mu * int(k[i]) * eff))
-                k_eff.append(1)
-            else:
-                services.append(ServiceProcess(rate=op.mu))
-                k_eff.append(int(k[i]))
-        arrivals = [
-            ArrivalProcess(rate=float(top.lam0[i]), kind=arrival_kind)
-            for i in range(top.n)
-        ]
-        sim = NetworkSimulator(
-            top,
-            np.array(k_eff),
-            config=SimConfig(seed=self.seed, horizon=self.horizon, warmup=self.warmup),
-            arrivals=arrivals,
-            services=services,
-        )
-        if rebalance_to is not None and rebalance_at is not None:
-            k2 = np.array(
-                [rebalance_to[n] for n in ("tokenize", "prefill", "decode", "detokenize")]
-            )
-            k2_eff = []
-            for i, op in enumerate(top.operators):
-                k2_eff.append(1 if op.scaling == "group" else int(k2[i]))
-            # service-rate changes for the group stages
-            for i, op in enumerate(top.operators):
-                if op.scaling == "group":
-                    eff = 1.0 / (1.0 + op.group_alpha * (int(k2[i]) - 1))
-                    sim.schedule_rate_change(rebalance_at, i, op.mu * int(k2[i]) * eff)
-            sim.rebalance_at(rebalance_at, np.array(k2_eff), pause=1.0)
-        res = sim.run()
+        top = self.graph.topology()
         return ServingReport(
             mean_latency=res.mean_sojourn,
             p95_latency=res.p95_sojourn,
             completed=res.completed,
             allocation=dict(allocation),
-            model_latency=float(top.expected_sojourn(self._k_model(top, k))),
+            model_latency=float(top.expected_sojourn(self.graph.k_vector(allocation))),
             sojourn_series=res.sojourn_series,
         )
 
-    @staticmethod
-    def _k_model(top: Topology, k: np.ndarray) -> np.ndarray:
-        return k
-
     def drs_allocation(self, k_max: int) -> dict[str, int]:
-        alloc = assign_processors(self.model.topology(self.lam0), k_max)
-        return self.model.split(alloc)
+        alloc = assign_processors(self.graph.topology(), k_max)
+        return self.graph.k_dict(alloc.k)

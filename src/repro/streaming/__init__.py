@@ -1,4 +1,9 @@
-"""Streaming substrate: DES model-validation simulator + live JAX engine."""
+"""Streaming substrate: DES model-validation simulator + live JAX engine.
+
+Declare topologies with :mod:`repro.api` (``AppGraph.bind("engine")`` /
+``bind("des")``) rather than wiring these primitives by hand — the classes
+here stay importable as the backend layer.
+"""
 
 from .des import (
     ArrivalProcess,

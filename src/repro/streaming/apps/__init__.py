@@ -1,1 +1,14 @@
-"""The paper's two benchmark applications: VLD (SS V-A) and FPD (SS V-A)."""
+"""The paper's two benchmark applications: VLD (SS V-A) and FPD (SS V-A).
+
+Each exposes a ``build_*_graph`` constructor returning a declarative
+:class:`repro.api.AppGraph` (the preferred surface) alongside the raw
+``build_*_operators`` engine wiring.
+"""
+
+from .fpd import FPDConfig, build_fpd_graph, build_fpd_operators
+from .vld import VLDConfig, build_vld_graph, build_vld_operators
+
+__all__ = [
+    "FPDConfig", "build_fpd_graph", "build_fpd_operators",
+    "VLDConfig", "build_vld_graph", "build_vld_operators",
+]

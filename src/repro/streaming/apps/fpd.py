@@ -37,6 +37,7 @@ __all__ = [
     "maximal_frequent",
     "SlidingWindowState",
     "build_fpd_operators",
+    "build_fpd_graph",
 ]
 
 
@@ -211,3 +212,34 @@ def build_fpd_operators(cfg: FPDConfig):
         Operator("report", report_fn),
     ]
     return ops, state, reports
+
+
+def build_fpd_graph(
+    cfg: FPDConfig,
+    *,
+    rate: float = 16.0,
+    loop_p: float = 0.3,
+    mus: tuple[float, float, float] = (4.0, 3.0, 12.0),
+):
+    """The FPD application as a declarative :class:`~repro.api.AppGraph`.
+
+    generate -> detect -> report with the detector's leaking SELF-LOOP
+    declared as a typed edge (``detect -> detect`` at expected multiplicity
+    ``loop_p`` — the mean rate of MFP state-change notifications per
+    event).  The loop leaks (``loop_p < 1``), so the graph's construction-
+    time stability check passes; a non-leaking declaration would raise.
+    Returns ``(graph, state, reports)``.
+    """
+    from ...api import AppGraph, Edge, OpDef
+
+    ops, state, reports = build_fpd_operators(cfg)
+    graph = AppGraph(
+        [OpDef(op.name, mu=mu, fn=op.fn) for op, mu in zip(ops, mus)],
+        [
+            Edge("generate", "detect"),
+            Edge("detect", "detect", multiplicity=loop_p),
+            Edge("detect", "report", multiplicity=1.0 - loop_p),
+        ],
+        {"generate": rate},
+    )
+    return graph, state, reports

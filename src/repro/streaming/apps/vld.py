@@ -33,7 +33,8 @@ import numpy as np
 from ...kernels.l2_match import ops as l2_ops
 
 __all__ = ["VLDConfig", "make_frame", "extract_features", "match_features",
-           "aggregate_matches", "build_vld_operators", "logo_library"]
+           "aggregate_matches", "build_vld_operators", "build_vld_graph",
+           "logo_library"]
 
 
 @dataclass(frozen=True)
@@ -197,3 +198,29 @@ def build_vld_operators(cfg: VLDConfig, library: jnp.ndarray):
         Operator("aggregate", aggregate_fn),
     ]
     return ops, detections
+
+
+def build_vld_graph(
+    cfg: VLDConfig,
+    library: jnp.ndarray,
+    *,
+    fps: float = 13.0,
+    mus: tuple[float, float, float] = (2.0, 5.0, 50.0),
+):
+    """The VLD application as a declarative :class:`~repro.api.AppGraph`.
+
+    The chain extract -> match -> aggregate with the frame stream entering
+    at the extractor; ``mus`` are the paper-§V-B-scale service-rate priors
+    (the measurer corrects them online).  Returns ``(graph, detections)``
+    where ``detections`` collects the aggregator's per-frame outputs.
+    """
+    from ...api import AppGraph, Edge, OpDef
+
+    ops, detections = build_vld_operators(cfg, library)
+    graph = AppGraph(
+        [OpDef(op.name, mu=mu, fn=op.fn) for op, mu in zip(ops, mus)],
+        [Edge("extract", "match"), Edge("match", "aggregate")],
+        {"extract": fps},
+        arrival_kind="uniform",  # the paper's uniform [1, 25] fps
+    )
+    return graph, detections

@@ -1,0 +1,133 @@
+"""Minimal stand-in for `hypothesis` when it is not installed.
+
+The tier-1 suite must *collect and run* everywhere, including hermetic
+containers without dev dependencies (see requirements-dev.txt for the real
+pin).  This shim implements just the surface our tests use —
+``@given(...)`` with keyword/positional strategies, ``@settings(...)``,
+and the ``st.integers / st.floats / st.sampled_from / st.booleans``
+strategies — as a deterministic seeded random sweep.  No shrinking, no
+database, no adaptive search: when real hypothesis is available it is
+always preferred (tests import it first and fall back here).
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+import random
+from dataclasses import dataclass
+from typing import Any, Callable, Sequence
+
+__all__ = ["given", "settings", "strategies"]
+
+_SEED = int(os.environ.get("FALLBACK_HYPOTHESIS_SEED", "20150361"))
+_DEFAULT_EXAMPLES = 20
+
+
+@dataclass(frozen=True)
+class _Strategy:
+    sample: Callable[[random.Random], Any]
+
+    def example_stream(self, rng: random.Random):
+        while True:
+            yield self.sample(rng)
+
+
+class _Strategies:
+    """The `st` namespace: each call returns a sampling strategy."""
+
+    @staticmethod
+    def integers(min_value: int = -(1 << 16), max_value: int = 1 << 16) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(
+        min_value: float = -1e6,
+        max_value: float = 1e6,
+        allow_nan: bool = False,
+        allow_infinity: bool = False,
+    ) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements: Sequence[Any]) -> _Strategy:
+        items = list(elements)
+        return _Strategy(lambda rng: rng.choice(items))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def lists(elems: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+        return _Strategy(
+            lambda rng: [elems.sample(rng) for _ in range(rng.randint(min_size, max_size))]
+        )
+
+
+strategies = _Strategies()
+
+
+def settings(**kwargs):
+    """Record requested settings (only max_examples matters here)."""
+
+    def deco(fn):
+        fn._fallback_settings = dict(kwargs)
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+    """Run the test once per sampled example (deterministic seed).
+
+    Mirrors hypothesis' decorator contract closely enough for our suite:
+    positional strategies fill the test's positional parameters, keyword
+    strategies its keyword parameters, and ``@settings(max_examples=N)``
+    (applied before or after) bounds the sweep.
+    """
+
+    def deco(fn):
+        orig_params = list(inspect.signature(fn).parameters)
+        kw_names = set(kw_strategies)
+        non_kw = [p for p in orig_params if p not in kw_names]
+        # hypothesis fills positional strategies from the right
+        pos_targets = non_kw[len(non_kw) - len(arg_strategies):] if arg_strategies else []
+        fixture_params = [p for p in non_kw if p not in pos_targets]
+
+        @functools.wraps(fn)
+        def wrapper(*fixture_args, **fixture_kwargs):
+            bound = dict(zip(fixture_params, fixture_args))
+            bound.update(fixture_kwargs)
+            # @settings may sit above or below @given; functools.wraps
+            # copies the marker up, so the wrapper always carries it.
+            n = int(
+                getattr(wrapper, "_fallback_settings", {}).get(
+                    "max_examples", _DEFAULT_EXAMPLES
+                )
+            )
+            rng = random.Random(_SEED)
+            for i in range(n):
+                drawn = dict(zip(pos_targets, (s.sample(rng) for s in arg_strategies)))
+                drawn.update({k: s.sample(rng) for k, s in kw_strategies.items()})
+                try:
+                    fn(**bound, **drawn)
+                except Exception:
+                    print(f"\n[fallback-hypothesis] failing example #{i}: {drawn}")
+                    raise
+
+        # Hide the strategy-filled params from pytest's fixture resolution:
+        # only genuine fixtures remain in the visible signature.
+        wrapper.__signature__ = inspect.Signature(
+            [
+                inspect.Parameter(p, inspect.Parameter.POSITIONAL_OR_KEYWORD)
+                for p in fixture_params
+            ]
+        )
+        wrapper.__dict__.pop("__wrapped__", None)
+        # keep the settings marker reachable if @settings is applied above us
+        wrapper._fallback_given = True
+        return wrapper
+
+    return deco

@@ -1,0 +1,311 @@
+"""Tests for the declarative AppGraph + DRSSession API (repro.api).
+
+Covers: graph -> routing-matrix round-trips for split/join/loop shapes,
+construction-time validation errors, scheduler wiring derived from the
+graph, and the flagship acceptance check — ONE AppGraph binding unmodified
+to both the live StreamEngine and the DES NetworkSimulator with identical
+traffic equations.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    AppGraph,
+    DESBackend,
+    Edge,
+    EngineBackend,
+    GraphValidationError,
+    OpDef,
+    SchedulerConfig,
+    UnstableTopologyError,
+)
+from repro.serving.pipeline import ServingModel, StageRates
+from repro.streaming.apps.fpd import FPDConfig, build_fpd_graph
+from repro.streaming.apps.vld import VLDConfig, build_vld_graph, logo_library
+
+
+# --------------------------------------------------------------------- #
+# Graph -> routing matrix round-trips
+# --------------------------------------------------------------------- #
+def test_chain_roundtrip_vld_shape():
+    g = AppGraph.chain([("extract", 2.0), ("match", 5.0), ("agg", 50.0)], lam0=13.0)
+    expect = np.zeros((3, 3))
+    expect[0][1] = 1.0
+    expect[1][2] = 1.0
+    np.testing.assert_array_equal(g.routing_matrix(), expect)
+    np.testing.assert_array_equal(g.lam0_vector(), [13.0, 0.0, 0.0])
+    np.testing.assert_allclose(g.topology().arrival_rates, [13.0, 13.0, 13.0])
+    assert g.names == ["extract", "match", "agg"]
+    assert g.index == {"extract": 0, "match": 1, "agg": 2}
+
+
+def test_split_join_roundtrip():
+    # A -> (B, C) -> D (paper Fig. 2 without the loop)
+    g = AppGraph(
+        [OpDef(n, 10.0) for n in "ABCD"],
+        [Edge("A", "B", 0.5), Edge("A", "C", 0.5), Edge("B", "D"), Edge("C", "D")],
+        {"A": 8.0},
+    )
+    r = g.routing_matrix()
+    assert r[0][1] == 0.5 and r[0][2] == 0.5 and r[1][3] == 1.0 and r[2][3] == 1.0
+    np.testing.assert_allclose(g.topology().arrival_rates, [8.0, 4.0, 4.0, 8.0])
+
+
+def test_leaking_self_loop_roundtrip_fpd_shape():
+    g = AppGraph(
+        [OpDef("gen", 10.0), OpDef("det", 12.0), OpDef("rep", 40.0)],
+        [Edge("gen", "det"), Edge("det", "det", 0.35), Edge("det", "rep", 0.65)],
+        {"gen": 5.0},
+    )
+    lam = g.topology().arrival_rates
+    assert lam[1] == pytest.approx(5.0 / 0.65)  # amplification 1/(1-p)
+    assert lam[2] == pytest.approx(5.0)
+
+
+def test_fanout_multiplicity_above_one():
+    g = AppGraph(
+        [OpDef("ext", 2.0), OpDef("match", 30.0)],
+        [Edge("ext", "match", 7.0)],  # 7 features per frame on average
+        {"ext": 13.0},
+    )
+    np.testing.assert_allclose(g.topology().arrival_rates, [13.0, 91.0])
+
+
+def test_k_vector_dict_roundtrip():
+    g = AppGraph.chain([("a", 2.0), ("b", 5.0)], lam0=1.0)
+    np.testing.assert_array_equal(g.k_vector({"b": 3, "a": 7}), [7, 3])
+    assert g.k_dict([7, 3]) == {"a": 7, "b": 3}
+    with pytest.raises(GraphValidationError):
+        g.k_vector({"a": 7})  # missing operator
+    with pytest.raises(GraphValidationError):
+        g.k_vector([1, 2, 3])  # wrong shape
+
+
+def test_mu_overrides_compile_into_topology():
+    g = AppGraph.chain([("a", 2.0), ("b", 5.0)], lam0=1.0)
+    top = g.topology(mu={"b": 9.0})
+    assert top.operators[0].mu == 2.0
+    assert top.operators[1].mu == 9.0
+    with pytest.raises(GraphValidationError):
+        g.topology(mu={"zzz": 1.0})
+
+
+# --------------------------------------------------------------------- #
+# Construction-time validation
+# --------------------------------------------------------------------- #
+def test_non_leaking_loop_raises_at_construction():
+    with pytest.raises(UnstableTopologyError):
+        AppGraph(
+            [OpDef("a", 1.0), OpDef("b", 1.0)],
+            [Edge("a", "b"), Edge("b", "a")],  # a->b->a forever
+            {"a": 1.0},
+        )
+
+
+def test_full_strength_self_loop_raises():
+    with pytest.raises(UnstableTopologyError):
+        AppGraph([OpDef("d", 1.0)], [Edge("d", "d", 1.0)], {"d": 1.0})
+
+
+def test_unknown_edge_endpoint_raises():
+    with pytest.raises(GraphValidationError, match="unknown operator"):
+        AppGraph([OpDef("a", 1.0)], [Edge("a", "ghost")], {"a": 1.0})
+
+
+def test_duplicate_names_raise():
+    with pytest.raises(GraphValidationError, match="duplicate"):
+        AppGraph([OpDef("a", 1.0), OpDef("a", 2.0)], [], {"a": 1.0})
+
+
+def test_bad_rates_raise():
+    with pytest.raises(GraphValidationError):
+        AppGraph([OpDef("a", 0.0)], [], {"a": 1.0})  # mu must be > 0
+    with pytest.raises(GraphValidationError):
+        AppGraph([OpDef("a", 1.0)], [], {"ghost": 1.0})  # unknown source
+    with pytest.raises(GraphValidationError):
+        AppGraph([OpDef("a", 1.0)], [Edge("a", "a", -0.5)], {"a": 1.0})
+    with pytest.raises(GraphValidationError):
+        AppGraph([OpDef("a", 1.0), OpDef("b", 1.0)],
+                 [Edge("a", "b"), Edge("a", "b")], {"a": 1.0})  # dup edge
+
+
+def test_engine_backend_requires_fns():
+    g = AppGraph.chain([("a", 2.0), ("b", 5.0)], lam0=1.0)  # model-only
+    with pytest.raises(GraphValidationError, match="compute fn"):
+        g.bind("engine")
+
+
+def test_unknown_backend_name_raises():
+    g = AppGraph.chain([("a", 2.0)], lam0=1.0)
+    with pytest.raises(GraphValidationError, match="unknown backend"):
+        g.bind("storm")
+
+
+# --------------------------------------------------------------------- #
+# Session wiring
+# --------------------------------------------------------------------- #
+def test_session_plan_and_split():
+    g = AppGraph.chain([("extract", 2.0), ("match", 5.0), ("agg", 50.0)], lam0=13.0)
+    session = g.bind("des")
+    best = session.plan(k_max=22)
+    assert best.k.sum() == 22
+    split = session.split(best)
+    assert set(split) == {"extract", "match", "agg"}
+    assert sum(split.values()) == 22
+
+
+def test_session_scheduler_derived_from_graph():
+    """The scheduler's names/routing/scaling all come from the graph —
+    no positional hand-syncing anywhere."""
+    g = AppGraph(
+        [
+            OpDef("host", 100.0, fn=lambda x: [("gang", x)]),
+            OpDef("gang", 3.0, fn=lambda x: [], scaling="group", group_alpha=0.02),
+        ],
+        [Edge("host", "gang")],
+        {"host": 1.0},
+    )
+    session = g.bind("engine", config=SchedulerConfig(k_max=4))
+    session.start({"host": 1, "gang": 1})
+    sched = session.scheduler
+    assert sched.names == g.names
+    np.testing.assert_array_equal(sched.base_routing, g.routing_matrix())
+    assert sched.scaling == ["replica", "group"]
+    assert sched.group_alpha == [0.0, 0.02]
+    session.stop()
+
+
+def test_engine_session_tick_applies_rebalance():
+    """Live loop end-to-end: a starved first operator gets workers after
+    tick() — decision application is the session's job, not the caller's."""
+    g = AppGraph(
+        [
+            OpDef("slow", 50.0, fn=lambda x: [("fast", x)]),
+            OpDef("fast", 5000.0, fn=lambda x: []),
+        ],
+        [Edge("slow", "fast")],
+        {"slow": 100.0},
+    )
+    session = g.bind(
+        "engine", config=SchedulerConfig(k_max=6, min_improvement=0.0)
+    )
+    session.start({"slow": 1, "fast": 1})
+    t_end = time.time() + 2.0
+    while time.time() < t_end:
+        session.inject("tuple")
+        time.sleep(0.002)
+    decision = session.tick()
+    assert decision.action in ("rebalance", "none")
+    if decision.action == "rebalance":
+        # the engine was actually rescaled to match the scheduler
+        assert session.backend.engine.k() == session.allocation
+    assert session.drain(timeout=10.0)
+    session.stop()
+    assert len(session.completed_sojourns) > 0
+
+
+# --------------------------------------------------------------------- #
+# The acceptance check: one graph, two backends, same traffic equations
+# --------------------------------------------------------------------- #
+def test_one_graph_binds_to_both_backends_identical_traffic():
+    g = AppGraph(
+        [
+            OpDef("gen", 10.0, fn=lambda x: [("det", x)]),
+            OpDef("det", 12.0, fn=lambda x: []),
+            OpDef("rep", 40.0, fn=lambda x: []),
+        ],
+        [Edge("gen", "det"), Edge("det", "det", 0.35), Edge("det", "rep", 0.65)],
+        {"gen": 5.0},
+    )
+    eng = g.bind("engine")
+    des = g.bind("des", seed=3, horizon=400.0, warmup=40.0)
+    assert isinstance(eng.backend, EngineBackend)
+    assert isinstance(des.backend, DESBackend)
+
+    # Identical model compilation from the single declaration...
+    t_eng, t_des = eng.topology(), des.topology()
+    np.testing.assert_array_equal(t_eng.routing, t_des.routing)
+    np.testing.assert_array_equal(t_eng.lam0, t_des.lam0)
+    np.testing.assert_allclose(t_eng.arrival_rates, t_des.arrival_rates)
+    # ...and the engine-side scheduler sees the very same routing.
+    eng.start({"gen": 1, "det": 1, "rep": 1})
+    np.testing.assert_array_equal(eng.scheduler.base_routing, t_des.routing)
+    eng.stop()
+
+    # The DES realises those traffic equations empirically.
+    res = des.simulate({"gen": 1, "det": 2, "rep": 1})
+    np.testing.assert_allclose(
+        res.per_op_arrival_rate, t_des.arrival_rates, rtol=0.1
+    )
+
+
+def test_vld_graph_runs_on_both_backends():
+    cfg = VLDConfig(height=32, width=32, max_keypoints=16, n_logos=4)
+    lib = logo_library(cfg)
+    graph, detections = build_vld_graph(cfg, lib)
+
+    # DES side: model validation without touching JAX compute.
+    des = graph.bind("des", seed=1, horizon=200.0, warmup=20.0)
+    res = des.simulate({"extract": 8, "match": 4, "aggregate": 1})
+    np.testing.assert_allclose(
+        res.per_op_arrival_rate, des.topology().arrival_rates, rtol=0.15
+    )
+
+    # Engine side: the same graph object runs frames for real.
+    from repro.streaming.apps.vld import make_frame
+
+    eng = graph.bind("engine")
+    eng.start({"extract": 2, "match": 1, "aggregate": 1})
+    rng = np.random.default_rng(5)
+    n = 6
+    for _ in range(n):
+        eng.inject(make_frame(cfg, rng, np.asarray(lib), rng.random() < 0.5))
+    assert eng.drain(timeout=30.0)
+    eng.stop()
+    assert len(detections) == n
+
+
+def test_fpd_graph_self_loop_on_engine():
+    cfg = FPDConfig(n_items=8, max_pattern_size=2, window=16, support_threshold=4)
+    graph, state, reports = build_fpd_graph(cfg)
+    assert graph.routing_matrix()[1][1] == pytest.approx(0.3)  # declared loop
+    session = graph.bind("engine")
+    session.start({"generate": 1, "detect": 1, "report": 1})
+    from repro.streaming.apps.fpd import pack_itemset, random_transaction
+
+    rng = np.random.default_rng(6)
+    hot = pack_itemset([0, 1])
+    for i in range(24):
+        mask = hot if i % 2 == 0 else random_transaction(cfg, rng)
+        session.inject((mask, True))
+    assert session.drain(timeout=30.0)
+    session.stop()
+    assert len(reports) > 0
+    assert hot in state.current_mfps()
+
+
+def test_serving_graph_declares_decode_loop():
+    model = ServingModel(
+        StageRates(prefill_per_chip=0.5, decode_per_chip=40.0),
+        mean_output_tokens=32.0,
+        group_alpha=0.0,
+        host_tokenize_rate=500.0,
+    )
+    g = model.graph(lam0=2.0)
+    assert g.names == ["tokenize", "prefill", "decode", "detokenize"]
+    r = g.routing_matrix()
+    assert r[2][2] == pytest.approx(1.0 - 1.0 / 32.0)
+    lam = g.topology().arrival_rates
+    assert lam[2] == pytest.approx(2.0 * 32.0)  # one decode visit per token
+    # group-scaled ops collapse to single effective servers in the DES
+    from repro.api.session import _group_effective_services
+
+    services, k_eff = _group_effective_services(g.topology(), g.k_vector(
+        {"tokenize": 1, "prefill": 8, "decode": 10, "detokenize": 1}
+    ))
+    np.testing.assert_array_equal(k_eff, [1, 1, 1, 1])
+    assert services[1].rate == pytest.approx(0.5 * 8)
+    assert services[2].rate == pytest.approx(40.0 * 10)

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # no dev deps installed — deterministic fallback sweep
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.kernels.l2_match import kernel, ops, ref
 

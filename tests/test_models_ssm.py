@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # no dev deps installed — deterministic fallback sweep
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.models.ssm import rwkv6_chunked, rwkv6_step, ssd_chunked, ssd_step
 

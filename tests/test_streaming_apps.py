@@ -18,7 +18,6 @@ from repro.streaming.apps.fpd import (
 from repro.streaming.apps.vld import (
     VLDConfig,
     aggregate_matches,
-    build_vld_operators,
     extract_features,
     logo_library,
     make_frame,
@@ -201,34 +200,38 @@ def test_engine_rescale_midstream():
 
 
 def test_engine_vld_end_to_end():
+    """VLD through the declarative API: one AppGraph, engine session."""
+    from repro.streaming.apps.vld import build_vld_graph
+
     cfg = VLDConfig(height=32, width=32, max_keypoints=16, n_logos=4)
     lib = logo_library(cfg)
-    ops, detections = build_vld_operators(cfg, lib)
-    eng = StreamEngine(ops)
-    eng.start({"extract": 2, "match": 1, "aggregate": 1})
+    graph, detections = build_vld_graph(cfg, lib)
+    session = graph.bind("engine")
+    session.start({"extract": 2, "match": 1, "aggregate": 1})
     rng = np.random.default_rng(5)
     n = 12
     for _ in range(n):
-        eng.inject("extract", make_frame(cfg, rng, np.asarray(lib), rng.random() < 0.5))
-    assert eng.drain(timeout=30.0)
-    eng.stop()
+        session.inject(make_frame(cfg, rng, np.asarray(lib), rng.random() < 0.5))
+    assert session.drain(timeout=30.0)
+    session.stop()
     assert len(detections) == n
     assert all(d.shape == (cfg.n_logos,) for d in detections)
 
 
 def test_engine_fpd_end_to_end_with_self_loop():
+    """FPD through the declarative API: the self-loop is a typed edge."""
+    from repro.streaming.apps.fpd import build_fpd_graph
+
     cfg = FPDConfig(n_items=8, max_pattern_size=2, window=16, support_threshold=4)
-    ops, state, reports = __import__(
-        "repro.streaming.apps.fpd", fromlist=["build_fpd_operators"]
-    ).build_fpd_operators(cfg)
-    eng = StreamEngine(ops)
-    eng.start({"generate": 1, "detect": 1, "report": 1})
+    graph, state, reports = build_fpd_graph(cfg)
+    session = graph.bind("engine")
+    session.start({"generate": 1, "detect": 1, "report": 1})
     rng = np.random.default_rng(6)
     hot = pack_itemset([0, 1])
     for i in range(24):
         mask = hot if i % 2 == 0 else random_transaction(cfg, rng)
-        eng.inject("generate", (mask, True))
-    assert eng.drain(timeout=30.0)
-    eng.stop()
+        session.inject((mask, True))
+    assert session.drain(timeout=30.0)
+    session.stop()
     assert len(reports) > 0  # MFP state changes were reported
     assert hot in state.current_mfps()  # the hot pattern is maximal-frequent
