@@ -1,0 +1,224 @@
+"""Flash-crowd overload reproduction (paper Fig. 9/10 mid-run shifts).
+
+Three parts (DESIGN.md §11):
+
+* **A — DES flash crowd**: a 2x external-rate step on a bounded-queue
+  chain under each :class:`~repro.streaming.overload.OverloadPolicy`,
+  versus the unbounded baseline.  Bounded queues keep the backlog (and
+  therefore the post-burst recovery time) flat; the unbounded baseline
+  absorbs the whole burst into queueing delay and takes far longer to
+  drain back under the target.
+* **B — engine vs DES drop agreement**: the same AppGraph, deterministic
+  arrivals and service, run live (worker threads, wall clock) and
+  simulated; per-operator drop rates must agree within ~10%.
+* **C — scheduler overload path**: a live engine session driven at 2x its
+  capacity; the first tick must emit the ``"overloaded"`` decision (the
+  negotiator leases immediately), after which measured sojourn recovers
+  below T_max.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.api import AppGraph, OpDef
+from repro.core import Machine, Negotiator, ResourcePool, SchedulerConfig
+from repro.streaming.des import NetworkSimulator, SimConfig
+from repro.streaming.overload import OVERLOAD_POLICIES
+
+# --------------------------------------------------------------------- #
+# Part A: DES flash crowd — 2x rate step under each policy
+# --------------------------------------------------------------------- #
+BASE_RATE = 6.0  # tuples/s; step to 2x mid-run
+T_TARGET = 1.0  # recovery threshold on windowed mean sojourn (seconds)
+
+
+def _flash_crowd_sim(queue_capacity, policy, seed=0):
+    """Chain extract(mu=4, k=2) -> agg(mu=40, k=1); rho=0.75 at the base
+    rate, 1.5 during the burst (t in [300, 500))."""
+    graph = AppGraph.chain([("extract", 4.0), ("agg", 40.0)], lam0=BASE_RATE)
+    top = graph.topology()
+    sim = NetworkSimulator(
+        top,
+        [2, 1],
+        config=SimConfig(
+            seed=seed,
+            horizon=900.0,
+            warmup=0.0,
+            queue_capacity=queue_capacity,
+            overload_policy=policy,
+        ),
+    )
+    sim.schedule_arrival_change(300.0, 0, 2 * BASE_RATE)
+    sim.schedule_arrival_change(500.0, 0, BASE_RATE)
+    return sim.run()
+
+
+def _recovery_time(res, t_end=500.0, window=20.0):
+    """First time after the burst when the windowed mean sojourn stays
+    below T_TARGET (np.nan if it never recovers within the horizon)."""
+    ts = np.array([t for t, _ in res.sojourn_series])
+    sj = np.array([s for _, s in res.sojourn_series])
+    for t in np.arange(t_end, ts.max() - window if ts.size else t_end, window / 2):
+        sel = (ts >= t) & (ts < t + window)
+        if sel.any() and float(sj[sel].mean()) < T_TARGET:
+            return float(t - t_end)
+    return float("nan")
+
+
+def _part_a(rows):
+    baseline = _flash_crowd_sim(queue_capacity=None, policy="shed-newest", seed=1)
+    rows.append((
+        "flashcrowd_unbounded_recovery_s", _recovery_time(baseline),
+        f"s after burst end; max backlog {int(baseline.per_op_max_backlog.max())} "
+        f"tuples, p95 sojourn {baseline.p95_sojourn:.2f}s (baseline)",
+    ))
+    for policy in OVERLOAD_POLICIES:
+        res = _flash_crowd_sim(queue_capacity=50, policy=policy, seed=1)
+        drop_rate = float(res.per_op_drop_rate.sum())
+        rows.append((
+            f"flashcrowd_{policy}_recovery_s", _recovery_time(res),
+            f"s after burst end; cap=50, max backlog "
+            f"{int(res.per_op_max_backlog.max())}, dropped {res.dropped} "
+            f"({drop_rate:.2f}/s), shed roots {res.shed_roots}, "
+            f"completed {res.completed}",
+        ))
+
+
+# --------------------------------------------------------------------- #
+# Part B: engine vs DES per-op drop-rate agreement on one AppGraph
+# --------------------------------------------------------------------- #
+SERVICE_S = 0.05  # engine op busy time -> mu = 20/s
+OFFER_RATE = 40.0  # 2x capacity at k=1
+CAPACITY = 4  # queue bound
+
+
+def _agreement_graph():
+    def work(_x):
+        time.sleep(SERVICE_S)
+        return []
+
+    return AppGraph(
+        [OpDef("work", mu=1.0 / SERVICE_S, fn=work, service_kind="deterministic")],
+        [],
+        {"work": OFFER_RATE},
+        arrival_kind="deterministic",
+    )
+
+
+def _part_b(rows):
+    graph = _agreement_graph()
+    # Live engine: deterministic injection at OFFER_RATE for ~3 s.
+    session = graph.bind(
+        "engine", queue_capacity=CAPACITY, overload_policy="shed-newest"
+    )
+    session.start({"work": 1})
+    period = 1.0 / OFFER_RATE
+    t0 = time.perf_counter()
+    offered = 0
+    while time.perf_counter() - t0 < 3.0:
+        session.inject(offered)
+        offered += 1
+        target = t0 + offered * period
+        if (sleep_for := target - time.perf_counter()) > 0:
+            time.sleep(sleep_for)
+    elapsed = time.perf_counter() - t0
+    session.drain(timeout=10.0)
+    session.stop()
+    eng_drop_rate = session.drop_counts()["work"] / elapsed
+    # DES: same graph, same policy, 100 simulated seconds.
+    des = graph.bind(
+        "des", queue_capacity=CAPACITY, overload_policy="shed-newest",
+        horizon=100.0, warmup=5.0,
+    ).simulate([1])
+    des_drop_rate = float(des.per_op_drop_rate[0])
+    ratio = eng_drop_rate / des_drop_rate if des_drop_rate > 0 else float("nan")
+    rows.append((
+        "drop_agreement_engine_per_s", eng_drop_rate,
+        f"engine sheds/s at offered {OFFER_RATE}/s, capacity ~{1/SERVICE_S:.0f}/s",
+    ))
+    rows.append((
+        "drop_agreement_des_per_s", des_drop_rate,
+        f"DES sheds/s on the same AppGraph (ratio {ratio:.3f}; "
+        f"{'within' if abs(ratio - 1) <= 0.10 else 'OUTSIDE'} 10%)",
+    ))
+
+
+# --------------------------------------------------------------------- #
+# Part C: live scheduler — "overloaded" decision, then recovery < T_max
+# --------------------------------------------------------------------- #
+T_MAX = 0.5
+
+
+def _part_c(rows):
+    def work(_x):
+        time.sleep(SERVICE_S)
+        return []
+
+    graph = AppGraph(
+        [OpDef("work", mu=1.0 / SERVICE_S, fn=work)], [], {"work": OFFER_RATE}
+    )
+    pool = ResourcePool([Machine(f"m{i}", 1) for i in range(8)])
+    negotiator = Negotiator(pool)
+    negotiator.ensure(1)
+    session = graph.bind(
+        "engine",
+        queue_capacity=CAPACITY,
+        overload_policy="shed-newest",
+        config=SchedulerConfig(t_max=T_MAX, min_improvement=0.01),
+        negotiator=negotiator,
+    )
+    session.start({"work": 1})  # capacity 20/s vs 40/s offered
+    period = 1.0 / OFFER_RATE
+
+    def drive(seconds):
+        t0 = time.perf_counter()
+        sent = 0
+        while time.perf_counter() - t0 < seconds:
+            session.inject(sent)
+            sent += 1
+            target = t0 + sent * period
+            if (dt := target - time.perf_counter()) > 0:
+                time.sleep(dt)
+
+    drive(2.0)
+    k_before = negotiator.k_max
+    decision = session.tick()
+    k_after = negotiator.k_max
+    rows.append((
+        "scheduler_overload_k_max", k_after,
+        f"decision '{decision.action}' (expect 'overloaded'); k_max "
+        f"{k_before} -> {k_after}, allocation {session.allocation}",
+    ))
+    # Post-scale-out: same offered load, now feasible; measure recovery.
+    n_before = len(session.completed_sojourns)
+    drive(2.0)
+    session.drain(timeout=10.0)
+    session.tick()
+    recovered = session.completed_sojourns[n_before:]
+    tail = float(np.mean(recovered[len(recovered) // 2 :])) if recovered else float("nan")
+    session.stop()
+    rows.append((
+        "scheduler_overload_recovered_sojourn_s", tail,
+        f"measured mean sojourn after scale-out (T_max {T_MAX}s "
+        f"{'met' if tail < T_MAX else 'MISSED'})",
+    ))
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows: list[tuple[str, float, str]] = []
+    _part_a(rows)
+    _part_b(rows)
+    _part_c(rows)
+    return rows
+
+
+def main() -> None:
+    for name, val, note in run():
+        print(f"{name},{val},{note}")
+
+
+if __name__ == "__main__":
+    main()

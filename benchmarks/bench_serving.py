@@ -10,7 +10,6 @@ from __future__ import annotations
 
 from pathlib import Path
 
-import numpy as np
 
 from repro.serving.pipeline import ServingModel, StageRates, rates_from_dryrun
 from repro.serving.router import ServingSimulation

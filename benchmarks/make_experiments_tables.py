@@ -6,10 +6,8 @@ dry-run records (so the document is reproducible from artifacts).
 
 from __future__ import annotations
 
-import json
-from pathlib import Path
 
-from .roofline import ARCH_ORDER, SHAPE_ORDER, RESULTS, load, roofline_fraction, table
+from .roofline import load, table
 
 
 def dryrun_table(mesh: str) -> str:

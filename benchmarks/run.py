@@ -6,6 +6,8 @@ Prints ``name,value,derived`` CSV rows per benchmark.  Mapping:
   bench_model_accuracy   -> paper Fig. 6 + 7 (allocation quality; est vs meas)
   bench_underestimation  -> paper Fig. 8     (out-of-model cost ratio)
   bench_rebalance        -> paper Fig. 9 + 10 (live rebalance, scale out/in)
+  bench_overload         -> beyond-paper: flash-crowd overload (bounded
+                            queues, drop agreement, "overloaded" decision)
   bench_kernels          -> kernel layer (no paper table; TPU hot spots)
   bench_serving          -> beyond-paper: DRS-scheduled LLM serving
 
@@ -23,6 +25,7 @@ from . import (
     bench_kernels,
     bench_model_accuracy,
     bench_overhead,
+    bench_overload,
     bench_rebalance,
     bench_serving,
     bench_underestimation,
@@ -33,6 +36,7 @@ SUITES = [
     ("model_accuracy", bench_model_accuracy),
     ("underestimation", bench_underestimation),
     ("rebalance", bench_rebalance),
+    ("overload", bench_overload),
     ("kernels", bench_kernels),
     ("serving", bench_serving),
 ]

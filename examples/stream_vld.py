@@ -46,6 +46,9 @@ print(f"[2] after {sent} frames DRS says: action={decision.action} "
       f"k_target={None if decision.k_target is None else decision.k_target.tolist()}")
 if decision.action == "rebalance":
     print(f"[3] rebalance applied -> {session.allocation}")
+elif decision.action == "overloaded":
+    print(f"[3] measured rho >= 1 (starved extractor saturated): overload "
+          f"scale-out applied immediately -> {session.allocation}")
 else:
     print("[3] DRS judges the current allocation adequate (cost/benefit or "
           "<min_improvement) — also a valid outcome; no disruption incurred")

@@ -61,11 +61,23 @@ def _group_effective_services(top: Topology, k_vec: np.ndarray):
 
 
 class EngineBackend:
-    """Live StreamEngine behind the backend protocol."""
+    """Live StreamEngine behind the backend protocol.
+
+    ``queue_capacity`` bounds every operator queue (``None`` = unbounded)
+    and ``overload_policy`` (``"block"`` | ``"shed-newest"`` |
+    ``"shed-oldest"``, or an :class:`~repro.streaming.overload.OverloadPolicy`)
+    decides what happens when one fills — DESIGN.md §11.
+    """
 
     kind = "engine"
 
-    def __init__(self, graph: AppGraph, *, queue_capacity: int = 10_000):
+    def __init__(
+        self,
+        graph: AppGraph,
+        *,
+        queue_capacity: int | None = 10_000,
+        overload_policy: Any = "block",
+    ):
         from ..streaming.engine import Operator, StreamEngine
 
         missing = [op.name for op in graph.ops if op.fn is None]
@@ -78,6 +90,7 @@ class EngineBackend:
         self.engine = StreamEngine(
             [Operator(op.name, op.fn) for op in graph.ops],
             queue_capacity=queue_capacity,
+            overload_policy=overload_policy,
         )
         self.measurer: Measurer = self.engine.measurer
 
@@ -90,7 +103,9 @@ class EngineBackend:
     def allocation(self) -> dict[str, int]:
         return self.engine.k()
 
-    def inject(self, payload: Any, source: str | None = None) -> int:
+    def inject(
+        self, payload: Any, source: str | None = None, *, timeout: float | None = None
+    ) -> int | None:
         if source is None:
             srcs = self.graph.source_names
             if len(srcs) != 1:
@@ -98,7 +113,7 @@ class EngineBackend:
                     f"graph has {len(srcs)} sources {srcs}; pass source= explicitly"
                 )
             source = srcs[0]
-        return self.engine.inject(source, payload)
+        return self.engine.inject(source, payload, timeout=timeout)
 
     def drain(self, timeout: float = 10.0) -> bool:
         return self.engine.drain(timeout=timeout)
@@ -109,6 +124,10 @@ class EngineBackend:
     @property
     def completed_sojourns(self) -> list[float]:
         return self.engine.completed_sojourns
+
+    def drop_counts(self) -> dict[str, int]:
+        """Cumulative tuples shed per operator (overload policy drops)."""
+        return self.engine.drop_counts()
 
 
 class DESBackend:
@@ -125,7 +144,10 @@ class DESBackend:
         warmup: float = 10.0,
         network_delay: float = 0.0,
         arrival_kind: str | None = None,
+        arrival_kw: Mapping[str, float] | None = None,
         measurer: Measurer | None = None,
+        queue_capacity: int | None = None,
+        overload_policy: Any = "shed-newest",
     ):
         self.graph = graph
         self.seed = seed
@@ -133,7 +155,14 @@ class DESBackend:
         self.warmup = warmup
         self.network_delay = network_delay
         self.arrival_kind = arrival_kind or graph.arrival_kind
+        # Extra ArrivalProcess parameters for every source — required for
+        # the modulated kinds, e.g. bind("des", arrival_kind="mmpp",
+        # arrival_kw={"rate2": 50.0, "switch01": 0.2, "switch10": 0.8}) or
+        # arrival_kind="burst" with rate2/burst_every/burst_length.
+        self.arrival_kw = dict(arrival_kw or {})
         self.measurer = measurer
+        self.queue_capacity = queue_capacity
+        self.overload_policy = overload_policy
 
     # The DES is batch-simulated, not tick-driven: the live control-loop
     # protocol fails with a pointer to simulate() instead of AttributeError.
@@ -190,7 +219,8 @@ class DESBackend:
                     rate=services[i].rate, kind=op.service_kind, cv=op.service_cv
                 )
         arrivals = [
-            ArrivalProcess(rate=float(top.lam0[i]), kind=self.arrival_kind)
+            ArrivalProcess(rate=float(top.lam0[i]), kind=self.arrival_kind,
+                           **self.arrival_kw)
             for i in range(top.n)
         ]
         cfg = SimConfig(
@@ -198,6 +228,8 @@ class DESBackend:
             horizon=self.horizon if horizon is None else horizon,
             warmup=self.warmup if warmup is None else warmup,
             network_delay=self.network_delay,
+            queue_capacity=self.queue_capacity,
+            overload_policy=self.overload_policy,
         )
         return NetworkSimulator(
             top, k_eff, config=cfg, arrivals=arrivals, services=services,
@@ -340,8 +372,10 @@ class DRSSession:
         if self.scheduler is None:
             raise RuntimeError("session not started; call start() first")
         decision = self.scheduler.tick(now)
-        if decision.action in ("rebalance", "scale_out", "scale_in"):
-            self.backend.apply_allocation(self.graph.k_dict(decision.k_current))
+        if decision.action in ("rebalance", "scale_out", "scale_in", "overloaded"):
+            # "overloaded" with no feasible target keeps the current k.
+            if decision.k_target is not None:
+                self.backend.apply_allocation(self.graph.k_dict(decision.k_target))
         return decision
 
     @property
@@ -355,7 +389,14 @@ class DRSSession:
         return [] if self.scheduler is None else self.scheduler.history
 
     # Backend pass-throughs ---------------------------------------------- #
-    def inject(self, payload: Any, source: str | None = None) -> int:
+    def inject(
+        self, payload: Any, source: str | None = None, *, timeout: float | None = None
+    ) -> int | None:
+        """Inject an external tuple.  Under a bounded queue with the
+        ``block`` policy this backpressures the caller; returns ``None``
+        when the tuple was shed at admission (DESIGN.md §11)."""
+        if isinstance(self.backend, EngineBackend):
+            return self.backend.inject(payload, source=source, timeout=timeout)
         return self.backend.inject(payload, source=source)
 
     def drain(self, timeout: float = 10.0) -> bool:
@@ -367,6 +408,15 @@ class DRSSession:
     @property
     def completed_sojourns(self) -> list[float]:
         return self.backend.completed_sojourns
+
+    def drop_counts(self) -> dict[str, int]:
+        """Cumulative tuples shed per operator (engine backend)."""
+        if not isinstance(self.backend, EngineBackend):
+            raise GraphValidationError(
+                "drop_counts() needs the engine backend; the DES reports "
+                "drops on its SimResult (per_op_dropped / per_op_drop_rate)"
+            )
+        return self.backend.drop_counts()
 
     def simulate(self, k=None, **kwargs):
         """DES-mode: simulate allocation ``k`` (default: planned optimum)."""

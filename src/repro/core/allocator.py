@@ -164,14 +164,33 @@ def min_processors(
             break
         k[i] += 1
         total += 1
-        # E[T] drops by lam_i * gain / lam0 (Eq. 3 weighting).
+        # E[T] drops by lam_i * gain / lam0 (Eq. 3 weighting) — an O(1)
+        # running estimate that accumulates float error over thousands of
+        # increments, so it only steers the loop; feasibility is judged on
+        # the exactly recomputed value below.
         et -= gain / top.lam0_total
+        d = _marginal(top, lam, i, int(k[i]))
+        evals += 2
+        heapq.heappush(heap, (-d, i))
+    # Re-derive the true E[T](k): near T_max the drifted running value can
+    # mis-accept (accept/raise must use the same model the caller sees).
+    et = top.expected_sojourn(k)
+    while et > t_max and heap and total < k_cap:
+        # Drift made the loop exit one (or a few) processors early: keep
+        # adding by exact marginal benefit until the true E[T] satisfies
+        # the constraint or no processor helps.
+        neg_d, i = heapq.heappop(heap)
+        if -neg_d <= 0.0:
+            break
+        k[i] += 1
+        total += 1
+        et = top.expected_sojourn(k)
         d = _marginal(top, lam, i, int(k[i]))
         evals += 2
         heapq.heappush(heap, (-d, i))
     if et > t_max:
         raise InsufficientResourcesError(total, k_cap, k)
-    return AllocationResult(k, top.expected_sojourn(k), total, evals)
+    return AllocationResult(k, et, total, evals)
 
 
 def allocate(

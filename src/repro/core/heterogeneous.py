@@ -23,7 +23,6 @@ is zero or negligible.
 
 from __future__ import annotations
 
-import heapq
 import math
 from dataclasses import dataclass
 

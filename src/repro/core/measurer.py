@@ -19,6 +19,17 @@ The arrival-rate probe sits at the queue *tail* (Appendix C: "the rate
 measurement position should be at the tail of the operator queue, instead
 of the queue head") — i.e. we count enqueues, not dequeues, so an
 overloaded operator still reports its true offered load.
+
+Overload accounting (DESIGN.md §11): when the runtime sheds tuples under a
+bounded-queue :class:`~repro.streaming.overload.OverloadPolicy`, every shed
+tuple is reported through :meth:`InstanceProbe.on_dropped` so the model
+sees the load explicitly instead of it silently vanishing (or, worse,
+inflating the measured sojourn of the survivors).  Per-operator smoothed
+drop rates surface on :class:`MeasurementSnapshot` as ``drop_hat``; the
+per-operator ``lam_hat`` stays *offered* load (queue-tail counting includes
+tuples that are then shed), while the global ``lam0_hat`` counts only
+*admitted* external tuples — the scheduler's overload path combines the
+two (see core/scheduler.py).
 """
 
 from __future__ import annotations
@@ -105,6 +116,7 @@ class InstanceProbe:
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
     arrivals: int = 0
     processed: int = 0
+    dropped: int = 0
     sampled_service_time: float = 0.0
     sampled_count: int = 0
     _tick: int = 0
@@ -113,23 +125,39 @@ class InstanceProbe:
         with self._lock:
             self.arrivals += n
 
+    def on_dropped(self, n: int = 1) -> None:
+        """Tuple(s) shed at this operator's queue (still counted as offered
+        load by :meth:`on_enqueue`; this records the shed portion)."""
+        with self._lock:
+            self.dropped += n
+
     def on_processed(self, service_time: float, n: int = 1) -> None:
         with self._lock:
             self.processed += n
             self._tick += n
-            if self._tick >= self.n_m:
-                self._tick = 0
+            # Subtract (not reset) so batched reports (n > 1) crossing the
+            # n_m boundary keep the remainder and the sampling rate stays
+            # exactly 1/N_m; each wrap is one sampled tuple.
+            while self._tick >= self.n_m:
+                self._tick -= self.n_m
                 self.sampled_service_time += service_time
                 self.sampled_count += 1
 
-    def drain(self) -> tuple[int, int, float, int]:
+    def drain(self) -> tuple[int, int, float, int, int]:
         """Pull-and-reset (the central measurer's T_m pull)."""
         with self._lock:
-            out = (self.arrivals, self.processed, self.sampled_service_time, self.sampled_count)
+            out = (
+                self.arrivals,
+                self.processed,
+                self.sampled_service_time,
+                self.sampled_count,
+                self.dropped,
+            )
             self.arrivals = 0
             self.processed = 0
             self.sampled_service_time = 0.0
             self.sampled_count = 0
+            self.dropped = 0
             return out
 
 
@@ -140,17 +168,27 @@ class OperatorMetrics:
     name: str
     lam_smoother: Smoother
     mu_smoother: Smoother
+    drop_smoother: Smoother
     lam_hat: float = float("nan")
     mu_hat: float = float("nan")
+    drop_hat: float = 0.0
     last_raw_lam: float = float("nan")
     last_raw_mu: float = float("nan")
 
-    def ingest(self, arrivals: int, service_time_sum: float, samples: int, dt: float) -> None:
+    def ingest(
+        self,
+        arrivals: int,
+        service_time_sum: float,
+        samples: int,
+        dt: float,
+        dropped: int = 0,
+    ) -> None:
         if dt <= 0:
             return
         raw_lam = arrivals / dt
         self.last_raw_lam = raw_lam
         self.lam_hat = self.lam_smoother.update(raw_lam)
+        self.drop_hat = self.drop_smoother.update(dropped / dt)
         if samples > 0 and service_time_sum > 0:
             raw_mu = samples / service_time_sum  # tuples/sec per processor
             self.last_raw_mu = raw_mu
@@ -161,11 +199,15 @@ class OperatorMetrics:
 class MeasurementSnapshot:
     """One pull interval's smoothed view — the optimizer's input."""
 
-    lam_hat: np.ndarray  # per-operator smoothed arrival rates
+    lam_hat: np.ndarray  # per-operator smoothed *offered* arrival rates (queue tail)
     mu_hat: np.ndarray  # per-operator smoothed per-processor service rates
-    lam0_hat: float  # external arrival rate
+    lam0_hat: float  # external arrival rate (admitted tuples only)
     sojourn_hat: float  # measured mean complete sojourn time E[T^]
     t: float  # timestamp of the pull
+    # Per-operator smoothed drop (load-shed) rates, tuples/sec.  Zeros when
+    # queues are unbounded / nothing was shed.  lam_hat - drop_hat is the
+    # admitted rate; lam_hat alone is the offered load (DESIGN.md §11).
+    drop_hat: np.ndarray | None = None
 
     def complete(self) -> bool:
         return (
@@ -173,6 +215,12 @@ class MeasurementSnapshot:
             and np.all(np.isfinite(self.mu_hat))
             and np.isfinite(self.lam0_hat)
         )
+
+    def drop_rates(self) -> np.ndarray:
+        """Per-operator drop rates (zeros when none were recorded)."""
+        if self.drop_hat is None:
+            return np.zeros_like(self.lam_hat)
+        return np.nan_to_num(self.drop_hat, nan=0.0)
 
 
 class Measurer:
@@ -196,7 +244,12 @@ class Measurer:
         self.n_m = n_m
         self._probes: dict[str, list[InstanceProbe]] = {n: [] for n in self.names}
         self._metrics = {
-            n: OperatorMetrics(n, make_smoother(smoother, **kw), make_smoother(smoother, **kw))
+            n: OperatorMetrics(
+                n,
+                make_smoother(smoother, **kw),
+                make_smoother(smoother, **kw),
+                make_smoother(smoother, **kw),
+            )
             for n in self.names
         }
         self._lam0_smoother = make_smoother(smoother, **kw)
@@ -230,18 +283,21 @@ class Measurer:
         self._last_pull_t = now
         lam = np.full(len(self.names), np.nan)
         mu = np.full(len(self.names), np.nan)
+        drop = np.zeros(len(self.names))
         for idx, name in enumerate(self.names):
-            arrivals, _processed, st_sum, st_n = 0, 0, 0.0, 0
+            arrivals, _processed, st_sum, st_n, dropped = 0, 0, 0.0, 0, 0
             for p in self._probes[name]:
-                a, pr, s, c = p.drain()
+                a, pr, s, c, dr = p.drain()
                 arrivals += a
                 _processed += pr
                 st_sum += s
                 st_n += c
+                dropped += dr
             m = self._metrics[name]
-            m.ingest(arrivals, st_sum, st_n, dt)
+            m.ingest(arrivals, st_sum, st_n, dt, dropped)
             lam[idx] = m.lam_hat
             mu[idx] = m.mu_hat
+            drop[idx] = m.drop_hat
         with self._lock:
             ext, self._external_arrivals = self._external_arrivals, 0
             s_sum, self._sojourn_sum = self._sojourn_sum, 0.0
@@ -252,4 +308,4 @@ class Measurer:
             if s_n > 0
             else self._sojourn_smoother.value
         )
-        return MeasurementSnapshot(lam, mu, lam0, soj, now)
+        return MeasurementSnapshot(lam, mu, lam0, soj, now, drop_hat=drop)

@@ -23,7 +23,7 @@ the paper's Appendix B-B cost/benefit call:
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable
 
 import numpy as np

@@ -18,6 +18,18 @@ measured mu_hat_i down; the model then predicts a T_max violation and the
 loop reallocates — no special case needed.  A separate watchdog
 (:class:`StragglerDetector`) additionally flags *which* instance is slow by
 comparing per-instance service-time samples against the operator median.
+
+Overload (DESIGN.md §11) is a defined path, not an accident: when the
+measured utilisation rho_i = lam_hat_i / (k_i * mu_hat_i) reaches 1 for
+any operator, the snapshot's downstream arrival rates are *throughput-
+capped* (a saturated operator only emits at its service capacity, so
+everything below it under-reports the true offered load).  The model is
+then rebuilt from offered-load rates instead: source lam0 comes from the
+queue-tail arrival probes (which count shed tuples too) and the declared
+routing multiplicities are kept for every edge whose upstream measurement
+is capped.  The decision action is ``"overloaded"``, which bypasses the
+rebalance cost/benefit gate and the scale-in hysteresis and asks the
+negotiator for capacity immediately.
 """
 
 from __future__ import annotations
@@ -25,7 +37,7 @@ from __future__ import annotations
 import logging
 import math
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable
 
 import numpy as np
@@ -36,7 +48,7 @@ from .allocator import (
     assign_processors,
     min_processors,
 )
-from .jackson import OperatorSpec, Topology
+from .jackson import OperatorSpec, Topology, UnstableTopologyError
 from .measurer import Measurer, MeasurementSnapshot
 from .negotiator import Negotiator
 from .rebalance import ExecutableCache, RebalanceCostModel, RebalancePlan
@@ -62,7 +74,10 @@ class SchedulerDecision:
     """What the CSP layer should do after a tick."""
 
     t: float
-    action: str  # "none" | "rebalance" | "scale_out" | "scale_in" | "infeasible"
+    # "none" | "rebalance" | "scale_out" | "scale_in" | "infeasible"
+    # | "overloaded" (measured rho >= 1 somewhere: offered-load model,
+    #   immediate negotiator scale-out, no hysteresis / cost-benefit gate)
+    action: str
     k_current: np.ndarray
     k_target: np.ndarray | None
     k_max: int
@@ -119,7 +134,61 @@ class DRSScheduler:
         self.rebalance_count = 0
 
     # ------------------------------------------------------------------ #
-    def topology_from(self, snap: MeasurementSnapshot) -> Topology:
+    # Drop-rate trigger: an operator shedding more than this fraction of
+    # its capacity is overloaded even if the smoothed arrival rate dips
+    # below capacity (EWMA lag under bursty arrivals).
+    DROP_TRIGGER_FRACTION = 0.01
+
+    def overloaded_mask(self, snap: MeasurementSnapshot) -> np.ndarray:
+        """Per-operator bool: measured offered load >= current capacity,
+        OR sustained shedding at the operator's queue.
+
+        Combines the two overload signals (measurer docstring): queue-tail
+        arrival rates (offered load, shed tuples included) against
+        k_current * mu_hat — with group scaling's efficiency curve applied
+        — and the per-operator drop rate, which catches saturation the
+        smoothed arrival rate is still lagging behind.  This is the
+        defined trigger for the ``"overloaded"`` path.
+        """
+        n = len(self.names)
+        drops = snap.drop_rates()
+        mask = np.zeros(n, dtype=bool)
+        for i in range(n):
+            lam, mu = float(snap.lam_hat[i]), float(snap.mu_hat[i])
+            if not (math.isfinite(lam) and math.isfinite(mu)) or mu <= 0:
+                continue
+            k_i = max(int(self.k_current[i]), 1)
+            if self.scaling[i] == "group":
+                eff = 1.0 / (1.0 + self.group_alpha[i] * (k_i - 1))
+                capacity = mu * k_i * eff
+            else:
+                capacity = mu * k_i
+            mask[i] = (
+                lam >= capacity * (1.0 - 1e-9)
+                or float(drops[i]) > self.DROP_TRIGGER_FRACTION * capacity
+            )
+        return mask
+
+    def _capped_mask(self, overloaded: np.ndarray) -> np.ndarray:
+        """Operators whose *measured arrival rate* is throughput-capped:
+        anything downstream (transitively) of a saturated operator — a
+        saturated operator emits at its capacity, not its offered load, so
+        measurements below it cannot be trusted during overload."""
+        n = len(self.names)
+        adj = self.base_routing > 0
+        out_capped = overloaded.copy()  # operator's output under-represents load
+        in_capped = np.zeros(n, dtype=bool)
+        for _ in range(n):
+            new_in = np.array([(adj[:, j] & out_capped).any() for j in range(n)])
+            new_out = overloaded | new_in
+            if (new_in == in_capped).all() and (new_out == out_capped).all():
+                break
+            in_capped, out_capped = new_in, new_out
+        return in_capped
+
+    def topology_from(
+        self, snap: MeasurementSnapshot, overloaded: np.ndarray | None = None
+    ) -> Topology:
         """Rebuild the model from measurements.
 
         Routing multiplicities are rescaled from the *declared* graph
@@ -128,8 +197,19 @@ class DRSScheduler:
         all of j's in-edges so the traffic equations reproduce lam_hat_j.
         This keeps the graph structure (which DRS knows) but tracks data-
         dependent fan-out (which only measurement can see).
+
+        Unstable snapshots (some measured rho_i >= 1) clamp the model to
+        offered-load rates: source lam0 comes straight from the queue-tail
+        arrival probes (``lam0_hat`` only counts admitted tuples and
+        under-reports during shedding), and the measured rescale is
+        skipped for operators whose in-flow is throughput-capped by a
+        saturated upstream — their declared multiplicities are kept.
         """
         n = len(self.names)
+        if overloaded is None:
+            overloaded = self.overloaded_mask(snap)
+        hot = bool(overloaded.any())
+        capped = self._capped_mask(overloaded) if hot else np.zeros(n, dtype=bool)
         lam_hat = np.array(snap.lam_hat, dtype=np.float64)
         lam0 = np.zeros(n)
         # External arrivals enter at declared sources (no in-edges).
@@ -137,16 +217,23 @@ class DRSScheduler:
         sources = np.nonzero(in_deg == 0)[0]
         if len(sources) == 0:
             sources = np.array([0])
-        src_lam = lam_hat[sources]
-        total_src = max(src_lam.sum(), 1e-12)
-        for s, l in zip(sources, src_lam):
-            lam0[s] = snap.lam0_hat * (l / total_src) if math.isfinite(snap.lam0_hat) else l
+        if hot:
+            # Offered load at the queue tail (includes shed tuples).
+            for s in sources:
+                lam0[s] = lam_hat[s] if math.isfinite(lam_hat[s]) else 0.0
+        else:
+            src_lam = lam_hat[sources]
+            total_src = max(src_lam.sum(), 1e-12)
+            for s, l in zip(sources, src_lam):
+                lam0[s] = snap.lam0_hat * (l / total_src) if math.isfinite(snap.lam0_hat) else l
         routing = self.base_routing.copy()
         # Rescale in-edges to match measured per-operator arrival rates.
         for j in range(n):
             declared_in = routing[:, j]
             if declared_in.sum() == 0:
                 continue
+            if capped[j]:
+                continue  # measured lam_hat[j] is capacity, not offered load
             inflow = float(np.dot(declared_in, lam_hat))  # predicted from measured upstream
             if inflow > 1e-12 and math.isfinite(lam_hat[j]) and lam_hat[j] > 0:
                 routing[:, j] *= lam_hat[j] / inflow
@@ -173,8 +260,9 @@ class DRSScheduler:
             )
             self._emit(d)
             return d
-        top = self.topology_from(snap)
-        return self.decide(top, snap, now)
+        overloaded = self.overloaded_mask(snap)
+        top = self.topology_from(snap, overloaded)
+        return self.decide(top, snap, now, overloaded=overloaded)
 
     def _k_max(self) -> int:
         if self.config.k_max is not None:
@@ -184,11 +272,24 @@ class DRSScheduler:
         return int(self.k_current.sum())
 
     def decide(
-        self, top: Topology, snap: MeasurementSnapshot, now: float
+        self,
+        top: Topology,
+        snap: MeasurementSnapshot,
+        now: float,
+        overloaded: np.ndarray | None = None,
     ) -> SchedulerDecision:
         cfg = self.config
         k_max = self._k_max()
         et_cur = top.expected_sojourn(self.k_current)
+
+        # --- Overload: defined unstable-snapshot path ------------------- #
+        # tick() passes the mask it already clamped the topology with, so
+        # detection and clamping cannot disagree; direct callers get it
+        # computed here.
+        if overloaded is None:
+            overloaded = self.overloaded_mask(snap)
+        if overloaded.any():
+            return self._handle_overload(top, snap, now, k_max, et_cur, overloaded)
 
         # --- Program (6): how many processors do we actually need? ------ #
         need: AllocationResult | None = None
@@ -268,6 +369,56 @@ class DRSScheduler:
             self._emit(d)
             return d
         return self._apply(now, "rebalance", best, top, et_cur, snap, plan=plan)
+
+    def _handle_overload(
+        self,
+        top: Topology,
+        snap: MeasurementSnapshot,
+        now: float,
+        k_max: int,
+        et_cur: float,
+        overloaded: np.ndarray,
+    ) -> SchedulerDecision:
+        """Measured rho_i >= 1 somewhere: scale out *now*.
+
+        ``top`` is already offered-load-clamped by :meth:`topology_from`.
+        Sizing uses Program (6) when a T_max is configured, else the
+        minimum feasible (stable) allocation; the negotiator is asked
+        immediately — no scale-in hysteresis, no cost/benefit gate (queues
+        are growing or shedding while we deliberate).
+        """
+        cfg = self.config
+        hot_names = [self.names[i] for i in np.nonzero(overloaded)[0]]
+        try:
+            if cfg.t_max is not None:
+                need_total = math.ceil(min_processors(top, cfg.t_max).total * cfg.headroom)
+            else:
+                need_total = math.ceil(
+                    int(top.min_feasible_allocation().sum()) * cfg.headroom
+                )
+        except (InsufficientResourcesError, UnstableTopologyError):
+            # T_max (or stability itself) unreachable at any k — lease as
+            # much as the pool allows and do the best we can.
+            need_total = k_max + 1
+        if need_total > k_max and self.negotiator is not None:
+            self.negotiator.ensure(need_total)
+            k_max = max(k_max, self.negotiator.k_max)
+        try:
+            best = assign_processors(top, k_max)
+        except (InsufficientResourcesError, UnstableTopologyError) as e:
+            d = SchedulerDecision(
+                now, "overloaded", self.k_current.copy(), None, k_max,
+                et_cur, None, snap.sojourn_hat,
+                reason=f"overloaded at {hot_names}; offered load infeasible "
+                f"within k_max={k_max}: {e}",
+            )
+            self._emit(d)
+            return d
+        return self._apply(
+            now, "overloaded", best, top, et_cur, snap,
+            reason=f"measured rho >= 1 at {hot_names}; offered-load model "
+            f"needs {need_total}, reallocated within k_max={k_max}",
+        )
 
     def _apply(
         self,

@@ -15,7 +15,6 @@ which equals the global formulation HLO_total / (chips * per_chip_rate).
 
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import asdict, dataclass, field
 

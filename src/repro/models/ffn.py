@@ -13,7 +13,6 @@ axis) or FSDP (d_model/d_ff sharded) per architecture.
 
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +23,7 @@ try:  # jax >= 0.5 exposes shard_map at the top level
 except AttributeError:  # jax <= 0.4.x
     from jax.experimental.shard_map import shard_map as _shard_map
 
-from .common import ModelConfig, current_mesh, current_rules, shard
+from .common import ModelConfig, current_mesh, shard
 
 __all__ = ["swiglu", "moe_layer", "moe_layer_ep", "router_top_k"]
 

@@ -21,9 +21,8 @@ import jax
 import jax.numpy as jnp
 
 from .attention import attention_decode, attention_train
-from .common import ModelConfig, apply_mrope, apply_rope, rms_norm, shard
-from .ffn import moe_layer, swiglu
-from .ssm import rwkv6_step, ssd_step
+from .common import ModelConfig, apply_mrope, apply_rope, rms_norm
+from .ffn import swiglu
 from .transformer import (
     Cache,
     _attn_block,
@@ -33,7 +32,6 @@ from .transformer import (
     _shared_attn_apply,
     _whisper_encoder,
     _whisper_views,
-    _zamba_layers,
 )
 
 __all__ = ["init_cache", "prefill", "decode_step"]

@@ -23,13 +23,11 @@ Mamba2 SSD (arXiv:2405.21060): scalar-per-head decay a_t = exp(dt * A):
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from .common import ModelConfig, shard
 
 __all__ = [
     "rwkv6_chunked",

@@ -18,20 +18,17 @@ sharding in distributed/sharding.py.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from .attention import attention_decode, attention_train
+from .attention import attention_train
 from .common import (
     ModelConfig,
     ParamStore,
     apply_mrope,
     apply_rope,
     cross_entropy_loss,
-    layer_norm,
     rms_norm,
     shard,
 )

@@ -21,7 +21,6 @@ i.e. replica/group scaling per OperatorSpec.scaling (see core/jackson.py).
 from __future__ import annotations
 
 import json
-import math
 from dataclasses import dataclass
 from pathlib import Path
 

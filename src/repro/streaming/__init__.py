@@ -14,6 +14,7 @@ from .des import (
     simulate_allocation,
 )
 from .engine import Operator, StreamEngine, StreamTuple
+from .overload import OVERLOAD_POLICIES, OverloadPolicy
 
 __all__ = [
     "ArrivalProcess",
@@ -25,4 +26,6 @@ __all__ = [
     "Operator",
     "StreamEngine",
     "StreamTuple",
+    "OverloadPolicy",
+    "OVERLOAD_POLICIES",
 ]

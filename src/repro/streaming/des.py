@@ -10,11 +10,19 @@ The simulator models exactly what the DSMS does:
 
 * external tuples arrive at source operators via a configurable arrival
   process (exponential, uniform — the paper's VLD uses uniform [1,25] fps —
-  or deterministic);
+  deterministic, 2-state Markov-modulated Poisson ``"mmpp"``, or a
+  flash-crowd ``"burst"`` schedule for overload experiments);
 * each operator has one FIFO queue and ``k_i`` parallel servers with a
   configurable service-time distribution (exponential by default, but the
   paper stresses robustness to violations, so deterministic/uniform/
   lognormal are supported);
+* queues may be bounded (``SimConfig.queue_capacity``) with the same
+  :class:`~repro.streaming.overload.OverloadPolicy` semantics as the live
+  engine — block (backpressure via a pending line), shed-newest, or
+  shed-oldest — with per-operator drop accounting that matches the
+  engine's (a dropped external tuple is *not* counted as an external
+  arrival by the measurer, so ``lam0_hat`` stays unbiased; the queue-tail
+  probes still see the full offered load);
 * on completion at operator *i*, derived tuples are spawned downstream per
   the routing matrix (integer part deterministic + Bernoulli fractional
   part, so the *mean* multiplicity matches the Jackson weight);
@@ -35,25 +43,57 @@ from __future__ import annotations
 import heapq
 import itertools
 import math
-from dataclasses import dataclass, field
-from typing import Callable
+from collections import deque
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
 from ..core.jackson import Topology
 from ..core.measurer import Measurer
+from .overload import OverloadPolicy
 
 __all__ = ["ArrivalProcess", "ServiceProcess", "SimConfig", "SimResult", "NetworkSimulator"]
 
 
 @dataclass(frozen=True)
 class ArrivalProcess:
-    """Inter-arrival time generator for a source operator."""
+    """Inter-arrival time generator for a source operator.
+
+    Kinds:
+
+    * ``exponential`` / ``uniform`` / ``deterministic`` — renewal processes
+      at mean rate ``rate``;
+    * ``mmpp`` — 2-state Markov-modulated Poisson process: Poisson at
+      ``rate`` in state 0 and ``rate2`` in state 1, switching at
+      exponential rates ``switch01`` (0→1) and ``switch10`` (1→0).  The
+      long-run mean rate is ``(switch10*rate + switch01*rate2) /
+      (switch01 + switch10)``;
+    * ``burst`` — deterministic flash-crowd schedule: Poisson at ``rate``
+      except during the first ``burst_length`` seconds of every
+      ``burst_every``-second cycle, where the rate is ``rate2`` (the
+      Fig. 9/10-style mid-run workload shift, repeatable).
+
+    ``mmpp`` and ``burst`` carry private mutable phase state, so one
+    instance must not be shared between concurrently-running simulators.
+    """
 
     rate: float
-    kind: str = "exponential"  # exponential | uniform | deterministic
+    kind: str = "exponential"  # exponential | uniform | deterministic | mmpp | burst
+    # mmpp state-1 rate / burst peak rate.  Required for those kinds (an
+    # explicit 0.0 models an ON/OFF process; None would be a silent
+    # degenerate config, so it raises instead).
+    rate2: float | None = None
+    switch01: float = 0.1  # mmpp: 0 -> 1 transition rate (per second)
+    switch10: float = 0.1  # mmpp: 1 -> 0 transition rate (per second)
+    burst_every: float = 60.0  # burst: cycle period (seconds)
+    burst_length: float = 5.0  # burst: peak-rate window at each cycle start
+    _state: dict = field(default_factory=dict, repr=False, compare=False)
 
     def sample(self, rng: np.random.Generator) -> float:
+        if self.kind == "mmpp":
+            return self._sample_mmpp(rng)
+        if self.kind == "burst":
+            return self._sample_burst(rng)
         if self.rate <= 0:
             return math.inf
         mean = 1.0 / self.rate
@@ -65,6 +105,60 @@ class ArrivalProcess:
         if self.kind == "deterministic":
             return mean
         raise ValueError(f"unknown arrival kind {self.kind!r}")
+
+    def _rate2(self) -> float:
+        if self.rate2 is None:
+            raise ValueError(
+                f"ArrivalProcess(kind={self.kind!r}) needs rate2= (second-state"
+                " / peak rate); pass 0.0 explicitly for an ON/OFF process"
+            )
+        return self.rate2
+
+    def _sample_mmpp(self, rng: np.random.Generator) -> float:
+        """Competing exponentials: in each modulating state the next event
+        is either an arrival or a state switch, whichever fires first."""
+        rate2 = self._rate2()
+        state = self._state.setdefault("s", 0)
+        t = 0.0
+        while True:
+            r = self.rate if state == 0 else rate2
+            sw = self.switch01 if state == 0 else self.switch10
+            t_arr = rng.exponential(1.0 / r) if r > 0 else math.inf
+            t_sw = rng.exponential(1.0 / sw) if sw > 0 else math.inf
+            if not math.isfinite(t_arr) and not math.isfinite(t_sw):
+                return math.inf
+            if t_arr <= t_sw:
+                self._state["s"] = state
+                return t + t_arr
+            t += t_sw
+            state = 1 - state
+
+    def _sample_burst(self, rng: np.random.Generator) -> float:
+        """Piecewise-constant-rate Poisson: draw within the current phase,
+        restarting from the boundary when the draw crosses it."""
+        rate2 = self._rate2()
+        if self.burst_every <= 0 or not 0 < self.burst_length <= self.burst_every:
+            raise ValueError(
+                f"burst needs 0 < burst_length <= burst_every, got "
+                f"length={self.burst_length}, every={self.burst_every}"
+            )
+        if self.rate <= 0 and rate2 <= 0:
+            return math.inf
+        t = self._state.get("t", 0.0)
+        t0 = t
+        while True:
+            phase = t % self.burst_every
+            in_burst = phase < self.burst_length
+            r = rate2 if in_burst else self.rate
+            boundary = t - phase + (self.burst_length if in_burst else self.burst_every)
+            if r <= 0:
+                t = boundary
+                continue
+            dt = rng.exponential(1.0 / r)
+            if t + dt <= boundary:
+                self._state["t"] = t + dt
+                return t + dt - t0
+            t = boundary
 
 
 @dataclass(frozen=True)
@@ -98,6 +192,9 @@ class SimConfig:
     network_delay: float = 0.0  # fixed per-hop delay (out-of-model cost, Fig. 8)
     max_events: int = 5_000_000
     queue_capacity: int | None = None  # None = unbounded
+    # What to do when a bounded queue is full (DESIGN.md §11).  The default
+    # matches the historical DES behaviour (arriving tuple is dropped).
+    overload_policy: OverloadPolicy | str = "shed-newest"
 
 
 @dataclass
@@ -107,11 +204,16 @@ class SimResult:
     std_sojourn: float
     mean_visit_sum: float  # sum of per-visit sojourns (what Eq. 3 predicts exactly)
     p95_sojourn: float
-    per_op_arrival_rate: np.ndarray
+    per_op_arrival_rate: np.ndarray  # post-warmup offered arrivals / post-warmup span
     per_op_mean_service: np.ndarray
     per_op_mean_wait: np.ndarray
-    dropped: int
+    dropped: int  # total tuples shed (whole run, all operators)
     sojourn_series: list[tuple[float, float]] = field(default_factory=list)
+    # Overload accounting (zeros when queues are unbounded):
+    per_op_dropped: np.ndarray | None = None  # tuples shed per operator (whole run)
+    per_op_drop_rate: np.ndarray | None = None  # post-warmup sheds / span (tuples/s)
+    per_op_max_backlog: np.ndarray | None = None  # max queue + blocked-pending length
+    shed_roots: int = 0  # external tuples whose tree lost >= 1 tuple
 
     def as_dict(self) -> dict:
         return {
@@ -122,6 +224,16 @@ class SimResult:
             "p95_sojourn": self.p95_sojourn,
             "per_op_arrival_rate": self.per_op_arrival_rate.tolist(),
             "dropped": self.dropped,
+            "per_op_dropped": None
+            if self.per_op_dropped is None
+            else self.per_op_dropped.tolist(),
+            "per_op_drop_rate": None
+            if self.per_op_drop_rate is None
+            else self.per_op_drop_rate.tolist(),
+            "per_op_max_backlog": None
+            if self.per_op_max_backlog is None
+            else self.per_op_max_backlog.tolist(),
+            "shed_roots": self.shed_roots,
         }
 
 
@@ -134,6 +246,7 @@ class _Root:
     t_arrival: float
     outstanding: int = 0
     visit_time_sum: float = 0.0
+    shed: bool = False  # any tuple of this root's tree was dropped
 
 
 class NetworkSimulator:
@@ -165,10 +278,19 @@ class NetworkSimulator:
             if measurer is not None
             else None
         )
+        if self.cfg.queue_capacity is not None and self.cfg.queue_capacity < 1:
+            raise ValueError(
+                f"queue_capacity must be >= 1 or None (unbounded), got "
+                f"{self.cfg.queue_capacity}"
+            )
+        self.policy = OverloadPolicy.coerce(self.cfg.overload_policy)
         self.rng = np.random.default_rng(self.cfg.seed)
         self._seq = itertools.count()
         self._events: list[tuple[float, int, int, tuple]] = []
-        self._queues: list[list[tuple[float, int]]] = [[] for _ in range(n)]
+        self._queues: list[deque[tuple[float, int]]] = [deque() for _ in range(n)]
+        # Block policy: arrivals that found the queue full wait here (the
+        # DES analogue of a blocked producer) and are admitted FIFO.
+        self._pending: list[deque[tuple[float, int]]] = [deque() for _ in range(n)]
         self._busy = np.zeros(n, dtype=np.int64)
         self._paused_until = 0.0
         self._roots: dict[int, _Root] = {}
@@ -177,11 +299,16 @@ class NetworkSimulator:
         self._visit_sums: list[float] = []
         self._series: list[tuple[float, float]] = []
         self._op_arrivals = np.zeros(n, dtype=np.int64)
+        self._op_arrivals_warm = np.zeros(n, dtype=np.int64)  # post-warmup only
         self._op_service_sum = np.zeros(n)
         self._op_service_n = np.zeros(n, dtype=np.int64)
         self._op_wait_sum = np.zeros(n)
         self._op_wait_n = np.zeros(n, dtype=np.int64)
         self._dropped = 0
+        self._op_drops = np.zeros(n, dtype=np.int64)
+        self._op_drops_warm = np.zeros(n, dtype=np.int64)
+        self._op_max_backlog = np.zeros(n, dtype=np.int64)
+        self._shed_roots = 0
         self._rebalances: list[tuple[float, np.ndarray, float]] = []
         self.now = 0.0
 
@@ -206,28 +333,85 @@ class NetworkSimulator:
         if math.isfinite(dt):
             self._push(self.now + dt, _ARRIVAL, ("external", i))
 
-    def _admit(self, i: int, root_id: int) -> None:
-        """Tuple arrives at operator i's queue tail."""
+    def _admit(self, i: int, root_id: int) -> bool:
+        """Tuple arrives at operator i's queue tail.
+
+        Returns True when the tuple joined the system (queue or blocked
+        pending line), False when it was shed under the overload policy.
+        The queue-tail probe counts it either way (offered load, paper
+        Appendix C); drops are recorded separately.
+        """
         self._op_arrivals[i] += 1
+        if self.now >= self.cfg.warmup:
+            self._op_arrivals_warm[i] += 1
         if self._probes is not None:
             self._probes[i].on_enqueue()
         cap = self.cfg.queue_capacity
-        if cap is not None and len(self._queues[i]) >= cap:
-            # Dropped tuple never joins the tree; a rejected external tuple
-            # (outstanding == 0) is removed outright.
-            self._dropped += 1
-            if self._roots[root_id].outstanding == 0:
-                del self._roots[root_id]
-            return
+        q = self._queues[i]
+        if cap is not None and (len(q) >= cap or self._pending[i]):
+            if self.policy.kind == "shed-newest":
+                # Rejected tuple never joins the tree.
+                self._record_drop(i)
+                self._poison_root(root_id)
+                return False
+            if self.policy.kind == "shed-oldest":
+                _t_old, old_root = q.popleft()
+                self._record_drop(i)
+                self._drop_queued(old_root)
+                # fall through: the new tuple takes the freed slot
+            else:  # block: wait at the tail (FIFO behind earlier blocked)
+                self._roots[root_id].outstanding += 1
+                self._pending[i].append((self.now, root_id))
+                self._note_backlog(i)
+                return True
         self._roots[root_id].outstanding += 1
-        self._queues[i].append((self.now, root_id))
+        q.append((self.now, root_id))
+        self._note_backlog(i)
         self._try_start(i)
+        return True
+
+    def _note_backlog(self, i: int) -> None:
+        backlog = len(self._queues[i]) + len(self._pending[i])
+        if backlog > self._op_max_backlog[i]:
+            self._op_max_backlog[i] = backlog
+
+    def _record_drop(self, i: int) -> None:
+        self._dropped += 1
+        self._op_drops[i] += 1
+        if self.now >= self.cfg.warmup:
+            self._op_drops_warm[i] += 1
+        if self._probes is not None:
+            self._probes[i].on_dropped()
+
+    def _poison_root(self, root_id: int) -> None:
+        """A tuple of this root was shed before joining a queue."""
+        root = self._roots[root_id]
+        root.shed = True
+        if root.outstanding == 0:
+            self._retire_root(root_id)
+
+    def _drop_queued(self, root_id: int) -> None:
+        """A queued tuple of this root was evicted (shed-oldest)."""
+        root = self._roots[root_id]
+        root.shed = True
+        root.outstanding -= 1
+        if root.outstanding == 0:
+            self._retire_root(root_id)
+
+    def _promote_pending(self, i: int) -> None:
+        cap = self.cfg.queue_capacity
+        q, pend = self._queues[i], self._pending[i]
+        while pend and (cap is None or len(q) < cap):
+            q.append(pend.popleft())
 
     def _try_start(self, i: int) -> None:
         if self.now < self._paused_until:
             return
-        while self._busy[i] < self.k[i] and self._queues[i]:
-            t_enq, root_id = self._queues[i].pop(0)
+        q = self._queues[i]
+        self._promote_pending(i)
+        while self._busy[i] < self.k[i] and q:
+            t_enq, root_id = q.popleft()
+            self._promote_pending(i)  # a slot freed: unblock a producer
             wait = self.now - t_enq
             self._op_wait_sum[i] += wait
             self._op_wait_n[i] += 1
@@ -241,18 +425,27 @@ class NetworkSimulator:
             root.visit_time_sum += wait + st
             self._push(self.now + st, _SERVICE_DONE, (i, root_id))
 
+    def _retire_root(self, root_id: int) -> None:
+        """Outstanding count hit zero: record completion or shed."""
+        root = self._roots.pop(root_id)
+        if root.shed:
+            # Partially-processed tree: its sojourn would be biased (the
+            # shed branches never ran), so it is counted, not timed.
+            self._shed_roots += 1
+            return
+        sojourn = self.now - root.t_arrival
+        if self.now >= self.cfg.warmup:
+            self._sojourns.append(sojourn)
+            self._visit_sums.append(root.visit_time_sum)
+            self._series.append((self.now, sojourn))
+        if self.measurer is not None:
+            self.measurer.on_tuple_complete(sojourn)
+
     def _finish_derived(self, root_id: int) -> None:
         root = self._roots[root_id]
         root.outstanding -= 1
         if root.outstanding == 0:
-            sojourn = self.now - root.t_arrival
-            if self.now >= self.cfg.warmup:
-                self._sojourns.append(sojourn)
-                self._visit_sums.append(root.visit_time_sum)
-                self._series.append((self.now, sojourn))
-            if self.measurer is not None:
-                self.measurer.on_tuple_complete(sojourn)
-            del self._roots[root_id]
+            self._retire_root(root_id)
 
     def _route_downstream(self, i: int, root_id: int) -> None:
         routing = self.top.routing
@@ -291,9 +484,13 @@ class NetworkSimulator:
                     i = payload[1]
                     root_id = next(self._root_ids)
                     self._roots[root_id] = _Root(t_arrival=self.now)
-                    if self.measurer is not None:
+                    admitted = self._admit(i, root_id)
+                    # Only admitted tuples count toward lam0_hat; a tuple
+                    # shed at the source is visible via the drop counters
+                    # instead (otherwise lam0_hat is biased upward and the
+                    # model predicts load the network never carries).
+                    if admitted and self.measurer is not None:
                         self.measurer.on_external_arrival()
-                    self._admit(i, root_id)
                     self._spawn_external(i)
                 else:  # network hop delivery
                     _, j, root_id = payload
@@ -325,10 +522,15 @@ class NetworkSimulator:
                     self.services[i] = ServiceProcess(rate, svc_kind or old.kind, old.cv)
                 elif payload[0] == "lam0":
                     _, i, rate = payload
-                    had = self.arrivals[i].rate > 0
-                    self.arrivals[i] = ArrivalProcess(rate, self.arrivals[i].kind)
+                    old = self.arrivals[i]
+                    had = old.rate > 0 or (old.rate2 or 0.0) > 0
+                    # replace() keeps kind AND the mmpp/burst parameters
+                    # (rate2, switch rates, burst schedule, phase state).
+                    self.arrivals[i] = replace(old, rate=rate)
                     if not had and rate > 0:
                         self._spawn_external(i)
+        # Post-warmup counts over the post-warmup span: warmup arrivals
+        # must not leak into the steady-state rate estimate.
         measured_span = max(self.now - cfg.warmup, 1e-9)
         soj = np.asarray(self._sojourns) if self._sojourns else np.array([np.nan])
         vs = np.asarray(self._visit_sums) if self._visit_sums else np.array([np.nan])
@@ -338,7 +540,7 @@ class NetworkSimulator:
             std_sojourn=float(np.std(soj)),
             mean_visit_sum=float(np.mean(vs)),
             p95_sojourn=float(np.percentile(soj, 95)),
-            per_op_arrival_rate=self._op_arrivals / max(self.now, 1e-9),
+            per_op_arrival_rate=self._op_arrivals_warm / measured_span,
             per_op_mean_service=np.where(
                 self._op_service_n > 0, self._op_service_sum / np.maximum(self._op_service_n, 1), np.nan
             ),
@@ -347,6 +549,10 @@ class NetworkSimulator:
             ),
             dropped=self._dropped,
             sojourn_series=self._series,
+            per_op_dropped=self._op_drops.copy(),
+            per_op_drop_rate=self._op_drops_warm / measured_span,
+            per_op_max_backlog=self._op_max_backlog.copy(),
+            shed_roots=self._shed_roots,
         )
 
 
@@ -360,6 +566,8 @@ def simulate_allocation(
     network_delay: float = 0.0,
     arrival_kind: str = "exponential",
     service_kind: str = "exponential",
+    queue_capacity: int | None = None,
+    overload_policy: OverloadPolicy | str = "shed-newest",
 ) -> SimResult:
     """One-call helper: simulate topology under allocation k."""
     n = topology.n
@@ -370,7 +578,14 @@ def simulate_allocation(
     sim = NetworkSimulator(
         topology,
         k,
-        config=SimConfig(seed=seed, horizon=horizon, warmup=warmup, network_delay=network_delay),
+        config=SimConfig(
+            seed=seed,
+            horizon=horizon,
+            warmup=warmup,
+            network_delay=network_delay,
+            queue_capacity=queue_capacity,
+            overload_policy=overload_policy,
+        ),
         arrivals=arrivals,
         services=services,
     )

@@ -14,6 +14,14 @@ root id with an outstanding-count; when the count drains to zero the
 measurer is notified with the complete sojourn time (paper's definition of
 "fully processed").
 
+Queues are *bounded* and overload is a first-class scenario (DESIGN.md
+§11): when a queue is full the configured
+:class:`~repro.streaming.overload.OverloadPolicy` decides whether the
+producer blocks (backpressure propagates to :meth:`StreamEngine.inject`)
+or a tuple is shed.  Shed tuples are counted per operator and reported to
+the measurer; a root whose tree lost any tuple counts as *shed*, not
+completed, so measured sojourn only reflects fully-processed tuples.
+
 This engine is used by the end-to-end tests and examples; the DES
 (des.py) is used for statistically tight model validation.
 """
@@ -27,9 +35,9 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
-import numpy as np
 
 from ..core.measurer import Measurer
+from .overload import OverloadPolicy
 
 __all__ = ["StreamTuple", "Operator", "StreamEngine"]
 
@@ -38,6 +46,7 @@ __all__ = ["StreamTuple", "Operator", "StreamEngine"]
 class _RootState:
     t_arrival: float
     outstanding: int = 0
+    shed: bool = False  # any tuple of this root's tree was dropped
     lock: threading.Lock = field(default_factory=threading.Lock)
 
 
@@ -68,13 +77,22 @@ class StreamEngine:
         operators: list[Operator],
         *,
         measurer: Measurer | None = None,
-        queue_capacity: int = 10_000,
+        queue_capacity: int | None = 10_000,
+        overload_policy: OverloadPolicy | str = "block",
     ):
         self.operators = {op.name: op for op in operators}
         self.names = [op.name for op in operators]
         self.measurer = measurer or Measurer(self.names)
+        if queue_capacity is not None and queue_capacity < 1:
+            raise ValueError(
+                f"queue_capacity must be >= 1 or None (unbounded), got "
+                f"{queue_capacity}"
+            )
+        self.queue_capacity = queue_capacity
+        self.overload_policy = OverloadPolicy.coerce(overload_policy)
+        maxsize = 0 if queue_capacity is None else queue_capacity
         self.queues: dict[str, queue.Queue] = {
-            n: queue.Queue(maxsize=queue_capacity) for n in self.names
+            n: queue.Queue(maxsize=maxsize) for n in self.names
         }
         self._workers: dict[str, list[threading.Thread]] = {n: [] for n in self.names}
         self._worker_stop: dict[str, list[threading.Event]] = {n: [] for n in self.names}
@@ -87,10 +105,20 @@ class StreamEngine:
         self._stop = threading.Event()
         self.completed_sojourns: list[float] = []
         self._completed_lock = threading.Lock()
+        # Cumulative per-operator shed counts (probes drain-reset on every
+        # measurer pull, so the engine keeps its own running totals too).
+        self._drops: dict[str, int] = {n: 0 for n in self.names}
+        self._drops_lock = threading.Lock()
+        self.shed_roots = 0  # external tuples whose tree lost >= 1 tuple
 
     # ------------------------------------------------------------------ #
     def k(self) -> dict[str, int]:
         return {n: len(self._workers[n]) for n in self.names}
+
+    def drop_counts(self) -> dict[str, int]:
+        """Cumulative tuples shed per operator since engine construction."""
+        with self._drops_lock:
+            return dict(self._drops)
 
     def scale_to(self, allocation: dict[str, int]) -> None:
         """Rescale operators to the given instance counts (cheap rebalance:
@@ -118,19 +146,83 @@ class StreamEngine:
         t.start()
 
     # ------------------------------------------------------------------ #
-    def inject(self, source: str, payload: Any) -> int:
-        """External tuple enters the system (spout emission)."""
+    def inject(
+        self, source: str, payload: Any, *, timeout: float | None = None
+    ) -> int | None:
+        """External tuple enters the system (spout emission).
+
+        Under the ``block`` policy this call backpressures: it waits for
+        queue space (up to ``timeout`` seconds; ``None`` = indefinitely).
+        Returns the root id, or ``None`` when the tuple was shed at
+        admission (shed policies, timeout expiry, or engine stop) — a shed
+        external tuple is *not* counted as an external arrival, but is
+        recorded in the source operator's drop counter.
+        """
         root_id = next(self._root_ids)
         st = _RootState(t_arrival=time.perf_counter(), outstanding=1)
         with self._roots_lock:
             self._roots[root_id] = st
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        tup = StreamTuple(payload, root_id, time.perf_counter())
+        if not self._enqueue(source, tup, deadline=deadline):
+            return None
         self.measurer.on_external_arrival()
-        self._enqueue(source, StreamTuple(payload, root_id, time.perf_counter()))
         return root_id
 
-    def _enqueue(self, name: str, tup: StreamTuple) -> None:
+    def _enqueue(
+        self, name: str, tup: StreamTuple, *, deadline: float | None = None
+    ) -> bool:
+        """Offer a tuple to an operator queue under the overload policy.
+
+        Counts the offered load at the queue tail (Appendix C) whether or
+        not the tuple is admitted; returns False when it was shed.
+        """
         self._arrival_probes[name].on_enqueue()
-        self.queues[name].put(tup)
+        q = self.queues[name]
+        try:
+            q.put_nowait(tup)
+            return True
+        except queue.Full:
+            pass
+        kind = self.overload_policy.kind
+        if kind == "shed-newest":
+            self._shed(name, tup)
+            return False
+        if kind == "shed-oldest":
+            while True:
+                try:
+                    q.put_nowait(tup)
+                    return True
+                except queue.Full:
+                    try:
+                        evicted = q.get_nowait()
+                    except queue.Empty:  # a worker beat us to the head
+                        continue
+                    self._shed(name, evicted)
+        # block: wait for space, polling so engine stop / deadline unblocks.
+        poll = self.overload_policy.block_poll
+        while not self._stop.is_set():
+            if deadline is not None and time.perf_counter() >= deadline:
+                break
+            try:
+                q.put(tup, timeout=poll)
+                return True
+            except queue.Full:
+                continue
+        self._shed(name, tup)
+        return False
+
+    def _shed(self, name: str, tup: StreamTuple) -> None:
+        """Drop a tuple at operator ``name``: count it and poison its root."""
+        self._arrival_probes[name].on_dropped()
+        with self._drops_lock:
+            self._drops[name] += 1
+        with self._roots_lock:
+            root = self._roots.get(tup.root_id)
+        if root is not None:
+            with root.lock:
+                root.shed = True
+        self._complete_one(tup.root_id)
 
     def _worker_loop(self, name: str, stop: threading.Event, probe) -> None:
         op = self.operators[name]
@@ -147,7 +239,8 @@ class StreamEngine:
                 emissions = []
             service = time.perf_counter() - t0
             probe.on_processed(service)
-            root = self._roots.get(tup.root_id)
+            with self._roots_lock:  # _complete_one mutates the dict under it
+                root = self._roots.get(tup.root_id)
             if root is not None:
                 with root.lock:
                     root.outstanding += len(emissions)
@@ -160,17 +253,23 @@ class StreamEngine:
             root = self._roots.get(root_id)
         if root is None:
             return
-        done = False
         with root.lock:
             root.outstanding -= 1
             done = root.outstanding == 0
+            shed = root.shed
         if done:
+            with self._roots_lock:
+                self._roots.pop(root_id, None)
+            if shed:
+                # Partially-processed tree: its sojourn would be biased low
+                # (the shed branches never ran) — count it separately.
+                with self._completed_lock:
+                    self.shed_roots += 1
+                return
             sojourn = time.perf_counter() - root.t_arrival
             self.measurer.on_tuple_complete(sojourn)
             with self._completed_lock:
                 self.completed_sojourns.append(sojourn)
-            with self._roots_lock:
-                self._roots.pop(root_id, None)
 
     # ------------------------------------------------------------------ #
     def start(self, allocation: dict[str, int]) -> None:

@@ -1,0 +1,72 @@
+"""Overload policies for bounded operator queues (DESIGN.md §11).
+
+The paper's premise is surviving unpredictable rate fluctuation (§I,
+Fig. 9/10), which means the runtime must have *defined* behaviour when the
+offered load exceeds capacity.  Both backends (the live ``StreamEngine``
+and the DES ``NetworkSimulator``) bound their per-operator queues and
+apply one of three policies when a queue is full:
+
+``block``
+    The producer waits for space — backpressure propagates upstream all
+    the way to :meth:`~repro.streaming.engine.StreamEngine.inject`
+    (lossless; latency is pushed into the source).  In the DES this is
+    modelled by holding arrivals in a per-operator pending line that is
+    admitted FIFO as queue slots free up.  On cyclic graphs at capacity,
+    blocking can livelock the live engine's workers; prefer a shed policy
+    for topologies with self-loops.
+``shed-newest``
+    The arriving tuple is dropped (tail drop).  Cheapest, favours tuples
+    already in flight.
+``shed-oldest``
+    The oldest queued tuple is evicted to admit the new one (head drop —
+    fresher data wins, the usual choice for real-time analytics).
+
+Every shed tuple is recorded against the operator that shed it (visible to
+the model via :meth:`~repro.core.measurer.InstanceProbe.on_dropped` and
+per-op drop counters in ``SimResult``), and poisons its root: an external
+tuple whose processing tree lost any member counts as *shed*, not
+*completed*, so measured sojourn stays unbiased.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+__all__ = ["OverloadPolicy", "OVERLOAD_POLICIES"]
+
+OVERLOAD_POLICIES = ("block", "shed-newest", "shed-oldest")
+
+
+@dataclass(frozen=True)
+class OverloadPolicy:
+    """What to do when a bounded operator queue is full.
+
+    ``kind`` is one of :data:`OVERLOAD_POLICIES`.  ``block_poll`` is the
+    live engine's wait granularity while blocked (it also bounds how long
+    a worker can stall past an engine stop request).
+    """
+
+    kind: str = "block"
+    block_poll: float = 0.05
+
+    def __post_init__(self) -> None:
+        if self.kind not in OVERLOAD_POLICIES:
+            raise ValueError(
+                f"unknown overload policy {self.kind!r}; "
+                f"expected one of {OVERLOAD_POLICIES}"
+            )
+
+    @classmethod
+    def coerce(cls, value: "OverloadPolicy | str") -> "OverloadPolicy":
+        """Accept either a policy object or its kind string."""
+        if isinstance(value, OverloadPolicy):
+            return value
+        return cls(kind=value)
+
+    @property
+    def blocks(self) -> bool:
+        return self.kind == "block"
+
+    @property
+    def sheds(self) -> bool:
+        return self.kind in ("shed-newest", "shed-oldest")

@@ -18,9 +18,9 @@ Features (exercised by tests/test_training_loop.py and examples/):
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from pathlib import Path
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import numpy as np

@@ -10,7 +10,6 @@ links are the scarce resource (DESIGN.md §8).
 
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax

@@ -11,7 +11,6 @@ os.environ["XLA_FLAGS"] = (
     "--xla_force_host_platform_device_count=8 " + os.environ.get("XLA_FLAGS", "")
 )
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, get_config
-from repro.configs.qwen2_vl_2b import N_PATCHES
 from repro.models import forward, init_params, loss_fn, serve
 from repro.models.common import ModelConfig
 

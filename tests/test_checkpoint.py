@@ -1,7 +1,5 @@
 """CheckpointStore: atomicity, async, exotic dtypes, pruning, elasticity."""
 
-import threading
-import time
 
 import jax
 import jax.numpy as jnp

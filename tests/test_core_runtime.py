@@ -1,6 +1,5 @@
 """Tests for measurer / scheduler / negotiator / rebalance modules."""
 
-import math
 
 import numpy as np
 import pytest
@@ -12,7 +11,6 @@ from repro.core import (
     Machine,
     Measurer,
     Negotiator,
-    OperatorSpec,
     RebalanceCostModel,
     ResourcePool,
     SchedulerConfig,
@@ -71,7 +69,7 @@ def test_sampling_rate_respected():
     p = m.new_probe("a")
     for _ in range(95):
         p.on_processed(0.01)
-    _, processed, _, sampled = p.drain()
+    _, processed, _, sampled, _ = p.drain()
     assert processed == 95
     assert sampled == 9  # every 10th
 

@@ -1,0 +1,559 @@
+"""Overload semantics: bounded queues, drop accounting, unstable snapshots.
+
+Covers DESIGN.md §11 end to end — engine/DES drop agreement on one
+AppGraph, lam0_hat unbiasedness under shedding, MMPP/burst arrivals, the
+scheduler's "overloaded" path — plus regression tests pinning the
+satellite fixes (probe sample phase, DES rate normalization,
+min_processors feasibility recompute).
+"""
+
+import math
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import AppGraph, Edge, OpDef
+from repro.core import (
+    DRSScheduler,
+    Machine,
+    Measurer,
+    Negotiator,
+    ResourcePool,
+    SchedulerConfig,
+    Topology,
+    min_processors,
+)
+from repro.core.measurer import InstanceProbe
+from repro.streaming.des import (
+    ArrivalProcess,
+    NetworkSimulator,
+    SimConfig,
+    simulate_allocation,
+)
+from repro.streaming.engine import Operator, StreamEngine
+from repro.streaming.overload import OverloadPolicy
+
+
+# --------------------------------------------------------------------- #
+# OverloadPolicy surface
+# --------------------------------------------------------------------- #
+def test_policy_validation():
+    assert OverloadPolicy.coerce("block").blocks
+    assert OverloadPolicy.coerce("shed-oldest").sheds
+    p = OverloadPolicy("shed-newest")
+    assert OverloadPolicy.coerce(p) is p
+    with pytest.raises(ValueError):
+        OverloadPolicy("drop-everything")
+
+
+# --------------------------------------------------------------------- #
+# DES drop semantics
+# --------------------------------------------------------------------- #
+def overloaded_sim(policy, *, capacity=10, seed=3, horizon=200.0, warmup=20.0):
+    """M/D/1 at 2x capacity: mu=10, k=1, deterministic offered 20/s."""
+    top = Topology.chain([("op", 10.0)], lam0=20.0)
+    return simulate_allocation(
+        top, [1], seed=seed, horizon=horizon, warmup=warmup,
+        arrival_kind="deterministic", service_kind="deterministic",
+        queue_capacity=capacity, overload_policy=policy,
+    )
+
+
+@pytest.mark.parametrize("policy", ["shed-newest", "shed-oldest"])
+def test_des_shed_policies_drop_excess(policy):
+    res = overloaded_sim(policy)
+    # Offered 20/s, capacity 10/s -> shed ~10/s post-warmup.
+    assert res.per_op_drop_rate[0] == pytest.approx(10.0, rel=0.05)
+    assert res.per_op_arrival_rate[0] == pytest.approx(20.0, rel=0.05)  # offered
+    assert res.per_op_max_backlog[0] <= 10 + 1
+    assert res.shed_roots == res.dropped  # every shed tuple is external here
+    # Survivors' sojourn is bounded by the queue: cap * service + service.
+    assert res.mean_sojourn <= (10 + 1) * 0.1 + 1e-6
+
+
+def test_des_block_policy_is_lossless():
+    res = overloaded_sim("block")
+    assert res.dropped == 0 and res.shed_roots == 0
+    # Backlog grows without bound (backpressure pushes latency upstream).
+    assert res.per_op_max_backlog[0] > 100
+    # Throughput pins at capacity.
+    assert res.completed == pytest.approx(10.0 * 200.0, rel=0.1)
+
+
+def test_des_unbounded_counts_no_drops():
+    res = overloaded_sim("shed-newest", capacity=None, horizon=60.0)
+    assert res.dropped == 0
+    assert res.per_op_dropped is not None and res.per_op_dropped[0] == 0
+
+
+def test_lam0_hat_unbiased_under_shedding():
+    """A dropped external tuple must NOT count as an external arrival:
+    lam0_hat converges to the admitted rate (~capacity), not the offered
+    rate — while the queue-tail probe still reports offered load."""
+    top = Topology.chain([("op", 10.0)], lam0=20.0)
+    m = Measurer(["op"], smoother="ewma", smoother_kw={"alpha": 0.0})
+    m.pull(0.0)
+    sim = NetworkSimulator(
+        top, [1],
+        config=SimConfig(seed=5, horizon=300.0, warmup=0.0,
+                         queue_capacity=10, overload_policy="shed-newest"),
+        measurer=m,
+    )
+    sim.run()
+    snap = m.pull(sim.now)
+    assert snap.lam0_hat == pytest.approx(10.0, rel=0.1)  # admitted ~ capacity
+    assert snap.lam_hat[0] == pytest.approx(20.0, rel=0.1)  # offered at tail
+    assert snap.drop_hat[0] == pytest.approx(10.0, rel=0.15)  # shed rate
+    # offered == admitted + shed
+    assert snap.lam_hat[0] == pytest.approx(snap.lam0_hat + snap.drop_hat[0], rel=0.1)
+
+
+def test_shed_roots_do_not_bias_sojourn():
+    """Sojourns of partially-shed trees are excluded: with a fan-out op
+    whose children are shed downstream, surviving complete sojourns must
+    still match the (stable) survivors' dynamics, not include truncated
+    trees that 'completed' early because half their work was dropped."""
+    ops = [OpDef("gen", mu=50.0), OpDef("work", mu=10.0)]
+    graph = AppGraph(ops, [Edge("gen", "work", 2.0)], {"gen": 9.0})
+    res = graph.bind(
+        "des", seed=7, horizon=200.0, warmup=20.0,
+        queue_capacity=5, overload_policy="shed-newest",
+    ).simulate([1, 1])
+    # work is offered 18/s vs capacity 10/s -> heavy shedding
+    assert res.per_op_drop_rate[1] > 5.0
+    assert res.shed_roots > 0
+    # every recorded completion is a FULL tree: completed + shed == admitted
+    assert res.completed > 0
+
+
+# --------------------------------------------------------------------- #
+# Engine drop semantics + engine/DES agreement
+# --------------------------------------------------------------------- #
+def test_engine_shed_newest_counts_and_completes():
+    eng = StreamEngine(
+        [Operator("op", lambda x: (time.sleep(0.02), [])[1])],
+        queue_capacity=3,
+        overload_policy="shed-newest",
+    )
+    eng.start({"op": 1})
+    outcomes = [eng.inject("op", i) for i in range(40)]  # burst >> queue
+    admitted = [r for r in outcomes if r is not None]
+    shed = outcomes.count(None)
+    assert eng.drain(timeout=10.0)
+    eng.stop()
+    assert shed > 0 and len(admitted) + shed == 40
+    assert eng.drop_counts()["op"] == shed
+    assert eng.shed_roots == shed
+    assert len(eng.completed_sojourns) == len(admitted)
+
+
+def test_engine_block_policy_backpressures_inject():
+    eng = StreamEngine(
+        [Operator("op", lambda x: (time.sleep(0.02), [])[1])],
+        queue_capacity=2,
+        overload_policy="block",
+    )
+    eng.start({"op": 1})
+    t0 = time.perf_counter()
+    for i in range(20):
+        assert eng.inject("op", i) is not None
+    blocked_for = time.perf_counter() - t0
+    assert eng.drain(timeout=10.0)
+    eng.stop()
+    # 20 tuples at ~20ms each through a 2-slot queue: inject had to wait.
+    assert blocked_for > 0.2
+    assert eng.drop_counts()["op"] == 0
+    assert len(eng.completed_sojourns) == 20
+
+
+def test_engine_inject_timeout_sheds():
+    eng = StreamEngine(
+        [Operator("op", lambda x: (time.sleep(0.05), [])[1])],
+        queue_capacity=1,
+        overload_policy="block",
+    )
+    eng.start({"op": 1})
+    results = [eng.inject("op", i, timeout=0.01) for i in range(10)]
+    assert None in results  # some injections timed out and were shed
+    assert eng.drop_counts()["op"] == results.count(None)
+    assert eng.drain(timeout=10.0)
+    eng.stop()
+
+
+def shared_overload_graph():
+    def work(_x):
+        time.sleep(0.02)  # mu = 50/s
+        return []
+
+    return AppGraph(
+        [OpDef("work", mu=50.0, fn=work, service_kind="deterministic")],
+        [],
+        {"work": 100.0},  # 2x capacity at k=1
+        arrival_kind="deterministic",
+    )
+
+
+def test_engine_and_des_drop_rates_agree():
+    """Same AppGraph, same policy: live shed rate ~= simulated shed rate."""
+    graph = shared_overload_graph()
+    session = graph.bind("engine", queue_capacity=4, overload_policy="shed-newest")
+    session.start({"work": 1})
+    period = 1.0 / 100.0
+    t0 = time.perf_counter()
+    sent = 0
+    while time.perf_counter() - t0 < 2.0:
+        session.inject(sent)
+        sent += 1
+        target = t0 + sent * period
+        if (dt := target - time.perf_counter()) > 0:
+            time.sleep(dt)
+    elapsed = time.perf_counter() - t0
+    session.drain(timeout=10.0)
+    session.stop()
+    eng_rate = session.drop_counts()["work"] / elapsed
+
+    des = graph.bind(
+        "des", queue_capacity=4, overload_policy="shed-newest",
+        horizon=100.0, warmup=5.0, seed=11,
+    ).simulate([1])
+    des_rate = float(des.per_op_drop_rate[0])
+    # Offered 100/s, capacity ~50/s -> both shed ~50/s.  The live engine
+    # carries scheduling jitter; 20% is a safe CI bound (the benchmark
+    # reports the tight comparison).
+    assert des_rate == pytest.approx(50.0, rel=0.05)
+    assert eng_rate == pytest.approx(des_rate, rel=0.2)
+
+
+# --------------------------------------------------------------------- #
+# Arrival processes
+# --------------------------------------------------------------------- #
+def test_mmpp_arrival_rate_sanity():
+    """Long-run MMPP rate == stationary mixture of the two state rates."""
+    ap = ArrivalProcess(rate=5.0, kind="mmpp", rate2=50.0, switch01=0.2, switch10=0.8)
+    rng = np.random.default_rng(0)
+    n = 40_000
+    total = sum(ap.sample(rng) for _ in range(n))
+    expect = (0.8 * 5.0 + 0.2 * 50.0) / (0.2 + 0.8)
+    assert n / total == pytest.approx(expect, rel=0.05)
+
+
+def test_mmpp_is_burstier_than_poisson():
+    """MMPP inter-arrivals must show higher variability (CV > 1)."""
+    ap = ArrivalProcess(rate=2.0, kind="mmpp", rate2=80.0, switch01=0.05, switch10=0.5)
+    rng = np.random.default_rng(1)
+    xs = np.array([ap.sample(rng) for _ in range(20_000)])
+    cv = xs.std() / xs.mean()
+    assert cv > 1.2
+
+
+def test_burst_arrival_schedule():
+    """Burst kind: rate2 inside the burst window, rate outside, and the
+    long-run mean is the duty-cycle mixture."""
+    ap = ArrivalProcess(rate=2.0, kind="burst", rate2=40.0,
+                        burst_every=10.0, burst_length=2.0)
+    rng = np.random.default_rng(2)
+    t, in_burst, out_burst = 0.0, 0, 0
+    n = 30_000
+    for _ in range(n):
+        t += ap.sample(rng)
+        if t % 10.0 < 2.0:
+            in_burst += 1
+        else:
+            out_burst += 1
+    mean_rate = n / t
+    assert mean_rate == pytest.approx(0.2 * 40.0 + 0.8 * 2.0, rel=0.05)
+    # bursts dominate the arrivals despite covering 20% of the time
+    assert in_burst > 3 * out_burst
+
+
+def test_arrival_change_preserves_process_parameters():
+    """schedule_arrival_change must keep kind AND the mmpp/burst parameters
+    (a plain (rate, kind) rebuild used to zero rate2 and the schedule,
+    silently killing every burst window after the change)."""
+    top = Topology.chain([("op", 1000.0)], lam0=5.0)
+    sim = NetworkSimulator(
+        top, [1], config=SimConfig(seed=8, horizon=1.0, warmup=0.0),
+        arrivals=[ArrivalProcess(rate=2.0, kind="burst", rate2=40.0,
+                                 burst_every=10.0, burst_length=2.0)],
+    )
+    sim.schedule_arrival_change(0.5, 0, 4.0)
+    sim.run()
+    ap = sim.arrivals[0]
+    assert ap.rate == 4.0
+    assert ap.kind == "burst"
+    assert ap.rate2 == 40.0
+    assert ap.burst_every == 10.0 and ap.burst_length == 2.0
+
+
+def test_mmpp_and_burst_require_rate2():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="rate2"):
+        ArrivalProcess(rate=5.0, kind="mmpp").sample(rng)
+    with pytest.raises(ValueError, match="rate2"):
+        ArrivalProcess(rate=5.0, kind="burst").sample(rng)
+    # explicit 0.0 is a legal ON/OFF process
+    assert ArrivalProcess(rate=0.0, kind="mmpp", rate2=8.0).sample(rng) > 0
+
+
+def test_queue_capacity_zero_rejected_everywhere():
+    """capacity 0 used to mean 'unbounded' in the engine (queue.Queue
+    semantics) but 'always full' in the DES (IndexError under
+    shed-oldest); both backends now reject it."""
+    with pytest.raises(ValueError, match="queue_capacity"):
+        StreamEngine([Operator("op", lambda x: [])], queue_capacity=0)
+    top = Topology.chain([("op", 10.0)], lam0=5.0)
+    with pytest.raises(ValueError, match="queue_capacity"):
+        NetworkSimulator(top, [1], config=SimConfig(queue_capacity=0))
+
+
+def test_mmpp_drives_simulator():
+    """End-to-end: MMPP source through the DES, measured rate sane."""
+    top = Topology.chain([("op", 100.0)], lam0=14.0)  # lam0 overridden below
+    sim = NetworkSimulator(
+        top, [1],
+        config=SimConfig(seed=4, horizon=400.0, warmup=40.0),
+        arrivals=[ArrivalProcess(rate=5.0, kind="mmpp", rate2=50.0,
+                                 switch01=0.2, switch10=0.8)],
+    )
+    res = sim.run()
+    assert res.per_op_arrival_rate[0] == pytest.approx(14.0, rel=0.1)
+
+
+def test_mmpp_reachable_through_declarative_api():
+    """The unified API must be able to drive the modulated arrival kinds:
+    arrival_kw plumbs the ArrivalProcess parameters through bind("des")."""
+    graph = AppGraph.chain([("op", 100.0)], lam0=5.0, arrival_kind="mmpp")
+    res = graph.bind(
+        "des", seed=9, horizon=400.0, warmup=40.0,
+        arrival_kw={"rate2": 50.0, "switch01": 0.2, "switch10": 0.8},
+    ).simulate([1])
+    # state-0 rate comes from the graph's lam0 (5/s); long-run mixture:
+    expect = (0.8 * 5.0 + 0.2 * 50.0) / 1.0
+    assert res.per_op_arrival_rate[0] == pytest.approx(expect, rel=0.1)
+
+
+# --------------------------------------------------------------------- #
+# Scheduler: unstable snapshots
+# --------------------------------------------------------------------- #
+def overload_snapshot(sched, lam_offered, mus, lam0_admitted, drops, dt=60.0):
+    m = sched.measurer
+    probes = [m.new_probe(n) for n in m.names]
+    m.pull(0.0)
+    for i, p in enumerate(probes):
+        p.on_enqueue(int(lam_offered[i] * dt))
+        p.on_dropped(int(drops[i] * dt))
+        for _ in range(60):
+            for _ in range(m.n_m - 1):
+                p.on_processed(0.0)
+            p.on_processed(1.0 / mus[i])
+    m.on_external_arrival(int(lam0_admitted * dt))
+    m.on_tuple_complete(2.0, n=int(lam0_admitted * dt))
+    return m.pull(dt)
+
+
+def chain_routing(n):
+    r = np.zeros((n, n))
+    for i in range(n - 1):
+        r[i][i + 1] = 1.0
+    return r
+
+
+def test_scheduler_emits_overloaded_and_scales_out():
+    """rho >= 1 at the source: immediate negotiator scale-out, offered-load
+    model (downstream throughput-capped rates ignored)."""
+    names = ["extract", "match", "agg"]
+    routing = chain_routing(3)
+    pool = ResourcePool([Machine(f"m{i}", 5) for i in range(10)])
+    neg = Negotiator(pool)
+    neg.ensure(10)
+    cfg = SchedulerConfig(t_max=1.5, min_improvement=0.01)
+    sched = DRSScheduler(names, routing, np.array([5, 4, 1]), cfg, negotiator=neg)
+    # extract: capacity 5*2=10, offered 26 -> rho 2.6.  Downstream probes
+    # see only extract's throughput (10/s), i.e. capped measurements.
+    snap = overload_snapshot(
+        sched, [26.0, 10.0, 10.0], [2.0, 5.0, 50.0],
+        lam0_admitted=10.0, drops=[16.0, 0.0, 0.0],
+    )
+    mask = sched.overloaded_mask(snap)
+    assert list(mask) == [True, False, False]
+    top = sched.topology_from(snap)
+    # Clamped model: offered load propagated through declared routing.
+    assert top.lam0[0] == pytest.approx(26.0, rel=0.05)
+    np.testing.assert_allclose(top.arrival_rates, [26.0, 26.0, 26.0], rtol=0.05)
+    d = sched.decide(top, snap, 60.0)
+    assert d.action == "overloaded"
+    assert neg.k_max > 10  # leased immediately, no hysteresis
+    assert d.k_target is not None
+    assert top.expected_sojourn(d.k_target) <= cfg.t_max
+
+
+def test_scheduler_overloaded_without_negotiator_is_defined():
+    """No negotiator: still a defined decision (best effort at k_max or an
+    explicit infeasible-overloaded verdict), never an exception."""
+    names = ["a"]
+    routing = np.zeros((1, 1))
+    cfg = SchedulerConfig(k_max=2)
+    sched = DRSScheduler(names, routing, np.array([1]), cfg)
+    snap = overload_snapshot(sched, [30.0], [10.0], lam0_admitted=10.0, drops=[20.0])
+    top = sched.topology_from(snap)
+    d = sched.decide(top, snap, 60.0)
+    assert d.action == "overloaded"
+    # offered 30/s needs 4 processors at mu=10; k_max=2 -> no target
+    assert d.k_target is None
+    assert "infeasible" in d.reason
+
+
+def test_scheduler_overloaded_on_drop_rate_alone():
+    """Sustained shedding flags overload even when the smoothed arrival
+    rate still sits just below capacity (EWMA lag under bursty load)."""
+    names = ["a"]
+    routing = np.zeros((1, 1))
+    sched = DRSScheduler(names, routing, np.array([1]), SchedulerConfig(k_max=8))
+    # capacity 10/s; smoothed lam 9.5/s (below), but 3/s being shed
+    snap = overload_snapshot(sched, [9.5], [10.0], lam0_admitted=6.5, drops=[3.0])
+    assert sched.overloaded_mask(snap).any()
+    d = sched.decide(sched.topology_from(snap), snap, 60.0)
+    assert d.action == "overloaded"
+
+
+def test_scheduler_stable_snapshot_unaffected():
+    """rho < 1 everywhere: the overload path must not trigger and the
+    measured-rescale model is used (drop-in regression guard)."""
+    names = ["extract", "match", "agg"]
+    routing = chain_routing(3)
+    cfg = SchedulerConfig(k_max=22, min_improvement=0.01)
+    sched = DRSScheduler(names, routing, np.array([8, 12, 2]), cfg)
+    snap = overload_snapshot(
+        sched, [13.0, 13.0, 13.0], [2.0, 5.0, 50.0],
+        lam0_admitted=13.0, drops=[0.0, 0.0, 0.0],
+    )
+    assert not sched.overloaded_mask(snap).any()
+    d = sched.decide(sched.topology_from(snap), snap, 60.0)
+    assert d.action == "rebalance"
+
+
+def test_snapshot_drop_rates_surface():
+    m = Measurer(["a", "b"], smoother="ewma", smoother_kw={"alpha": 0.0})
+    pa, pb = m.new_probe("a"), m.new_probe("b")
+    m.pull(0.0)
+    pa.on_enqueue(100)
+    pa.on_dropped(40)
+    pb.on_enqueue(60)
+    for p in (pa, pb):
+        for _ in range(20):
+            p.on_processed(0.01)
+    snap = m.pull(10.0)
+    assert snap.drop_hat[0] == pytest.approx(4.0)
+    assert snap.drop_hat[1] == 0.0
+    np.testing.assert_allclose(snap.drop_rates(), [4.0, 0.0])
+
+
+# --------------------------------------------------------------------- #
+# Satellite regressions
+# --------------------------------------------------------------------- #
+def test_probe_sampling_phase_preserved_across_batches():
+    """Batched on_processed(n>1) crossing the n_m boundary must keep the
+    remainder: 3 batches of 25 with n_m=10 -> exactly 7 samples (75/10),
+    not 3 (one per triggering call)."""
+    p = InstanceProbe(n_m=10)
+    for _ in range(3):
+        p.on_processed(0.02, n=25)
+    _, processed, _, sampled, _ = p.drain()
+    assert processed == 75
+    assert sampled == 7
+
+
+def test_probe_sampling_rate_exact_with_mixed_batches():
+    p = InstanceProbe(n_m=5)
+    total = 0
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        n = int(rng.integers(1, 12))
+        total += n
+        p.on_processed(0.01, n=n)
+    _, processed, _, sampled, _ = p.drain()
+    assert processed == total
+    assert sampled == total // 5
+
+
+def test_des_arrival_rate_uses_post_warmup_span():
+    """Rate doubles exactly at the warmup boundary: the reported
+    per-op rate must reflect the post-warmup regime only (the old code
+    blended warmup arrivals into the whole-run average)."""
+    top = Topology.chain([("op", 100.0)], lam0=5.0)
+    sim = NetworkSimulator(
+        top, [1], config=SimConfig(seed=6, horizon=400.0, warmup=200.0)
+    )
+    sim.schedule_arrival_change(200.0, 0, 10.0)
+    res = sim.run()
+    assert res.per_op_arrival_rate[0] == pytest.approx(10.0, rel=0.08)
+
+
+def test_min_processors_result_truly_feasible():
+    """The accepted allocation must satisfy T_max on the exactly
+    recomputed E[T], across a sweep approaching the service-time floor
+    (guards the incremental-et drift accept/raise)."""
+    top = Topology.chain(
+        [(f"op{i}", 3.0 + 0.7 * i) for i in range(8)], lam0=2.5
+    )
+    floor = sum(top.arrival_rates[i] / top.lam0_total / op.mu
+                for i, op in enumerate(top.operators))
+    for frac in (1.01, 1.02, 1.05, 1.1, 1.5, 3.0):
+        t_max = floor * frac
+        res = min_processors(top, t_max)
+        assert top.expected_sojourn(res.k) <= t_max  # exact, not drifted
+        assert res.expected_sojourn == pytest.approx(top.expected_sojourn(res.k))
+
+
+def test_engine_rescale_under_load_no_lost_roots():
+    """Stress the worker-loop root lookup (now lock-protected) against
+    concurrent rescale + completion: no root may be lost or double-done."""
+    eng = StreamEngine(
+        [Operator("a", lambda x: [("b", x)]), Operator("b", lambda x: [])],
+        queue_capacity=None,
+    )
+    eng.start({"a": 2, "b": 2})
+    n = 300
+    for i in range(n):
+        eng.inject("a", i)
+        if i % 50 == 0:
+            eng.scale_to({"a": 1 + i % 3, "b": 1 + (i // 50) % 3})
+    assert eng.drain(timeout=20.0)
+    eng.stop()
+    assert len(eng.completed_sojourns) == n
+    assert eng.shed_roots == 0
+
+
+def test_session_tick_applies_overloaded_decision():
+    """DRSSession must apply the 'overloaded' allocation to the backend."""
+
+    def work(_x):
+        time.sleep(0.02)
+        return []
+
+    graph = AppGraph([OpDef("work", mu=50.0, fn=work)], [], {"work": 100.0})
+    pool = ResourcePool([Machine(f"m{i}", 1) for i in range(6)])
+    neg = Negotiator(pool)
+    neg.ensure(1)
+    session = graph.bind(
+        "engine", queue_capacity=4, overload_policy="shed-newest",
+        config=SchedulerConfig(t_max=0.5, min_improvement=0.01),
+        negotiator=neg,
+    )
+    session.start({"work": 1})
+    t0 = time.perf_counter()
+    sent = 0
+    while time.perf_counter() - t0 < 1.5:
+        session.inject(sent)
+        sent += 1
+        target = t0 + sent / 100.0
+        if (dt := target - time.perf_counter()) > 0:
+            time.sleep(dt)
+    decision = session.tick()
+    applied = session.backend.allocation()
+    session.drain(timeout=10.0)
+    session.stop()
+    assert decision.action == "overloaded"
+    assert applied["work"] > 1  # backend actually rescaled
+    assert math.isfinite(decision.model_sojourn_target)

@@ -1,7 +1,6 @@
 """Sharding rule table: divisibility guards, axis reuse, per-arch overrides."""
 
 import jax
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

@@ -1,6 +1,5 @@
 """DES simulator vs the Erlang/Jackson model — the paper's Fig. 6-8 claims."""
 
-import math
 
 import numpy as np
 import pytest

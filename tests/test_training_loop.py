@@ -8,9 +8,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig, SyntheticTokens
-from repro.distributed.compress import (
-    compress, compress_with_feedback, decompress, ErrorFeedbackState,
-)
+from repro.distributed.compress import compress, compress_with_feedback, decompress
 from repro.training.loop import LoopConfig, TrainLoop
 from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update, lr_schedule
 
