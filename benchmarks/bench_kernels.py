@@ -29,6 +29,18 @@ def run() -> list[tuple[str, float, str]]:
     rows = []
     key = jax.random.PRNGKey(0)
 
+    # erlang_c: the analytic core's hot recurrence (DESIGN.md §12)
+    from repro.kernels.erlang_c import kernel as ek, ref as eref
+
+    a = jnp.linspace(0.5, 256.0, 128, dtype=jnp.float32)
+    t_ref, want = timeit(lambda a: eref.erlang_b_table(a, k_hi=512), a)
+    t_k, got = timeit(
+        lambda a: ek.erlang_b_table_pallas(a, k_hi=512, interpret=True), a
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-7)
+    rows.append(("erlang_b_table_ref", t_ref * 1e6, "us lax.scan, 128 lanes x k=512"))
+    rows.append(("erlang_b_table_pallas_interp", t_k * 1e6, "us interpret (correctness run)"))
+
     # l2_match: the paper's matcher bolt
     from repro.kernels.l2_match import kernel as lk, ref as lref
 

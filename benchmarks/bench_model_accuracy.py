@@ -35,10 +35,18 @@ def fpd_graph() -> AppGraph:
     )
 
 
-def run_app(name: str, graph: AppGraph, k_max: int, configs: list[tuple[int, ...]]):
+def run_app(
+    name: str,
+    graph: AppGraph,
+    k_max: int,
+    configs: list[tuple[int, ...]],
+    *,
+    horizon: float = 800.0,
+    warmup: float = 80.0,
+):
     rows = []
     top = graph.topology()
-    session = graph.bind("des", horizon=800.0, warmup=80.0)
+    session = graph.bind("des", horizon=horizon, warmup=warmup)
     best = assign_processors(top, k_max)
     star = tuple(best.k.tolist())
     all_cfgs = list(configs)
@@ -68,16 +76,18 @@ def run_app(name: str, graph: AppGraph, k_max: int, configs: list[tuple[int, ...
     return rows
 
 
-def run() -> list[tuple[str, float, str]]:
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
+    # smoke: fewer candidate configs and a short horizon — drift gate, not
+    # a figure run (sim noise makes the fig-6 "best" check unreliable here,
+    # but rank correlation and row shape still guard regressions).
+    horizon, warmup = (200.0, 20.0) if smoke else (800.0, 80.0)
+    vld_cfgs = [(10, 11, 1), (9, 12, 1), (11, 10, 1), (8, 12, 2), (12, 8, 2), (7, 13, 2)]
+    fpd_cfgs = [(6, 13, 3), (7, 12, 3), (5, 14, 3), (6, 12, 4), (8, 11, 3)]
+    if smoke:
+        vld_cfgs, fpd_cfgs = vld_cfgs[:3], fpd_cfgs[:3]
     rows = []
-    rows += run_app(
-        "vld", vld_graph(), 22,
-        [(10, 11, 1), (9, 12, 1), (11, 10, 1), (8, 12, 2), (12, 8, 2), (7, 13, 2)],
-    )
-    rows += run_app(
-        "fpd", fpd_graph(), 22,
-        [(6, 13, 3), (7, 12, 3), (5, 14, 3), (6, 12, 4), (8, 11, 3)],
-    )
+    rows += run_app("vld", vld_graph(), 22, vld_cfgs, horizon=horizon, warmup=warmup)
+    rows += run_app("fpd", fpd_graph(), 22, fpd_cfgs, horizon=horizon, warmup=warmup)
     return rows
 
 

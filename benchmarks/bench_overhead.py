@@ -2,10 +2,23 @@
 
 The paper reports scheduling cost growing linearly in K_max (0.083 ms at
 K=12 to 1.25 ms at K=192) and a constant measurement-processing cost.
-We time both our naive Algorithm-1 transcription (the paper's algorithm)
-and the heap allocator (beyond-paper, O((K-K0) log N)), plus the measurer
-pull path, on the VLD topology — and extend K_max to 4096 to show the
-control plane stays micro-second-scale at pod scale (DESIGN.md §8).
+We time three Program-(4) solvers on the VLD topology:
+
+* the naive Algorithm-1 transcription (the paper's algorithm),
+* the heap greedy (PR-1's beyond-paper win — but still O(K) *scalar*
+  Erlang recursions, each O(k), so per-tick cost grows ~K^2 in Python),
+* the batched gain-table greedy (this PR, DESIGN.md §12: one vectorized
+  Erlang pass + a top-R selection; bit-identical allocations),
+
+plus the measurer pull path, and extend K_max to 4096 to show the control
+plane stays microsecond-to-millisecond at pod scale.  The
+``speedup_table_vs_scalar_K1024`` row is the acceptance gate for the
+batched core: >= 5x lower per-tick scheduling latency at K_max = 1024
+than the scalar (heap) path.  A ``fleet_plan_*`` row times the
+multi-tenant FleetPlanner end-to-end (M tenants, one shared pool).
+
+Naive is quadratic-plus in K and dominates wall-clock, so it is only
+timed up to K=192 in ``--smoke`` mode (K=1024 full).
 """
 
 from __future__ import annotations
@@ -13,7 +26,14 @@ from __future__ import annotations
 import time
 
 from repro.api import AppGraph
-from repro.core import Measurer, assign_processors, assign_processors_naive
+from repro.core import (
+    FleetPlanner,
+    Measurer,
+    Tenant,
+    assign_processors,
+    assign_processors_naive,
+    assign_processors_table,
+)
 
 
 def time_fn(fn, *args, repeat=200) -> float:
@@ -24,20 +44,66 @@ def time_fn(fn, *args, repeat=200) -> float:
     return (time.perf_counter() - t0) / repeat
 
 
-def run() -> list[tuple[str, float, str]]:
-    rows = []
+def _vld_top(k_max: int):
     # Scale the topology load with K so the min-feasible allocation stays
     # a constant fraction of the budget (paper keeps lam/mu fixed and the
     # allocation saturates; scaling matches their linear-growth regime).
-    for k_max in (12, 24, 48, 96, 192, 1024, 4096):
-        lam0 = 13.0 * k_max / 22.0
-        top = AppGraph.chain(
-            [("extract", 2.0), ("match", 5.0), ("agg", 50.0)], lam0=lam0
-        ).topology()
-        t_naive = time_fn(assign_processors_naive, top, k_max, repeat=20)
-        t_heap = time_fn(assign_processors, top, k_max, repeat=20)
-        rows.append((f"scheduling_naive_K{k_max}", t_naive * 1e6, "us (paper Algorithm 1)"))
-        rows.append((f"scheduling_heap_K{k_max}", t_heap * 1e6, "us (heap variant)"))
+    lam0 = 13.0 * k_max / 22.0
+    return AppGraph.chain(
+        [("extract", 2.0), ("match", 5.0), ("agg", 50.0)], lam0=lam0
+    ).topology()
+
+
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
+    rows = []
+    naive_cap = 192 if smoke else 1024
+    sweep = (12, 24, 48, 96, 192, 1024) if smoke else (12, 24, 48, 96, 192, 1024, 4096)
+    t_heap_1024 = t_table_1024 = None
+    for k_max in sweep:
+        top = _vld_top(k_max)
+        repeat = 5 if k_max >= 1024 else 20
+        if k_max <= naive_cap:
+            t_naive = time_fn(assign_processors_naive, top, k_max, repeat=repeat)
+            rows.append(
+                (f"scheduling_naive_K{k_max}", t_naive * 1e6, "us (paper Algorithm 1)")
+            )
+        t_heap = time_fn(assign_processors, top, k_max, repeat=repeat)
+        t_table = time_fn(assign_processors_table, top, k_max, repeat=repeat)
+        rows.append((f"scheduling_heap_K{k_max}", t_heap * 1e6, "us (scalar heap)"))
+        rows.append(
+            (f"scheduling_table_K{k_max}", t_table * 1e6, "us (batched gain table)")
+        )
+        if k_max == 1024:
+            t_heap_1024, t_table_1024 = t_heap, t_table
+    if t_heap_1024 and t_table_1024:
+        rows.append((
+            "speedup_table_vs_scalar_K1024",
+            t_heap_1024 / t_table_1024,
+            "x (acceptance: >= 5x)",
+        ))
+
+    # Multi-tenant planner: M graphs against one shared pool, per-tick cost.
+    n_tenants = 4 if smoke else 8
+    pool = 64 * n_tenants
+    tenants = [
+        Tenant(
+            name=f"t{i}",
+            graph=AppGraph.chain(
+                [(f"e{i}", 2.0), (f"m{i}", 5.0), (f"a{i}", 50.0)],
+                lam0=13.0 * (1.0 + 0.1 * i),
+            ),
+            t_max=2.0,
+        )
+        for i in range(n_tenants)
+    ]
+    planner = FleetPlanner(tenants, pool)
+    t_fleet = time_fn(planner.plan, repeat=3 if smoke else 10)
+    rows.append((
+        f"fleet_plan_M{n_tenants}_K{pool}",
+        t_fleet * 1e3,
+        "ms per cross-tenant plan (Programs 4+6, merged gain tables)",
+    ))
+
     # measurement processing (pull of 25 probes, paper's 'Measurement' row)
     m = Measurer([f"op{i}" for i in range(3)], n_m=10)
     probes = [m.new_probe(f"op{i % 3}") for i in range(25)]

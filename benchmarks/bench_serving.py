@@ -17,7 +17,7 @@ from repro.serving.router import ServingSimulation
 RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
 
 
-def run() -> list[tuple[str, float, str]]:
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     rows = []
     try:
         rates = rates_from_dryrun("llama3.2-1b", RESULTS)
@@ -32,9 +32,11 @@ def run() -> list[tuple[str, float, str]]:
         rates.prefill_per_chip * (k_max - 4) / (1 + model.group_alpha * (k_max - 5)),
         rates.decode_per_chip * (k_max - 4) / (1 + model.group_alpha * (k_max - 5)) / 32.0,
     )
-    for frac in (0.3, 0.5, 0.7):
+    fracs = (0.3, 0.7) if smoke else (0.3, 0.5, 0.7)
+    for frac in fracs:
         lam0 = sat * frac
-        sim = ServingSimulation(model, lam0, horizon=max(1500.0, 800 / lam0), warmup=50 / lam0, seed=int(frac * 100))
+        horizon = max(300.0, 150 / lam0) if smoke else max(1500.0, 800 / lam0)
+        sim = ServingSimulation(model, lam0, horizon=horizon, warmup=50 / lam0, seed=int(frac * 100))
         k_min = sim.graph.topology().min_feasible_allocation()
         drs = sim.drs_allocation(k_max)
         lat_drs = sim.run(drs).mean_latency

@@ -13,18 +13,20 @@ from __future__ import annotations
 from repro.api import AppGraph
 
 
-def run() -> list[tuple[str, float, str]]:
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     rows = []
     hop = 0.004  # 4 ms per-hop network delay (out of model)
-    for total_cpu_ms in (0.5, 2.0, 8.0, 32.0, 128.0, 512.0):
+    sweep = (2.0, 32.0, 512.0) if smoke else (0.5, 2.0, 8.0, 32.0, 128.0, 512.0)
+    for total_cpu_ms in sweep:
         mu = 3.0 / (total_cpu_ms / 1e3)  # 3 bolts, equal split
         graph = AppGraph.chain(
             [("b1", mu), ("b2", mu), ("b3", mu)], lam0=min(0.5 * mu, 200.0)
         )
         top = graph.topology()
         k = list(top.min_feasible_allocation() + 1)
+        horizon = max(150.0, 15000.0 / mu) if smoke else max(400.0, 40000.0 / mu)
         sim = graph.bind(
-            "des", seed=11, horizon=max(400.0, 40000.0 / mu), warmup=20.0,
+            "des", seed=11, horizon=horizon, warmup=20.0,
             network_delay=hop,
         ).simulate(k)
         est = top.expected_sojourn(k)

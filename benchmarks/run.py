@@ -17,6 +17,7 @@ by ``python -m benchmarks.roofline`` from the dry-run records.
 
 from __future__ import annotations
 
+import inspect
 import sys
 import time
 import traceback
@@ -43,7 +44,11 @@ SUITES = [
 
 
 def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    # ``python -m benchmarks.run [suite] [--smoke]`` — smoke caps every
+    # bench to seconds (CI drift gate); a suite name runs just that one.
+    args = [a for a in sys.argv[1:] if a != "--smoke"]
+    smoke = "--smoke" in sys.argv[1:]
+    only = args[0] if args else None
     failures = 0
     for name, mod in SUITES:
         if only and only != name:
@@ -51,7 +56,12 @@ def main() -> None:
         print(f"# --- {name} ({mod.__name__}) ---", flush=True)
         t0 = time.time()
         try:
-            for row_name, val, note in mod.run():
+            kwargs = (
+                {"smoke": smoke}
+                if "smoke" in inspect.signature(mod.run).parameters
+                else {}
+            )
+            for row_name, val, note in mod.run(**kwargs):
                 print(f"{row_name},{val},{note}", flush=True)
         except Exception:  # noqa: BLE001
             failures += 1

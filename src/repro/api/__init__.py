@@ -19,9 +19,16 @@ should declare topologies through this package.
 
 from ..core.allocator import AllocationResult, InsufficientResourcesError
 from ..core.jackson import Topology, UnstableTopologyError
+from ..core.planner import FleetPlan, FleetPlanner, Tenant
 from ..core.scheduler import SchedulerConfig, SchedulerDecision
 from .graph import AppGraph, Edge, GraphValidationError, OpDef
-from .session import DESBackend, DRSSession, EngineBackend
+from .session import (
+    DESBackend,
+    DRSSession,
+    EngineBackend,
+    FleetDecision,
+    FleetSession,
+)
 
 __all__ = [
     "AppGraph",
@@ -31,6 +38,11 @@ __all__ = [
     "DRSSession",
     "EngineBackend",
     "DESBackend",
+    "FleetSession",
+    "FleetDecision",
+    "FleetPlan",
+    "FleetPlanner",
+    "Tenant",
     "SchedulerConfig",
     "SchedulerDecision",
     "AllocationResult",

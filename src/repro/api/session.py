@@ -26,19 +26,27 @@ Typical use::
 from __future__ import annotations
 
 import time
+from dataclasses import dataclass
 from typing import Any, Mapping, Sequence
 
 import numpy as np
 
-from ..core.allocator import AllocationResult, allocate
+from ..core.allocator import AllocationResult, InsufficientResourcesError, allocate
 from ..core.jackson import Topology
 from ..core.measurer import Measurer
 from ..core.negotiator import Negotiator
+from ..core.planner import FleetPlan, FleetPlanner, Tenant
 from ..core.rebalance import ExecutableCache, RebalanceCostModel
 from ..core.scheduler import DRSScheduler, SchedulerConfig, SchedulerDecision
 from .graph import AppGraph, GraphValidationError
 
-__all__ = ["DRSSession", "EngineBackend", "DESBackend"]
+__all__ = [
+    "DRSSession",
+    "EngineBackend",
+    "DESBackend",
+    "FleetSession",
+    "FleetDecision",
+]
 
 
 def _group_effective_services(top: Topology, k_vec: np.ndarray):
@@ -434,3 +442,290 @@ class DRSSession:
         if isinstance(self.backend, DESBackend):
             return self.simulate(k, **kwargs)
         return self.start(k)
+
+
+# --------------------------------------------------------------------------- #
+# Fleet: several sessions against one shared pool
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class FleetDecision:
+    """One fleet control tick's outcome."""
+
+    t: float
+    # "none" | "rebalance" | "scale_in" | "overloaded" | "infeasible"
+    action: str
+    k_max: int
+    plan: FleetPlan | None
+    # tenant -> name-keyed allocation actually in force after the tick
+    k: dict
+    overloaded_tenants: tuple = ()
+    objective_current: float = float("inf")
+    reason: str = ""
+
+
+class FleetSession:
+    """Several :class:`DRSSession` tenants scheduled against ONE pool.
+
+    Where a ``DRSSession`` runs the paper's control loop for one graph, a
+    ``FleetSession`` owns the cross-tenant loop (DESIGN.md §12): every
+    tick it pulls each tenant's measurements, rebuilds each tenant's model
+    (reusing the per-tenant scheduler's offered-load clamping when a
+    tenant is overloaded), and solves the merged Program (4)/(6) with
+    :class:`~repro.core.planner.FleetPlanner` — per-tenant ``T_max`` come
+    from each session's ``SchedulerConfig.t_max``.
+
+    Overload reuses PR 2's semantics fleet-wide: any tenant with measured
+    ``rho >= 1``, or Program-(6) floors exceeding the pool, makes the tick
+    ``"overloaded"`` — the negotiator is asked for capacity immediately
+    and the replan is applied with no improvement gate.
+
+    Tenants may be model-only (never started): their declared priors feed
+    the planner and allocations are tracked but not applied to a backend.
+
+    Typical use::
+
+        fleet = FleetSession(
+            {"vld": vld_graph.bind("engine", config=SchedulerConfig(t_max=0.5)),
+             "fpd": fpd_graph.bind("engine", config=SchedulerConfig(t_max=2.0))},
+            k_max=64,
+        )
+        fleet.start()          # plans the pool split and starts each backend
+        ...inject per tenant...
+        fleet.tick()           # merged measure -> model -> replan -> apply
+    """
+
+    def __init__(
+        self,
+        sessions: Mapping[str, DRSSession],
+        *,
+        k_max: int | None = None,
+        negotiator: Negotiator | None = None,
+        objective: str = "fair",
+        min_improvement: float = 0.05,
+        headroom: float = 1.1,
+        scale_in_hysteresis: float = 0.8,
+        on_decision=None,
+    ):
+        if not sessions:
+            raise GraphValidationError("fleet needs at least one session")
+        if k_max is None and negotiator is None:
+            raise GraphValidationError("fleet needs k_max= and/or negotiator=")
+        self.sessions: dict[str, DRSSession] = dict(sessions)
+        self._static_k_max = k_max
+        self.negotiator = negotiator
+        self.objective = objective
+        self.min_improvement = min_improvement
+        self.headroom = headroom
+        self.scale_in_hysteresis = scale_in_hysteresis
+        self.on_decision = on_decision
+        self.history: list[FleetDecision] = []
+        # tenant -> index-ordered allocation currently in force
+        self._k: dict[str, np.ndarray] = {}
+
+    # ------------------------------------------------------------------ #
+    @property
+    def k_max(self) -> int:
+        if self.negotiator is not None:
+            k = self.negotiator.k_max
+            return max(k, self._static_k_max or 0)
+        return self._static_k_max
+
+    def tenants(self) -> list[Tenant]:
+        return [
+            Tenant(name=name, graph=s.graph, t_max=s.config.t_max)
+            for name, s in self.sessions.items()
+        ]
+
+    def planner(self) -> FleetPlanner:
+        return FleetPlanner(self.tenants(), self.k_max, objective=self.objective)
+
+    def plan(self, *, k_max: int | None = None) -> FleetPlan:
+        """Cross-tenant Programs (4)/(6) on the declared priors."""
+        return self.planner().plan(k_max=k_max)
+
+    def allocations(self) -> dict[str, dict[str, int]]:
+        """tenant -> name-keyed allocation currently in force."""
+        return {
+            name: self.sessions[name].graph.k_dict(k) for name, k in self._k.items()
+        }
+
+    # ------------------------------------------------------------------ #
+    def start(self) -> dict[str, dict[str, int]]:
+        """Plan the pool split on priors and start every engine-backed
+        tenant under its share (model-only/DES tenants are planned but not
+        started).  With a negotiator, the initial lease is acquired here —
+        stability minima first, then the Program-(6) floors."""
+        try:
+            plan = self.plan()
+        except InsufficientResourcesError as e:
+            if self.negotiator is None:
+                raise
+            self.negotiator.ensure(int(np.ceil(e.needed * self.headroom)))
+            plan = self.plan()
+        if self.negotiator is not None and plan.needed_total > self.k_max:
+            self.negotiator.ensure(int(np.ceil(plan.needed_total * self.headroom)))
+            plan = self.plan()
+        for name, session in self.sessions.items():
+            k = plan.k[name]
+            self._k[name] = k.copy()
+            if isinstance(session.backend, EngineBackend):
+                session.start(k)
+            else:
+                # Arm the model side so tick() can track without a backend.
+                session.scheduler = session._build_scheduler(k.copy())
+        return self.allocations()
+
+    def stop(self) -> None:
+        for session in self.sessions.values():
+            if isinstance(session.backend, EngineBackend):
+                session.stop()
+
+    # ------------------------------------------------------------------ #
+    def _measured_topologies(self, now: float) -> tuple[dict, list[str]]:
+        """Per-tenant measured model rebuilds + overloaded tenant names.
+
+        Tenants without a complete snapshot (or never started) fall back
+        to their declared priors by omission — the planner resolves those
+        from the graph."""
+        tops: dict[str, Topology] = {}
+        hot: list[str] = []
+        for name, session in self.sessions.items():
+            sched = session.scheduler
+            if sched is None:
+                continue
+            snap = sched.measurer.pull(now)
+            sched._observe_instances()
+            if not snap.complete():
+                continue
+            mask = sched.overloaded_mask(snap)
+            if mask.any():
+                hot.append(name)
+            tops[name] = sched.topology_from(snap, mask)
+        return tops, hot
+
+    def _objective_of(self, planner: FleetPlanner, tops: dict) -> float:
+        """Fleet objective of the allocations currently in force — scored
+        with the planner's own weighting so the improvement gate compares
+        like with like."""
+        if not self._k:
+            return float("inf")
+        total = 0.0
+        for tenant in planner.tenants:
+            k = self._k.get(tenant.name)
+            if k is None:
+                return float("inf")
+            top = tenant.resolve(tops.get(tenant.name))
+            et = top.expected_sojourn(k)
+            w = planner.weight(tenant, top)
+            total += w * top.lam0_total * et if np.isfinite(et) else float("inf")
+        return total
+
+    def _apply(self, plan: FleetPlan) -> dict:
+        for name, session in self.sessions.items():
+            k = plan.k[name]
+            self._k[name] = k.copy()
+            if session.scheduler is not None:
+                session.scheduler.k_current = k.copy()
+            if isinstance(session.backend, EngineBackend):
+                session.backend.apply_allocation(session.graph.k_dict(k))
+        return self.allocations()
+
+    def tick(self, now: float | None = None) -> FleetDecision:
+        """One fleet tick: pull every tenant, replan the pool, apply.
+
+        Mirrors ``DRSScheduler.decide``'s gates at fleet level: an
+        improvement below ``min_improvement`` keeps the current split;
+        overload (any tenant's measured rho >= 1, or Program-(6) floors
+        exceeding the pool) bypasses the gate and leases immediately."""
+        now = time.time() if now is None else now
+        tops, hot = self._measured_topologies(now)
+        k_max = self.k_max
+        planner = FleetPlanner(self.tenants(), k_max, objective=self.objective)
+        try:
+            plan = planner.plan(tops, k_max=k_max)
+        except InsufficientResourcesError as e:
+            if self.negotiator is not None:
+                self.negotiator.ensure(int(np.ceil(e.needed * self.headroom)))
+                k_max = self.k_max
+                try:
+                    plan = planner.plan(tops, k_max=k_max)
+                except InsufficientResourcesError as e2:
+                    return self._emit(FleetDecision(
+                        now, "infeasible", k_max, None, self.allocations(),
+                        tuple(hot), reason=str(e2),
+                    ))
+            else:
+                return self._emit(FleetDecision(
+                    now, "infeasible", k_max, None, self.allocations(),
+                    tuple(hot), reason=str(e),
+                ))
+
+        overloaded = bool(hot) or plan.overloaded
+        if overloaded and self.negotiator is not None and plan.needed_total > k_max:
+            # PR-2 overload semantics: lease now, no hysteresis, no gate.
+            self.negotiator.ensure(int(np.ceil(plan.needed_total * self.headroom)))
+            if self.k_max > k_max:
+                k_max = self.k_max
+                plan = planner.plan(tops, k_max=k_max)
+        elif (
+            self.negotiator is not None
+            and self._static_k_max is None
+            # Mirror DRSScheduler: only scale in when the floors are real
+            # latency targets — every tenant must declare a T_max, or the
+            # "need" is just the stability minimum and releasing to it
+            # would degrade tenants that never asked for a budget cut.
+            and all(t.t_max is not None for t in planner.tenants)
+            and plan.needed_total > 0
+            and np.ceil(plan.needed_total * self.headroom)
+            < self.scale_in_hysteresis * k_max
+        ):
+            # Shrink the lease and the allocation together: replan at the
+            # smaller pool and apply in the same tick, so the machines we
+            # hand back are never still part of the split in force.
+            target = int(np.ceil(plan.needed_total * self.headroom))
+            self.negotiator.ensure(target)
+            if self.k_max < k_max:
+                cur_obj = self._objective_of(planner, tops)
+                k_max = self.k_max
+                plan = planner.plan(tops, k_max=k_max)
+                self._apply(plan)
+                return self._emit(FleetDecision(
+                    now, "scale_in", k_max, plan, self.allocations(), tuple(hot),
+                    cur_obj,
+                    reason=f"floors need {plan.needed_total} (headroom {target}) "
+                    f"<< leased; released to k_max={k_max}",
+                ))
+
+        cur_obj = self._objective_of(planner, tops)
+        if overloaded:
+            self._apply(plan)
+            return self._emit(FleetDecision(
+                now, "overloaded", k_max, plan, self.allocations(), tuple(hot),
+                cur_obj,
+                reason=f"overloaded tenants {hot}; floors need "
+                f"{plan.needed_total} of {k_max}",
+            ))
+        improvement = (
+            (cur_obj - plan.objective) / cur_obj
+            if np.isfinite(cur_obj) and cur_obj > 0
+            else float("inf")
+        )
+        unchanged = all(
+            np.array_equal(self._k.get(n), plan.k[n]) for n in self.sessions
+        )
+        if unchanged or improvement < self.min_improvement:
+            return self._emit(FleetDecision(
+                now, "none", k_max, plan, self.allocations(), tuple(hot), cur_obj,
+                reason=f"improvement {improvement:.1%} < {self.min_improvement:.0%}",
+            ))
+        self._apply(plan)
+        return self._emit(FleetDecision(
+            now, "rebalance", k_max, plan, self.allocations(), tuple(hot), cur_obj,
+            reason=f"fleet objective {cur_obj:.4g} -> {plan.objective:.4g}",
+        ))
+
+    def _emit(self, d: FleetDecision) -> FleetDecision:
+        self.history.append(d)
+        if self.on_decision:
+            self.on_decision(d)
+        return d

@@ -26,9 +26,21 @@ from .allocator import (
     allocate,
     assign_processors,
     assign_processors_naive,
+    assign_processors_table,
     brute_force_optimal,
+    greedy_increments,
     min_processors,
+    min_processors_table,
 )
+from .batched import (
+    OperatorArrays,
+    expected_sojourn_batch,
+    gain_table,
+    operator_arrays,
+    sojourn_table,
+    solve_traffic_batch,
+)
+from .planner import FleetPlan, FleetPlanner, Tenant
 from .measurer import (
     EwmaSmoother,
     InstanceProbe,
@@ -51,8 +63,12 @@ __all__ = [
     "marginal_benefit", "min_stable_k", "sojourn_curve",
     "OperatorSpec", "Topology", "UnstableTopologyError", "solve_traffic_equations",
     "AllocationResult", "InsufficientResourcesError", "allocate",
-    "assign_processors", "assign_processors_naive", "brute_force_optimal",
-    "min_processors",
+    "assign_processors", "assign_processors_naive", "assign_processors_table",
+    "brute_force_optimal", "greedy_increments",
+    "min_processors", "min_processors_table",
+    "OperatorArrays", "operator_arrays", "sojourn_table", "gain_table",
+    "expected_sojourn_batch", "solve_traffic_batch",
+    "FleetPlan", "FleetPlanner", "Tenant",
     "EwmaSmoother", "InstanceProbe", "Measurer", "MeasurementSnapshot",
     "WindowSmoother",
     "LeaseChange", "Machine", "Negotiator", "ResourcePool",

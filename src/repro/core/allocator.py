@@ -1,22 +1,32 @@
 """DRS resource allocation — paper Algorithm 1 and Programs (4) and (6).
 
-Two solvers are provided for Program (4) (min E[T] s.t. sum k_i <= K_max):
+Three solvers are provided for Program (4) (min E[T] s.t. sum k_i <= K_max):
 
 * :func:`assign_processors_naive` — the paper's Algorithm 1 verbatim:
   each round recomputes every operator's marginal benefit and increments the
-  argmax.  O(K_max * N) sojourn evaluations.  Kept as the reference.
+  argmax.  O(K_max * N) sojourn evaluations.  Kept as the reference oracle.
 * :func:`assign_processors` — heap-based: because the marginal benefit
   ``delta_i(k) = lam_i (E[T_i](k) - E[T_i](k+1))`` is non-increasing in k
   (convexity, paper Ineq. 5), a max-heap of each operator's *next* gain
-  yields the identical allocation in O((K_max - sum k_min) log N).
-  This is a beyond-paper efficiency win needed at K_max ~ thousands of chips
-  (see benchmarks/bench_overhead.py, the Table-II reproduction).
+  yields the identical allocation in O((K_max - sum k_min) log N) *scalar*
+  sojourn evaluations (each an O(k) Erlang recursion).
+* :func:`assign_processors_table` — the batched-core rewrite (DESIGN.md
+  §12): ONE vectorized Erlang pass materialises the full ``[N, K]``
+  marginal-gain table (core/batched.py), then the greedy collapses to a
+  top-R selection over it.  The numpy float64 table replays the scalar
+  recursion bit-for-bit, and the selection breaks ties exactly like the
+  argmax loop (lowest operator index first, increasing k within an
+  operator), so the allocation is **bit-identical** to
+  ``assign_processors_naive`` — at ~1000x less Python-interpreter work
+  (benchmarks/bench_overhead.py, the Table-II reproduction).
 
 Program (6) (min sum k_i s.t. E[T] <= T_max) is solved by the same greedy
-run until the constraint is met (:func:`min_processors`), as in the paper.
+run until the constraint is met — scalar (:func:`min_processors`) or
+table-driven with a binary search over the increment count
+(:func:`min_processors_table`).
 
 Theorem 1 (optimality of the greedy for Program 4) is exercised in
-tests/test_allocator.py against brute-force enumeration.
+tests/test_core_allocator.py against brute-force enumeration.
 """
 
 from __future__ import annotations
@@ -27,6 +37,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from .batched import gain_table
 from .jackson import Topology
 
 __all__ = [
@@ -34,7 +45,10 @@ __all__ = [
     "AllocationResult",
     "assign_processors",
     "assign_processors_naive",
+    "assign_processors_table",
     "min_processors",
+    "min_processors_table",
+    "greedy_increments",
     "allocate",
 ]
 
@@ -126,6 +140,145 @@ def assign_processors(top: Topology, k_max: int) -> AllocationResult:
     return AllocationResult(k, top.expected_sojourn(k), total, evals)
 
 
+# --------------------------------------------------------------------------- #
+# Gain-table greedy (batched core)
+# --------------------------------------------------------------------------- #
+def _heap_greedy_counts(cand: np.ndarray, budget: int) -> np.ndarray:
+    """Exact argmax-greedy walk over a candidate-gain matrix (used when the
+    float gain rows are not non-increasing, so prefix selection is unsafe).
+    ``cand[i, j]`` is operator i's gain for its j-th extra processor."""
+    n, width = cand.shape
+    take = np.zeros(n, dtype=np.int64)
+    heap = [(-float(cand[i, 0]), i) for i in range(n) if width > 0]
+    heapq.heapify(heap)
+    while budget > 0 and heap:
+        neg_d, i = heapq.heappop(heap)
+        if -neg_d <= 0.0:
+            break
+        take[i] += 1
+        budget -= 1
+        if take[i] < width:
+            heapq.heappush(heap, (-float(cand[i, take[i]]), i))
+    return take
+
+
+def greedy_increments(G: np.ndarray, k_start: np.ndarray, budget: int) -> np.ndarray:
+    """How many of ``budget`` processors each operator receives when they are
+    handed out one-at-a-time to the largest current gain, reading gains from
+    the precomputed table ``G[i, k]`` starting at ``k_start[i]``.
+
+    Decision-for-decision identical to Algorithm 1's argmax loop, including
+    its tie-breaking (``np.argmax`` returns the *first* maximum, so the
+    lowest operator index wins a tie and keeps winning until its gain drops
+    below the tie value): because each row of ``G`` is non-increasing
+    (convexity, paper Ineq. 5), the greedy takes exactly the globally
+    largest ``budget`` positive entries, with threshold ties resolved in
+    (operator index, k) order.  If float rounding ever breaks a row's
+    monotonicity the function falls back to an exact heap walk over the
+    same table.
+    """
+    n = G.shape[0]
+    if budget <= 0:
+        return np.zeros(n, dtype=np.int64)
+    idx = k_start[:, None] + np.arange(budget)[None, :]
+    if idx.max() >= G.shape[1]:
+        raise ValueError(
+            f"gain table too narrow: need column {int(idx.max())}, have {G.shape[1]}"
+        )
+    cand = G[np.arange(n)[:, None], idx]  # [n, budget]
+    if np.any(cand[:, 1:] > cand[:, :-1]):
+        return _heap_greedy_counts(cand, budget)
+    pos = cand > 0.0
+    pos_counts = pos.sum(axis=1).astype(np.int64)
+    if int(pos_counts.sum()) <= budget:
+        return pos_counts  # every beneficial processor fits in the budget
+    vals = cand[pos]
+    thresh = np.partition(vals, len(vals) - budget)[len(vals) - budget]
+    take = (cand > thresh).sum(axis=1).astype(np.int64)
+    rem = budget - int(take.sum())
+    if rem > 0:
+        ties = ((cand == thresh) & pos).sum(axis=1)
+        for i in range(n):
+            if rem == 0:
+                break
+            t = min(int(ties[i]), rem)
+            take[i] += t
+            rem -= t
+    return take
+
+
+def assign_processors_table(top: Topology, k_max: int) -> AllocationResult:
+    """Program (4) via the precomputed ``[N, K]`` marginal-gain table.
+
+    Output is bit-identical to :func:`assign_processors_naive` (same float
+    values, same tie-breaking — see :func:`greedy_increments`), at the cost
+    of one vectorized Erlang pass instead of O(K*N) scalar recursions.
+    ``evaluations`` counts materialised table entries.
+    """
+    k = top.min_feasible_allocation()
+    total = int(k.sum())
+    if total > k_max:
+        raise InsufficientResourcesError(total, k_max, k)
+    budget = k_max - total
+    if budget == 0:
+        return AllocationResult(k, top.expected_sojourn(k), total, 0)
+    k_hi = int(k.max()) + budget
+    T, G = gain_table(top, k_hi)
+    k = k + greedy_increments(G, k.astype(np.int64), budget)
+    return AllocationResult(k, top.expected_sojourn(k), int(k.sum()), T.size)
+
+
+def min_processors_table(
+    top: Topology, t_max: float, *, k_cap: int = 1 << 20
+) -> AllocationResult:
+    """Program (6) on the gain table: binary-search the increment count.
+
+    Greedy allocations are nested (the m-increment allocation is a prefix of
+    the (m+1)-increment one), and E[T] is non-increasing along that chain,
+    so the smallest m with ``E[T](k(m)) <= T_max`` is found by bisection —
+    each probe is a table selection plus one exact scalar ``E[T]``
+    recompute (the same model value the caller sees, as in
+    :func:`min_processors`).  The table widens geometrically until the
+    constraint is reachable or ``k_cap`` is hit.
+    """
+    lam = top.arrival_rates
+    floor = sum(
+        lam[i] / top.lam0_total / op.mu for i, op in enumerate(top.operators) if lam[i] > 0
+    )
+    if t_max < floor:
+        raise InsufficientResourcesError(k_cap, k_cap, top.min_feasible_allocation())
+    k0 = top.min_feasible_allocation()
+    total0 = int(k0.sum())
+    et0 = top.expected_sojourn(k0)
+    if et0 <= t_max:
+        return AllocationResult(k0, et0, total0, 0)
+    evals = 0
+    budget = 256
+    while True:
+        budget = min(budget, max(k_cap - total0, 0))
+        k_hi = int(k0.max()) + budget
+        T, G = gain_table(top, k_hi)
+        evals += T.size
+        take_full = greedy_increments(G, k0.astype(np.int64), budget)
+        k_full = k0 + take_full
+        et_full = top.expected_sojourn(k_full)
+        if et_full <= t_max:
+            lo, hi = 1, int(take_full.sum())  # hi is feasible; find minimal m
+            while lo < hi:
+                mid = (lo + hi) // 2
+                k_mid = k0 + greedy_increments(G, k0.astype(np.int64), mid)
+                if top.expected_sojourn(k_mid) <= t_max:
+                    hi = mid
+                else:
+                    lo = mid + 1
+            k = k0 + greedy_increments(G, k0.astype(np.int64), lo)
+            return AllocationResult(k, top.expected_sojourn(k), int(k.sum()), evals)
+        exhausted = int(take_full.sum()) < budget  # no positive gains left
+        if exhausted or budget >= k_cap - total0:
+            raise InsufficientResourcesError(int(k_full.sum()), k_cap, k_full)
+        budget *= 4
+
+
 def min_processors(
     top: Topology, t_max: float, *, k_cap: int = 1 << 20
 ) -> AllocationResult:
@@ -205,19 +358,21 @@ def allocate(
     k_max, fall back to Program (4) at k_max (best effort under the lease) —
     this is the scheduler's "not enough machines yet, do the best we can
     while the negotiator acquires more" path.
+
+    Solves on the batched gain-table path (DESIGN.md §12).
     """
     if k_max is None and t_max is None:
         raise ValueError("need k_max and/or t_max")
     if t_max is not None:
         try:
-            res = min_processors(top, t_max)
+            res = min_processors_table(top, t_max)
             if k_max is None or res.total <= k_max:
                 return res
         except InsufficientResourcesError:
             if k_max is None:
                 raise
     assert k_max is not None
-    return assign_processors(top, k_max)
+    return assign_processors_table(top, k_max)
 
 
 def brute_force_optimal(top: Topology, k_max: int) -> tuple[np.ndarray, float]:

@@ -189,7 +189,10 @@ class Topology:
             if math.isinf(t):
                 return math.inf
             total += lam[i] * t
-        return total / self.lam0_total
+        # Same zero-traffic guard as visit_counts: an idle network (all
+        # lam0 == 0, e.g. one quiet measurement window) has E[T] = 0, not
+        # a division crash in the middle of a control loop.
+        return total / max(self.lam0_total, 1e-300)
 
     def per_operator_sojourn(self, k: list[int] | np.ndarray) -> np.ndarray:
         lam = self.arrival_rates

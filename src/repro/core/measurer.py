@@ -259,6 +259,11 @@ class Measurer:
         self._sojourn_sum = 0.0
         self._sojourn_n = 0
         self._last_pull_t: float | None = None
+        # Per-instance raw service rates from the latest pull (probe order =
+        # instance index; NaN for instances with no samples in the window).
+        # The scheduler's StragglerDetector consumes this — operator-level
+        # aggregation hides *which* instance is slow.
+        self.last_instance_mu: dict[str, list[float]] = {}
 
     # Registration / reporting ------------------------------------------ #
     def new_probe(self, operator: str) -> InstanceProbe:
@@ -284,8 +289,10 @@ class Measurer:
         lam = np.full(len(self.names), np.nan)
         mu = np.full(len(self.names), np.nan)
         drop = np.zeros(len(self.names))
+        inst_mu: dict[str, list[float]] = {}
         for idx, name in enumerate(self.names):
             arrivals, _processed, st_sum, st_n, dropped = 0, 0, 0.0, 0, 0
+            rates: list[float] = []
             for p in self._probes[name]:
                 a, pr, s, c, dr = p.drain()
                 arrivals += a
@@ -293,11 +300,14 @@ class Measurer:
                 st_sum += s
                 st_n += c
                 dropped += dr
+                rates.append(c / s if (c > 0 and s > 0) else float("nan"))
+            inst_mu[name] = rates
             m = self._metrics[name]
             m.ingest(arrivals, st_sum, st_n, dt, dropped)
             lam[idx] = m.lam_hat
             mu[idx] = m.mu_hat
             drop[idx] = m.drop_hat
+        self.last_instance_mu = inst_mu
         with self._lock:
             ext, self._external_arrivals = self._external_arrivals, 0
             s_sum, self._sojourn_sum = self._sojourn_sum, 0.0

@@ -46,7 +46,9 @@ from .allocator import (
     AllocationResult,
     InsufficientResourcesError,
     assign_processors,
+    assign_processors_table,
     min_processors,
+    min_processors_table,
 )
 from .jackson import OperatorSpec, Topology, UnstableTopologyError
 from .measurer import Measurer, MeasurementSnapshot
@@ -67,6 +69,18 @@ class SchedulerConfig:
     min_improvement: float = 0.05  # rebalance only if E[T] improves by >= 5%
     headroom: float = 1.1  # provision Program-6 result * headroom (model error guard)
     tick_interval: float = 10.0  # T_m: pull + decide period
+    # Model-evaluation backend for Programs (4)/(6): "table" delegates to the
+    # batched gain-table core (core/batched.py, DESIGN.md §12 — bit-identical
+    # allocations, ~1000x less per-tick Python work at pod-scale K_max);
+    # "heap" keeps the scalar heap greedy (PR-1 behaviour, used as a
+    # cross-check in tests and benchmarks).
+    allocator: str = "table"
+
+
+_ALLOCATORS = {
+    "table": (assign_processors_table, min_processors_table),
+    "heap": (assign_processors, min_processors),
+}
 
 
 @dataclass(frozen=True)
@@ -77,6 +91,9 @@ class SchedulerDecision:
     # "none" | "rebalance" | "scale_out" | "scale_in" | "infeasible"
     # | "overloaded" (measured rho >= 1 somewhere: offered-load model,
     #   immediate negotiator scale-out, no hysteresis / cost-benefit gate)
+    # | "rebalance_hint" (no model-driven change, but the StragglerDetector
+    #   flagged slow instances — advisory: the CSP layer should consider
+    #   replacing/rebalancing the named (operator, instance) pairs)
     action: str
     k_current: np.ndarray
     k_target: np.ndarray | None
@@ -86,6 +103,8 @@ class SchedulerDecision:
     measured_sojourn: float
     plan: RebalancePlan | None = None
     reason: str = ""
+    # (operator, instance) pairs the straggler watchdog flagged this tick.
+    stragglers: tuple = ()
 
     def as_dict(self) -> dict:
         return {
@@ -98,6 +117,7 @@ class SchedulerDecision:
             "model_sojourn_target": self.model_sojourn_target,
             "measured_sojourn": self.measured_sojourn,
             "reason": self.reason,
+            "stragglers": list(self.stragglers),
         }
 
 
@@ -118,6 +138,7 @@ class DRSScheduler:
         scaling: list[str] | None = None,
         group_alpha: list[float] | None = None,
         on_decision: Callable[[SchedulerDecision], None] | None = None,
+        straggler_detector: "StragglerDetector | None" = None,
     ):
         self.names = list(operator_names)
         self.base_routing = np.asarray(base_routing, dtype=np.float64)
@@ -130,6 +151,16 @@ class DRSScheduler:
         self.scaling = scaling or ["replica"] * len(self.names)
         self.group_alpha = group_alpha or [0.0] * len(self.names)
         self.on_decision = on_decision
+        self.straggler_detector = (
+            StragglerDetector() if straggler_detector is None else straggler_detector
+        )
+        try:
+            self._assign, self._min_proc = _ALLOCATORS[config.allocator]
+        except KeyError:
+            raise ValueError(
+                f"unknown allocator {config.allocator!r}; "
+                f"expected one of {sorted(_ALLOCATORS)}"
+            ) from None
         self.history: list[SchedulerDecision] = []
         self.rebalance_count = 0
 
@@ -252,6 +283,7 @@ class DRSScheduler:
     def tick(self, now: float | None = None) -> SchedulerDecision:
         now = time.time() if now is None else now
         snap = self.measurer.pull(now)
+        self._observe_instances()
         if not snap.complete():
             d = SchedulerDecision(
                 now, "none", self.k_current.copy(), None,
@@ -271,6 +303,24 @@ class DRSScheduler:
             return self.negotiator.k_max
         return int(self.k_current.sum())
 
+    # --- Straggler watchdog -------------------------------------------- #
+    def _observe_instances(self) -> None:
+        """Feed the per-instance service rates the measurer's last pull
+        recorded into the straggler watchdog (instance identity = probe
+        index within the operator)."""
+        if self.straggler_detector is None:
+            return
+        for op, rates in (getattr(self.measurer, "last_instance_mu", None) or {}).items():
+            for idx, mu in enumerate(rates):
+                if math.isfinite(mu):
+                    self.straggler_detector.observe(op, idx, mu)
+
+    def straggler_hints(self) -> tuple:
+        """(operator, instance) pairs currently flagged by the watchdog."""
+        if self.straggler_detector is None:
+            return ()
+        return tuple(self.straggler_detector.stragglers())
+
     def decide(
         self,
         top: Topology,
@@ -281,6 +331,7 @@ class DRSScheduler:
         cfg = self.config
         k_max = self._k_max()
         et_cur = top.expected_sojourn(self.k_current)
+        stragglers = self.straggler_hints()
 
         # --- Overload: defined unstable-snapshot path ------------------- #
         # tick() passes the mask it already clamped the topology with, so
@@ -295,7 +346,7 @@ class DRSScheduler:
         need: AllocationResult | None = None
         if cfg.t_max is not None:
             try:
-                need = min_processors(top, cfg.t_max)
+                need = self._min_proc(top, cfg.t_max)
             except InsufficientResourcesError:
                 need = None
 
@@ -309,7 +360,7 @@ class DRSScheduler:
                 new_k_max = self.negotiator.k_max
                 if new_k_max > k_max:
                     k_max = new_k_max
-                    best = assign_processors(top, k_max)
+                    best = self._assign(top, k_max)
                     return self._apply(
                         now, "scale_out", best, top, et_cur, snap,
                         reason=f"Program(6) needs {needed_total} > leased; "
@@ -325,7 +376,7 @@ class DRSScheduler:
                 self.negotiator.ensure(target_total)
                 new_k_max = self.negotiator.k_max
                 if new_k_max < k_max:
-                    best = assign_processors(top, new_k_max)
+                    best = self._assign(top, new_k_max)
                     return self._apply(
                         now, "scale_in", best, top, et_cur, snap,
                         reason=f"Program(6) needs {need.total} (headroom "
@@ -334,7 +385,7 @@ class DRSScheduler:
 
         # --- Program (4): best placement within k_max ------------------- #
         try:
-            best = assign_processors(top, k_max)
+            best = self._assign(top, k_max)
         except InsufficientResourcesError as e:
             d = SchedulerDecision(
                 now, "infeasible", self.k_current.copy(), None, k_max,
@@ -349,9 +400,8 @@ class DRSScheduler:
             else float("inf")
         )
         if np.array_equal(best.k, self.k_current) or improvement < cfg.min_improvement:
-            d = SchedulerDecision(
-                now, "none", self.k_current.copy(), best.k, k_max,
-                et_cur, best.expected_sojourn, snap.sojourn_hat,
+            d = self._none_or_hint(
+                now, best, k_max, et_cur, snap, stragglers,
                 reason=f"improvement {improvement:.1%} < {cfg.min_improvement:.0%}",
             )
             self._emit(d)
@@ -361,14 +411,40 @@ class DRSScheduler:
             top, self.k_current, best.k, cache=self.cache, stage_names=self.names
         )
         if not plan.worthwhile(cfg.horizon_seconds, top.lam0_total) and math.isfinite(et_cur):
-            d = SchedulerDecision(
-                now, "none", self.k_current.copy(), best.k, k_max,
-                et_cur, best.expected_sojourn, snap.sojourn_hat, plan,
+            d = self._none_or_hint(
+                now, best, k_max, et_cur, snap, stragglers, plan=plan,
                 reason="rebalance cost exceeds benefit over horizon",
             )
             self._emit(d)
             return d
         return self._apply(now, "rebalance", best, top, et_cur, snap, plan=plan)
+
+    def _none_or_hint(
+        self,
+        now: float,
+        best: AllocationResult,
+        k_max: int,
+        et_cur: float,
+        snap: MeasurementSnapshot,
+        stragglers: tuple,
+        *,
+        plan: RebalancePlan | None = None,
+        reason: str = "",
+    ) -> SchedulerDecision:
+        """A model-driven no-op — unless the straggler watchdog flagged slow
+        instances, in which case the decision becomes an advisory
+        ``"rebalance_hint"`` naming them (the model can't see *which*
+        instance is slow, only the dragged-down operator mu_hat)."""
+        action = "none"
+        if stragglers:
+            action = "rebalance_hint"
+            named = ", ".join(f"{op}[{inst}]" for op, inst in stragglers)
+            reason = (reason + "; " if reason else "") + f"stragglers flagged: {named}"
+        return SchedulerDecision(
+            now, action, self.k_current.copy(), best.k, k_max,
+            et_cur, best.expected_sojourn, snap.sojourn_hat, plan,
+            reason, stragglers,
+        )
 
     def _handle_overload(
         self,
@@ -391,7 +467,7 @@ class DRSScheduler:
         hot_names = [self.names[i] for i in np.nonzero(overloaded)[0]]
         try:
             if cfg.t_max is not None:
-                need_total = math.ceil(min_processors(top, cfg.t_max).total * cfg.headroom)
+                need_total = math.ceil(self._min_proc(top, cfg.t_max).total * cfg.headroom)
             else:
                 need_total = math.ceil(
                     int(top.min_feasible_allocation().sum()) * cfg.headroom
@@ -404,7 +480,7 @@ class DRSScheduler:
             self.negotiator.ensure(need_total)
             k_max = max(k_max, self.negotiator.k_max)
         try:
-            best = assign_processors(top, k_max)
+            best = self._assign(top, k_max)
         except (InsufficientResourcesError, UnstableTopologyError) as e:
             d = SchedulerDecision(
                 now, "overloaded", self.k_current.copy(), None, k_max,
@@ -458,7 +534,12 @@ class StragglerDetector:
         self._hist: dict[tuple[str, int], list[float]] = {}
 
     def observe(self, operator: str, instance: int, mu_hat: float) -> None:
-        self._hist.setdefault((operator, instance), []).append(mu_hat)
+        hist = self._hist.setdefault((operator, instance), [])
+        hist.append(mu_hat)
+        # Only the last `window` samples are ever read; trim so a control
+        # loop ticking for months doesn't grow the history unboundedly.
+        if len(hist) > self.window:
+            del hist[: -self.window]
 
     def stragglers(self) -> list[tuple[str, int]]:
         by_op: dict[str, list[tuple[int, float]]] = {}

@@ -1,0 +1,18 @@
+"""Erlang-B/C recurrence kernel — the analytic core's hot loop.
+
+The batched scheduler (core/batched.py) evaluates Erlang-C sojourn times
+for every operator at every processor count up to K_max.  The only
+sequential part is the Erlang-B recursion
+
+    B(0) = 1;  B(j) = a * B(j-1) / (j + a * B(j-1)),   j = 1..K,
+
+which is embarrassingly parallel across operators / offered loads ``a``
+(lanes) and sequential only in ``j`` (the fori_loop).  ``ops.erlang_b_table``
+dispatches: Pallas kernel on TPU, pure-jnp scan oracle elsewhere; the
+float64 *numpy* path that the allocator's bit-exactness guarantee rests on
+lives in ``core/batched.py`` (see DESIGN.md §12 for the fallback rules).
+"""
+
+from .ops import erlang_b_table
+
+__all__ = ["erlang_b_table"]

@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: the Erlang-B recurrence table over a lane of loads.
+
+One grid step; the offered loads sit in a (1, S) VMEM row (S padded to the
+128-lane width) and the fori_loop walks j = 1..k_hi writing one (1, S) row
+of the table per step:
+
+    B(j) = a * B(j-1) / (j + a * B(j-1)).
+
+The recursion is inherently sequential in j, so the kernel's only
+parallelism is across lanes — which is exactly the batch axis the
+scheduler needs (operators x tenants).  VMEM footprint is the whole
+(k_hi+1, S) table: k_hi = 4096 at S = 128 lanes is 4097*128*4 B ~ 2 MiB,
+comfortably under the ~16 MiB budget; callers tile S beyond one lane row.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["erlang_b_table_pallas"]
+
+
+def _erlang_b_kernel(a_ref, out_ref, *, k_hi: int):
+    a = a_ref[...]  # (1, S)
+    ones = jnp.ones_like(a)
+    out_ref[pl.ds(0, 1), :] = ones
+
+    def body(j, b):
+        b = a * b / (j.astype(a.dtype) + a * b)
+        out_ref[pl.ds(j, 1), :] = b
+        return b
+
+    jax.lax.fori_loop(1, k_hi + 1, body, ones)
+
+
+@functools.partial(jax.jit, static_argnames=("k_hi", "interpret"))
+def erlang_b_table_pallas(
+    a: jnp.ndarray, *, k_hi: int, interpret: bool = False
+) -> jnp.ndarray:
+    """[S] offered loads -> [k_hi+1, S] Erlang-B blocking table (float32).
+
+    Row j holds B(j, a) for every lane; row 0 is all-ones.  Lanes are
+    padded to 128 and the pad is sliced off before returning.
+    """
+    if a.ndim != 1:
+        raise ValueError(f"a must be 1-D, got shape {a.shape}")
+    s = a.shape[0]
+    lane_pad = (-s) % 128
+    rows = k_hi + 1
+    row_pad = (-rows) % 8  # float32 sublane tile
+    a2 = jnp.pad(a.astype(jnp.float32), (0, lane_pad)).reshape(1, s + lane_pad)
+    out = pl.pallas_call(
+        functools.partial(_erlang_b_kernel, k_hi=k_hi),
+        out_shape=jax.ShapeDtypeStruct((rows + row_pad, s + lane_pad), jnp.float32),
+        interpret=interpret,
+    )(a2)
+    return out[:rows, :s]

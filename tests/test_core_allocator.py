@@ -151,3 +151,127 @@ def test_evaluation_count_heap_beats_naive():
     heap = assign_processors(top, 120)
     np.testing.assert_array_equal(naive.k, heap.k)
     assert heap.evaluations < naive.evaluations / 3
+
+
+# --------------------------------------------------------------------- #
+# Gain-table allocator parity (DESIGN.md §12): heap-greedy, table-greedy,
+# and the naive Algorithm-1 oracle must agree — bit-identically — for both
+# scaling modes, through K_max = 512.
+# --------------------------------------------------------------------- #
+from repro.core.allocator import (  # noqa: E402
+    assign_processors_table,
+    greedy_increments,
+    min_processors_table,
+)
+from repro.core.batched import gain_table  # noqa: E402
+
+
+def group_like(lam0=8.0):
+    """Chip-gang stage feeding a replica stage feeding a light reporter."""
+    ops = [
+        OperatorSpec("gang", 3.0, scaling="group", group_alpha=0.05),
+        OperatorSpec("rep", 6.0),
+        OperatorSpec("report", 30.0),
+    ]
+    routing = np.zeros((3, 3))
+    routing[0][1] = 1.0
+    routing[1][2] = 0.7
+    return Topology(ops, np.array([lam0, 0.0, 0.0]), routing)
+
+
+@pytest.mark.parametrize(
+    "top_fn", [vld_like, group_like], ids=["replica", "group"]
+)
+@pytest.mark.parametrize("k_max", [16, 33, 64, 128, 512])
+def test_three_way_allocator_parity(top_fn, k_max):
+    top = top_fn()
+    k_min = int(top.min_feasible_allocation().sum())
+    if k_max < k_min:
+        pytest.skip("budget below stability floor")
+    naive = assign_processors_naive(top, k_max)
+    heap = assign_processors(top, k_max)
+    table = assign_processors_table(top, k_max)
+    np.testing.assert_array_equal(table.k, naive.k)  # bit-identical decisions
+    np.testing.assert_array_equal(heap.k, naive.k)
+    assert table.expected_sojourn == naive.expected_sojourn
+    assert table.total == naive.total
+
+
+@pytest.mark.parametrize("k_max", range(11, 41))
+def test_table_parity_dense_budget_sweep(k_max):
+    """Every budget in a dense range — catches tie-break drift that a
+    sparse sweep can miss."""
+    top = vld_like()
+    np.testing.assert_array_equal(
+        assign_processors_table(top, k_max).k, assign_processors_naive(top, k_max).k
+    )
+
+
+def test_table_parity_scaled_load_k512():
+    """Load scaled with the budget (the bench_overhead regime)."""
+    top = vld_like(lam0=13.0 * 512 / 22.0)
+    naive = assign_processors_naive(top, 512)
+    table = assign_processors_table(top, 512)
+    heap = assign_processors(top, 512)
+    np.testing.assert_array_equal(table.k, naive.k)
+    np.testing.assert_array_equal(heap.k, naive.k)
+
+
+def test_greedy_increments_tie_breaking_matches_argmax():
+    """Two identical operators: argmax gives the lower index the first of
+    every tied pair; counts may differ by at most one in its favour."""
+    top = Topology.chain([("a", 4.0), ("b", 4.0)], lam0=0.0)
+    # zero traffic -> all gains 0 -> nothing taken
+    _, G = gain_table(top, 8)
+    take = greedy_increments(G, np.array([1, 1]), 4)
+    assert take.tolist() == [0, 0]
+
+    top2 = Topology(
+        [OperatorSpec("a", 4.0), OperatorSpec("b", 4.0)],
+        np.array([3.0, 3.0]),
+        np.zeros((2, 2)),
+    )
+    for k_max in range(2, 12):
+        np.testing.assert_array_equal(
+            assign_processors_table(top2, k_max).k,
+            assign_processors_naive(top2, k_max).k,
+        )
+
+
+def test_greedy_increments_rejects_narrow_table():
+    top = vld_like()
+    _, G = gain_table(top, 10)
+    with pytest.raises(ValueError):
+        greedy_increments(G, np.array([7, 3, 1]), 8)  # needs column 14
+
+
+def test_min_processors_table_parity():
+    top = vld_like()
+    for t_max in (2.0, 1.2, 0.9, 0.75):
+        a = min_processors_table(top, t_max)
+        b = min_processors(top, t_max)
+        assert a.expected_sojourn <= t_max
+        assert a.total == b.total
+        np.testing.assert_array_equal(a.k, b.k)
+
+
+def test_min_processors_table_unreachable_raises():
+    top = vld_like()
+    with pytest.raises(InsufficientResourcesError):
+        min_processors_table(top, 0.5)  # below the 0.72 service floor
+    with pytest.raises(InsufficientResourcesError):
+        min_processors_table(top, 0.73, k_cap=12)  # cap below requirement
+
+
+def test_min_processors_table_group_scaling():
+    top = group_like()
+    res = min_processors_table(top, 0.9)
+    assert res.expected_sojourn <= 0.9
+    ref = min_processors(top, 0.9)
+    assert res.total == ref.total
+
+
+def test_table_evaluations_counted():
+    top = vld_like()
+    res = assign_processors_table(top, 30)
+    assert res.evaluations > 0  # table entries materialised

@@ -290,3 +290,62 @@ def test_scheduler_reacts_to_straggler_mu_drop():
     d = sched.decide(top, snap, 60.0)
     assert d.action == "rebalance"
     assert d.k_target[0] > 10  # more processors pushed to the degraded operator
+
+
+def test_straggler_wired_into_decide_emits_rebalance_hint():
+    """A flagged straggler instance turns a would-be 'none' tick into an
+    advisory 'rebalance_hint' naming the (operator, instance)."""
+    names = ["extract", "match", "agg"]
+    routing = chain_routing(3)
+    cfg = SchedulerConfig(k_max=22)  # default 5% improvement gate
+    sched = DRSScheduler(names, routing, np.array([10, 11, 1]), cfg)
+    m = sched.measurer
+    # Three extract instances — instance 2 is 2.5x slower, but contributes
+    # one sample so the *aggregate* mu barely moves (no model rebalance).
+    probes = {n: [m.new_probe(n) for _ in range(3 if n == "extract" else 1)]
+              for n in names}
+    mus = {"extract": 2.0, "match": 5.0, "agg": 50.0}
+    lam = {"extract": 13.0, "match": 13.0, "agg": 13.0}
+    m.pull(0.0)
+    for name, plist in probes.items():
+        for j, p in enumerate(plist):
+            p.on_enqueue(int(lam[name] * 60 / len(plist)))
+            slow = name == "extract" and j == 2
+            n_samples = 1 if slow else 20
+            st = 2.5 / mus[name] if slow else 1.0 / mus[name]
+            for _ in range(n_samples):
+                for _ in range(m.n_m - 1):
+                    p.on_processed(0.0)
+                p.on_processed(st)
+    m.on_external_arrival(int(13.0 * 60))
+    m.on_tuple_complete(0.9, n=int(13.0 * 60))
+    d = sched.tick(60.0)
+    assert d.stragglers == (("extract", 2),)
+    assert d.action == "rebalance_hint"
+    assert "extract[2]" in d.reason
+    # advisory only: the allocation is untouched
+    np.testing.assert_array_equal(d.k_current, [10, 11, 1])
+
+
+def test_no_straggler_no_hint():
+    names = ["extract", "match", "agg"]
+    routing = chain_routing(3)
+    cfg = SchedulerConfig(k_max=22)
+    sched = DRSScheduler(names, routing, np.array([10, 11, 1]), cfg)
+    snap = drive_measurements(sched.measurer, 13.0, [2.0, 5.0, 50.0], routing, 0.0, 60.0)
+    sched._observe_instances()
+    top = sched.topology_from(snap)
+    d = sched.decide(top, snap, 60.0)
+    assert d.action == "none"
+    assert d.stragglers == ()
+
+
+def test_straggler_detector_can_be_disabled():
+    names = ["a"]
+    cfg = SchedulerConfig(k_max=4)
+    sched = DRSScheduler(names, np.zeros((1, 1)), np.array([2]), cfg,
+                         straggler_detector=None)
+    # default detector is constructed when None is passed
+    assert sched.straggler_detector is not None
+    sched.straggler_detector = None
+    assert sched.straggler_hints() == ()

@@ -1,0 +1,320 @@
+"""FleetPlanner / FleetSession — cross-tenant scheduling (DESIGN.md §12)."""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import AppGraph, FleetSession, OpDef, SchedulerConfig
+from repro.core import (
+    FleetPlanner,
+    InsufficientResourcesError,
+    Machine,
+    Negotiator,
+    ResourcePool,
+    Tenant,
+    assign_processors_naive,
+)
+from repro.core.jackson import OperatorSpec, Topology
+
+
+def chain_graph(i: int, lam0: float, mus=(2.0, 6.0, 30.0)) -> AppGraph:
+    return AppGraph.chain(
+        [(f"a{i}", mus[0]), (f"b{i}", mus[1]), (f"c{i}", mus[2])], lam0=lam0
+    )
+
+
+def ten_tenant_fleet(t_max=1.5):
+    return [
+        Tenant(name=f"t{i}", graph=chain_graph(i, 4.0 + 1.5 * i), t_max=t_max)
+        for i in range(10)
+    ]
+
+
+# ------------------------------------------------------------------ #
+# FleetPlanner
+# ------------------------------------------------------------------ #
+def test_fleet_plan_ten_tenants_tmax_honored():
+    """>= 8 tenant graphs against one shared pool; every per-tenant T_max
+    constraint met and the pool bound respected."""
+    planner = FleetPlanner(ten_tenant_fleet(), k_max=220)
+    plan = planner.plan()
+    assert len(plan.per_tenant) == 10
+    assert plan.total <= 220
+    assert not plan.overloaded and plan.unmet == ()
+    for name, res in plan.per_tenant.items():
+        assert res.expected_sojourn <= 1.5, name
+
+
+def test_fleet_plan_spends_whole_pool_when_beneficial():
+    planner = FleetPlanner(ten_tenant_fleet(), k_max=220)
+    assert planner.plan().total == 220  # marginal gains still positive
+
+
+def test_fleet_throughput_objective_equals_blockdiag_program4():
+    """w_m = 1 makes the merged greedy literally Program (4) on the
+    block-diagonal union of the tenant networks."""
+    g1 = AppGraph.chain([("x1", 2.0), ("y1", 5.0)], lam0=6.0)
+    g2 = AppGraph.chain([("x2", 3.0), ("y2", 8.0)], lam0=9.0)
+    plan = FleetPlanner(
+        [Tenant("p", graph=g1), Tenant("q", graph=g2)], 30, objective="throughput"
+    ).plan()
+    ops = [
+        OperatorSpec("x1", 2.0), OperatorSpec("y1", 5.0),
+        OperatorSpec("x2", 3.0), OperatorSpec("y2", 8.0),
+    ]
+    routing = np.zeros((4, 4))
+    routing[0][1] = 1.0
+    routing[2][3] = 1.0
+    combo = Topology(ops, np.array([6.0, 0.0, 9.0, 0.0]), routing)
+    ref = assign_processors_naive(combo, 30)
+    np.testing.assert_array_equal(
+        np.concatenate([plan.k["p"], plan.k["q"]]), ref.k
+    )
+
+
+def test_fleet_fair_objective_weights_small_tenants():
+    """Fair weighting gives the low-traffic tenant a larger share than
+    throughput weighting does."""
+    g_small = AppGraph.chain([("s1", 2.0), ("s2", 6.0)], lam0=2.0)
+    g_big = AppGraph.chain([("b1", 2.0), ("b2", 6.0)], lam0=20.0)
+    tenants = [Tenant("small", graph=g_small), Tenant("big", graph=g_big)]
+    fair = FleetPlanner(tenants, 40, objective="fair").plan()
+    thr = FleetPlanner(tenants, 40, objective="throughput").plan()
+    assert fair.k["small"].sum() >= thr.k["small"].sum()
+
+
+def test_fleet_overloaded_when_floors_exceed_pool():
+    """PR-2 overload semantics: floors > pool -> flagged, pool still fully
+    distributed best-effort, violating tenants listed in unmet."""
+    tenants = [
+        Tenant(f"o{i}", graph=AppGraph.chain([(f"u{i}", 2.0)], lam0=10.0), t_max=0.51)
+        for i in range(4)
+    ]
+    plan = FleetPlanner(tenants, 26).plan()
+    assert plan.overloaded
+    assert plan.needed_total > 26
+    assert plan.total == 26  # best effort: whole pool handed out
+    assert set(plan.unmet) == {"o0", "o1", "o2", "o3"}
+
+
+def test_fleet_infeasible_minima_raise():
+    with pytest.raises(InsufficientResourcesError):
+        FleetPlanner(
+            [Tenant("z", graph=AppGraph.chain([("w", 2.0)], lam0=50.0))], 10
+        ).plan()
+
+
+def test_fleet_unreachable_tmax_listed_not_fatal():
+    """T_max below a tenant's service floor can't be bought with processors
+    — the tenant is reported, the rest of the fleet still schedules."""
+    tenants = [
+        Tenant("ok", graph=chain_graph(0, 8.0), t_max=2.0),
+        # floor = 1/2 + 1/6 + 1/30 = 0.7 > 0.1
+        Tenant("impossible", graph=chain_graph(1, 8.0), t_max=0.1),
+    ]
+    plan = FleetPlanner(tenants, 60).plan()
+    assert plan.unreachable == ("impossible",)
+    assert "ok" not in plan.unmet
+    assert plan.per_tenant["ok"].expected_sojourn <= 2.0
+
+
+def test_fleet_measured_topology_override():
+    """plan(topologies=...) replaces a tenant's declared priors (the
+    control loop passes measured rebuilds through this)."""
+    tenants = [
+        Tenant("m", graph=chain_graph(0, 5.0), t_max=2.0),
+        Tenant("other", graph=chain_graph(1, 5.0), t_max=2.0),
+    ]
+    planner = FleetPlanner(tenants, 40)
+    base = planner.plan()
+    doubled = chain_graph(0, 10.0).topology()
+    heavier = planner.plan({"m": doubled})
+    # the measured tenant's load doubled -> it wins pool share from the other
+    assert heavier.k["m"].sum() > base.k["m"].sum()
+    assert heavier.k["other"].sum() < base.k["other"].sum()
+
+
+def test_tenant_validation():
+    with pytest.raises(ValueError):
+        Tenant("bad")  # neither graph nor topology
+    with pytest.raises(ValueError):
+        Tenant("bad", graph=chain_graph(0, 1.0), weight=0.0)
+    with pytest.raises(ValueError):
+        FleetPlanner(
+            [Tenant("d", graph=chain_graph(0, 1.0))] * 2, 10
+        )  # duplicate names
+
+
+# ------------------------------------------------------------------ #
+# FleetSession (model-only + negotiator-driven)
+# ------------------------------------------------------------------ #
+def chain_graph_2(i, lam0, mus=(2.0, 6.0)):
+    return AppGraph.chain([(f"a{i}", mus[0]), (f"b{i}", mus[1])], lam0=lam0)
+
+
+def make_sessions(n=8, t_max=1.2):
+    return {
+        f"t{i}": chain_graph_2(i, 4.0 + i).bind(
+            "des", config=SchedulerConfig(t_max=t_max)
+        )
+        for i in range(n)
+    }
+
+
+def test_fleet_session_start_and_tick_model_only():
+    fleet = FleetSession(make_sessions(), k_max=90)
+    ks = fleet.start()
+    assert set(ks) == {f"t{i}" for i in range(8)}
+    assert sum(sum(v.values()) for v in ks.values()) <= 90
+    d = fleet.tick(now=0.0)
+    assert d.action in ("none", "rebalance")
+    plan = fleet.plan()
+    for name, res in plan.per_tenant.items():
+        assert res.expected_sojourn <= 1.2, name
+
+
+def test_fleet_session_negotiator_acquires_lease():
+    pool = ResourcePool([Machine(f"m{i}", 4) for i in range(40)])
+    neg = Negotiator(pool)
+    fleet = FleetSession(make_sessions(), negotiator=neg)
+    fleet.start()
+    assert fleet.k_max > 0  # start() leased the floors
+    d = fleet.tick(now=0.0)
+    assert d.action in ("none", "rebalance")
+    total = sum(sum(v.values()) for v in fleet.allocations().values())
+    assert total <= fleet.k_max
+
+
+def test_fleet_session_requires_budget():
+    from repro.api import GraphValidationError
+
+    with pytest.raises(GraphValidationError):
+        FleetSession(make_sessions(2))
+
+
+def test_fleet_session_engine_tenants_live():
+    """Two live engine tenants on one pool: start under the planned split,
+    drive traffic, tick the fleet, shut down cleanly."""
+
+    def fast(_x):
+        time.sleep(0.001)
+        return []
+
+    sessions = {}
+    for i in range(2):
+        g = AppGraph(
+            [OpDef(f"w{i}", mu=400.0, fn=fast)], [], {f"w{i}": 30.0}
+        )
+        sessions[f"live{i}"] = g.bind(
+            "engine", config=SchedulerConfig(t_max=1.0), queue_capacity=1000
+        )
+    fleet = FleetSession(sessions, k_max=8)
+    try:
+        ks = fleet.start()
+        assert all(sum(v.values()) >= 1 for v in ks.values())
+        t0 = time.perf_counter()
+        sent = 0
+        while time.perf_counter() - t0 < 0.8:
+            for name in sessions:
+                sessions[name].inject(sent)
+            sent += 1
+            time.sleep(0.01)
+        d = fleet.tick()
+        assert d.action in ("none", "rebalance", "overloaded")
+        total = sum(sum(v.values()) for v in fleet.allocations().values())
+        assert total <= fleet.k_max
+    finally:
+        fleet.stop()
+
+
+def test_fleet_session_overload_fast_path():
+    """A tenant measuring rho >= 1 makes the fleet tick 'overloaded' and
+    leases immediately (no improvement gate, PR-2 semantics)."""
+    g = AppGraph.chain([("hot", 2.0)], lam0=4.0)
+    session = g.bind("des", config=SchedulerConfig(t_max=2.0))
+    pool = ResourcePool([Machine(f"m{i}", 2) for i in range(20)])
+    neg = Negotiator(pool)
+    fleet = FleetSession({"hot": session}, negotiator=neg)
+    fleet.start()
+    k_before = fleet.k_max
+    # Hand-feed an overloaded snapshot: offered 10/s >> capacity.
+    sched = session.scheduler
+    m = sched.measurer
+    probe = m.new_probe("hot")
+    m.pull(0.0)
+    probe.on_enqueue(600)  # 10/s over 60s at the queue tail
+    for _ in range(30):
+        for _ in range(m.n_m - 1):
+            probe.on_processed(0.0)
+        probe.on_processed(0.5)  # mu = 2
+    m.on_external_arrival(120)  # admitted only
+    m.on_tuple_complete(3.0, 120)
+    d = fleet.tick(now=60.0)
+    assert d.action == "overloaded"
+    assert "hot" in d.overloaded_tenants
+    assert fleet.k_max >= k_before
+    # the offered-load model needs ceil(10/2)+ = 6 processors for stability
+    assert sum(fleet.allocations()["hot"].values()) >= 6
+
+
+def test_fleet_idle_tenant_measured_zero_traffic_does_not_crash():
+    """A quiet measurement window (lam0 == 0) must not kill the fleet
+    plan with a division error under the fair objective."""
+    tenants = [
+        Tenant("busy", graph=chain_graph(0, 8.0)),
+        Tenant("idle", graph=chain_graph(1, 5.0)),
+    ]
+    planner = FleetPlanner(tenants, 40)
+    quiet = Topology(
+        [OperatorSpec("a1", 2.0), OperatorSpec("b1", 6.0), OperatorSpec("c1", 30.0)],
+        np.zeros(3),
+        chain_graph(1, 5.0).routing_matrix(),
+    )
+    plan = planner.plan({"idle": quiet})
+    assert np.isfinite(plan.objective)
+    assert plan.k["busy"].sum() + plan.k["idle"].sum() <= 40
+
+
+def test_fleet_session_no_scale_in_without_tmax():
+    """Tenants without latency targets must never have their lease
+    released down to the stability floor (the 'need' isn't a target)."""
+    pool = ResourcePool([Machine(f"m{i}", 4) for i in range(30)])
+    neg = Negotiator(pool)
+    neg.ensure(100)
+    sessions = {
+        f"t{i}": chain_graph_2(i, 4.0 + i).bind("des", config=SchedulerConfig())
+        for i in range(3)
+    }
+    fleet = FleetSession(sessions, negotiator=neg)
+    fleet.start()
+    k_leased = fleet.k_max
+    d = fleet.tick(now=0.0)
+    assert d.action != "scale_in"
+    assert fleet.k_max == k_leased  # lease untouched
+    total = sum(sum(v.values()) for v in fleet.allocations().values())
+    assert total <= fleet.k_max
+
+
+def test_fleet_session_scale_in_applies_shrunk_allocation():
+    """All tenants declare T_max and the lease is fat: the tick must
+    release AND re-apply in one step, leaving total <= new k_max."""
+    pool = ResourcePool([Machine(f"m{i}", 4) for i in range(40)])
+    neg = Negotiator(pool)
+    neg.ensure(140)
+    sessions = {
+        f"t{i}": chain_graph_2(i, 4.0 + i).bind(
+            "des", config=SchedulerConfig(t_max=1.2)
+        )
+        for i in range(3)
+    }
+    fleet = FleetSession(sessions, negotiator=neg)
+    fleet.start()
+    assert fleet.k_max == 140
+    d = fleet.tick(now=0.0)
+    assert d.action == "scale_in"
+    assert fleet.k_max < 140
+    total = sum(sum(v.values()) for v in fleet.allocations().values())
+    assert total <= fleet.k_max
+    for name in sessions:
+        assert d.plan.per_tenant[name].expected_sojourn <= 1.2
