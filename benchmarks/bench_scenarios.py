@@ -1,0 +1,106 @@
+"""Scenario-matrix benchmark: batch simulator throughput vs sequential DES
+(DESIGN.md §13).
+
+The claim: the vectorized discrete-time batch simulator
+(`streaming/batchsim.py`) turns the (topology x arrival-pattern x
+overload-policy x allocator) space from a handful of hand-picked DES
+points into hundreds of seeded scenarios per CI run.  Rows:
+
+* ``batch_np_seconds_B{B}`` / ``batch_jax_seconds_B{B}`` — wall-clock for
+  the whole B-scenario sweep on each backend (jax timed post-warmup: the
+  jit compile is a once-per-process cost the sweep amortises);
+* ``des_seconds_per_scenario`` — mean sequential event-DES cost on a
+  sample of the same scenarios;
+* ``speedup_batch_vs_des_B64`` — the acceptance gate: the B=64 sweep must
+  run >= 20x faster through the batch simulator than through B sequential
+  DES runs (best backend counted);
+* ``conformance_mean_rel_err`` — mean |batch - DES| / DES visit-sum
+  sojourn over the sampled stable scenarios (the §13 divergence bound in
+  action);
+* ``controlled_matrix_*`` — the measure -> model -> rebalance loop swept
+  over the matrix by ``ScenarioRunner`` (the CI smoke runs this at B=32).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.api.session import ScenarioRunner
+from repro.streaming.batchsim import BatchQueueSim
+from repro.streaming.scenarios import pack_allocations, pack_scenarios, scenario_matrix
+
+
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
+    rows: list[tuple[str, float, str]] = []
+    b = 32 if smoke else 64
+    horizon = 30.0 if smoke else 60.0
+    des_sample = 4 if smoke else 12
+    scens = scenario_matrix(b, seed=0, horizon=horizon, warmup=5.0, dt=0.05)
+    arrays = pack_scenarios(scens)
+    k = pack_allocations(scens, [s.plan_k0() for s in scens])
+    rows.append(("matrix_scenarios", float(b), f"scenarios, {arrays.steps} steps, N={arrays.n}"))
+
+    t0 = time.perf_counter()
+    res_np = BatchQueueSim(arrays, backend="numpy").run(k)
+    t_np = time.perf_counter() - t0
+    rows.append((f"batch_np_seconds_B{b}", t_np, "s whole-sweep (float64 twin)"))
+
+    BatchQueueSim(arrays, backend="jax").run(k)  # compile warmup
+    t0 = time.perf_counter()
+    BatchQueueSim(arrays, backend="jax").run(k)
+    t_jax = time.perf_counter() - t0
+    rows.append((f"batch_jax_seconds_B{b}", t_jax, "s whole-sweep (jit, post-warmup)"))
+
+    # Sequential event DES on a sample of the same scenarios.
+    t_des = 0.0
+    rel_errs = []
+    for i in range(des_sample):
+        s = scens[i]
+        sim = s.simulator(dict(zip(s.graph.names, map(int, k[i, : s.graph.n]))))
+        t0 = time.perf_counter()
+        des = sim.run()
+        t_des += time.perf_counter() - t0
+        batch_soj = float(
+            res_np.sojourn(k, arrays.mu, arrays.group, arrays.alpha)[i]
+        )
+        if np.isfinite(des.mean_visit_sum) and des.mean_visit_sum > 0:
+            sat = res_np.saturated(k, arrays.mu, arrays.group, arrays.alpha)[i]
+            if not sat.any():  # §13 bound applies to stable scenarios
+                rel_errs.append(abs(batch_soj - des.mean_visit_sum) / des.mean_visit_sum)
+    des_per = t_des / des_sample
+    rows.append(("des_seconds_per_scenario", des_per, f"s mean over {des_sample} runs"))
+    t_best = min(t_np, t_jax)
+    rows.append((
+        f"speedup_batch_vs_des_B{b}",
+        des_per * b / t_best,
+        "x vs sequential DES (acceptance: >= 20x at B=64)",
+    ))
+    if rel_errs:
+        rows.append((
+            "conformance_mean_rel_err",
+            float(np.mean(rel_errs)),
+            f"visit-sum sojourn, {len(rel_errs)} stable scenarios (target < 0.2)",
+        ))
+
+    # Full control loop over the matrix (the CI 32-scenario smoke).
+    t0 = time.perf_counter()
+    reports = ScenarioRunner(
+        scenario_matrix(b, seed=1, horizon=horizon, warmup=5.0, dt=0.05),
+        tick_interval=5.0,
+    ).run()
+    t_ctl = time.perf_counter() - t0
+    actions = [a for r in reports for a in r.actions]
+    rows.append((f"controlled_matrix_seconds_B{b}", t_ctl, "s measure->model->rebalance sweep"))
+    rows.append((
+        "controlled_matrix_active_fraction",
+        sum(a != "none" for a in actions) / max(len(actions), 1),
+        "fraction of ticks with a non-none decision",
+    ))
+    rows.append((
+        "controlled_matrix_drop_rate",
+        float(np.mean([r.drop_rate for r in reports])),
+        "mean shed fraction under control",
+    ))
+    return rows

@@ -8,6 +8,8 @@ Prints ``name,value,derived`` CSV rows per benchmark.  Mapping:
   bench_rebalance        -> paper Fig. 9 + 10 (live rebalance, scale out/in)
   bench_overload         -> beyond-paper: flash-crowd overload (bounded
                             queues, drop agreement, "overloaded" decision)
+  bench_scenarios        -> beyond-paper: scenario-matrix sweep (batch
+                            simulator vs sequential DES, >= 20x gate)
   bench_kernels          -> kernel layer (no paper table; TPU hot spots)
   bench_serving          -> beyond-paper: DRS-scheduled LLM serving
 
@@ -28,6 +30,7 @@ from . import (
     bench_overhead,
     bench_overload,
     bench_rebalance,
+    bench_scenarios,
     bench_serving,
     bench_underestimation,
 )
@@ -38,6 +41,7 @@ SUITES = [
     ("underestimation", bench_underestimation),
     ("rebalance", bench_rebalance),
     ("overload", bench_overload),
+    ("scenarios", bench_scenarios),
     ("kernels", bench_kernels),
     ("serving", bench_serving),
 ]

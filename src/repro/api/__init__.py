@@ -28,6 +28,8 @@ from .session import (
     EngineBackend,
     FleetDecision,
     FleetSession,
+    ScenarioReport,
+    ScenarioRunner,
 )
 
 __all__ = [
@@ -40,6 +42,8 @@ __all__ = [
     "DESBackend",
     "FleetSession",
     "FleetDecision",
+    "ScenarioRunner",
+    "ScenarioReport",
     "FleetPlan",
     "FleetPlanner",
     "Tenant",

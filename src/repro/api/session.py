@@ -46,6 +46,8 @@ __all__ = [
     "DESBackend",
     "FleetSession",
     "FleetDecision",
+    "ScenarioRunner",
+    "ScenarioReport",
 ]
 
 
@@ -729,3 +731,210 @@ class FleetSession:
         if self.on_decision:
             self.on_decision(d)
         return d
+
+
+# --------------------------------------------------------------------------- #
+# Scenario matrix sweeps (DESIGN.md §13)
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class ScenarioReport:
+    """One scenario's outcome after a controlled (or fixed-k) sweep."""
+
+    name: str
+    actions: tuple  # scheduler action per tick, in order
+    allocations: tuple  # name-keyed allocation in force after each tick
+    k_final: dict
+    provisioned_total: int  # sum of the final allocation
+    optimal_total: int | None  # Program (4)/(6) total at the mean true topology
+    deadline_miss_rate: float  # post-warmup windows with est. E[T] > t_max
+    drop_rate: float  # post-warmup shed fraction of offered load
+    mean_sojourn: float  # batchsim visit-sum E[T] estimate at k_final
+    saturated: tuple  # operator names at/above capacity post-warmup
+
+    def as_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "actions": list(self.actions),
+            "allocations": [dict(a) for a in self.allocations],
+            "k_final": dict(self.k_final),
+            "provisioned_total": self.provisioned_total,
+            "optimal_total": self.optimal_total,
+            "deadline_miss_rate": self.deadline_miss_rate,
+            "drop_rate": self.drop_rate,
+            "mean_sojourn": self.mean_sojourn,
+            "saturated": list(self.saturated),
+        }
+
+
+class ScenarioRunner:
+    """Sweep a scenario matrix through the full measure -> model ->
+    rebalance loop on the vectorized batch simulator (DESIGN.md §13).
+
+    Every ``tick_interval`` of simulated time the whole batch advances one
+    window; each scenario's window aggregates become a synthetic
+    :class:`~repro.core.measurer.MeasurementSnapshot`
+    (:meth:`MeasurementSnapshot.from_rates`) fed to that scenario's own
+    :class:`~repro.core.scheduler.DRSScheduler` via ``tick_from`` — the
+    *identical* decide path the live engine runs, including the §11
+    overload semantics — and applied decisions change that scenario's
+    allocation for the next window.  ``controlled=False`` freezes ``k``
+    (pure simulation sweep).
+
+    Reports per scenario: deadline-miss rate, drop rate, and provisioned
+    vs Program-(4)/(6)-optimal resources at the trace's mean rate.
+    """
+
+    def __init__(
+        self,
+        scenarios: Sequence,
+        *,
+        tick_interval: float = 10.0,
+        controlled: bool = True,
+        backend: str = "numpy",
+        interpret: bool = False,
+        force_kernel: bool = False,
+    ):
+        from ..streaming.batchsim import BatchQueueSim
+        from ..streaming.scenarios import pack_allocations, pack_scenarios
+
+        self.scenarios = list(scenarios)
+        self.tick_interval = tick_interval
+        self.controlled = controlled
+        self.arrays = pack_scenarios(self.scenarios)
+        self.sim = BatchQueueSim(
+            self.arrays, backend=backend, interpret=interpret, force_kernel=force_kernel
+        )
+        self.k = pack_allocations(self.scenarios, [s.plan_k0() for s in self.scenarios])
+        self.schedulers = [
+            self._scheduler_for(s, self.k[bi, : s.graph.n])
+            for bi, s in enumerate(self.scenarios)
+        ]
+        self.decisions: list[list[SchedulerDecision]] = [[] for _ in self.scenarios]
+        self._miss = np.zeros(len(self.scenarios), dtype=np.int64)
+        self._windows_warm = 0
+
+    def _scheduler_for(self, s, k0: np.ndarray) -> DRSScheduler:
+        scaling, group_alpha = s.graph.scaling_lists()
+        negotiator = None
+        if s.negotiated:
+            from ..core.negotiator import Machine, Negotiator as _Neg, ResourcePool
+
+            size = max(int(s.machine_size), 1)
+            pool = ResourcePool(
+                [Machine(f"m{i}", size) for i in range(-(-s.k_max // size))]
+            )
+            negotiator = _Neg(pool)
+            negotiator.ensure(int(k0.sum()))
+        return DRSScheduler(
+            s.graph.names,
+            s.graph.routing_matrix(),
+            k0.copy(),
+            SchedulerConfig(
+                k_max=None if negotiator is not None else s.k_max,
+                t_max=s.t_max,
+                tick_interval=self.tick_interval,
+                allocator=s.allocator,
+            ),
+            negotiator=negotiator,
+            scaling=scaling,
+            group_alpha=group_alpha,
+        )
+
+    # ------------------------------------------------------------------ #
+    def _window_snapshot(self, w: dict, bi: int):
+        """Synthetic per-scenario snapshot from one window's aggregates.
+
+        The sojourn estimate is NaN for a window that admitted no external
+        tuples (no sojourn is defined; ``NaN > t_max`` is False, so idle
+        trace troughs never register deadline misses)."""
+        from ..core.measurer import MeasurementSnapshot
+        from ..streaming.batchsim import little_wait, per_op_service_time, visit_sum_sojourn
+
+        s = self.scenarios[bi]
+        n = s.graph.n
+        span = w["span"]
+        lam_hat = w["offered"][bi, :n] / span
+        drop_hat = w["dropped"][bi, :n] / span
+        mu = self.arrays.mu[bi, :n]
+        admitted = np.maximum(lam_hat - drop_hat, 0.0)
+        wait = little_wait(w["q_mean"][bi, :n], admitted, self.arrays.dt)
+        svc = per_op_service_time(w["capacity"][bi, :n], mu, self.arrays.group[bi, :n])
+        lam0 = max(w["ext_admitted"][bi] / span, 0.0)
+        sojourn = float(visit_sum_sojourn(admitted, wait, svc, lam0))
+        return MeasurementSnapshot.from_rates(
+            lam_hat, mu, lam0, sojourn, self.sim.now, drop_hat=drop_hat
+        ), sojourn
+
+    def run(self) -> list[ScenarioReport]:
+        from ..core.allocator import InsufficientResourcesError
+        from ..core.jackson import UnstableTopologyError
+
+        a = self.arrays
+        steps_per_tick = max(int(round(self.tick_interval / a.dt)), 1)
+        while self.sim.step_index < a.steps:
+            w = self.sim.step_window(self.k, steps_per_tick)
+            warm = w["t0"] >= self.scenarios[0].warmup
+            if warm:
+                self._windows_warm += 1
+            for bi, (s, sched) in enumerate(zip(self.scenarios, self.schedulers)):
+                snap, sojourn = self._window_snapshot(w, bi)
+                if warm and s.t_max is not None and sojourn > s.t_max:
+                    self._miss[bi] += 1
+                if not self.controlled:
+                    continue
+                try:
+                    decision = sched.tick_from(snap, self.sim.now)
+                except (InsufficientResourcesError, UnstableTopologyError) as e:
+                    decision = SchedulerDecision(
+                        self.sim.now, "infeasible", sched.k_current.copy(), None,
+                        s.k_max, float("inf"), None, snap.sojourn_hat, reason=str(e),
+                    )
+                self.decisions[bi].append(decision)
+                if (
+                    decision.action in ("rebalance", "scale_out", "scale_in", "overloaded")
+                    and decision.k_target is not None
+                ):
+                    self.k[bi, : s.graph.n] = decision.k_target
+        return self.reports()
+
+    def reports(self) -> list[ScenarioReport]:
+        from ..core.allocator import InsufficientResourcesError, allocate
+        from ..core.jackson import UnstableTopologyError
+
+        res = self.sim.result()
+        a = self.arrays
+        sojourns = res.sojourn(self.k, a.mu, a.group, a.alpha)
+        sat = res.saturated(self.k, a.mu, a.group, a.alpha)
+        out = []
+        for bi, s in enumerate(self.scenarios):
+            n = s.graph.n
+            try:
+                optimal = allocate(s.mean_topology(), k_max=s.k_max, t_max=s.t_max).total
+            except (InsufficientResourcesError, UnstableTopologyError):
+                optimal = None
+            offered = float(res.offered[bi, :n].sum())
+            dropped = float(res.dropped[bi, :n].sum())
+            decs = self.decisions[bi]
+            out.append(
+                ScenarioReport(
+                    name=s.name,
+                    actions=tuple(d.action for d in decs),
+                    allocations=tuple(
+                        dict(zip(s.graph.names, map(int, d.k_current))) for d in decs
+                    ),
+                    k_final=dict(zip(s.graph.names, map(int, self.k[bi, :n]))),
+                    provisioned_total=int(self.k[bi, :n].sum()),
+                    optimal_total=None if optimal is None else int(optimal),
+                    deadline_miss_rate=(
+                        float(self._miss[bi] / self._windows_warm)
+                        if (self._windows_warm and s.t_max is not None)
+                        else float("nan")
+                    ),
+                    drop_rate=dropped / max(offered, 1e-300),
+                    mean_sojourn=float(sojourns[bi]),
+                    saturated=tuple(
+                        nm for i, nm in enumerate(s.graph.names) if sat[bi, i]
+                    ),
+                )
+            )
+        return out

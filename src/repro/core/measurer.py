@@ -222,6 +222,29 @@ class MeasurementSnapshot:
             return np.zeros_like(self.lam_hat)
         return np.nan_to_num(self.drop_hat, nan=0.0)
 
+    @classmethod
+    def from_rates(
+        cls,
+        lam_hat,
+        mu_hat,
+        lam0_hat: float,
+        sojourn_hat: float,
+        t: float,
+        drop_hat=None,
+    ) -> "MeasurementSnapshot":
+        """Synthetic snapshot from already-aggregated rates (the batched-
+        measurement hook: the vectorized scenario sweep measures whole
+        windows at once and feeds ``DRSScheduler.tick_from`` directly,
+        bypassing the per-instance probe/pull layer)."""
+        return cls(
+            lam_hat=np.asarray(lam_hat, dtype=np.float64),
+            mu_hat=np.asarray(mu_hat, dtype=np.float64),
+            lam0_hat=float(lam0_hat),
+            sojourn_hat=float(sojourn_hat),
+            t=float(t),
+            drop_hat=None if drop_hat is None else np.asarray(drop_hat, dtype=np.float64),
+        )
+
 
 class Measurer:
     """Central measurer: owns per-operator probes + global tuple tracking.

@@ -284,6 +284,17 @@ class DRSScheduler:
         now = time.time() if now is None else now
         snap = self.measurer.pull(now)
         self._observe_instances()
+        return self.tick_from(snap, now)
+
+    def tick_from(self, snap: MeasurementSnapshot, now: float) -> SchedulerDecision:
+        """One tick on an externally-supplied snapshot (no measurer pull).
+
+        This is the batched-snapshot hook: callers that measure outside
+        the live probe path — the vectorized scenario sweep
+        (``api.session.ScenarioRunner``) builds one synthetic snapshot per
+        scenario per window via :meth:`MeasurementSnapshot.from_rates` —
+        drive the identical model/decide path the live loop uses.
+        """
         if not snap.complete():
             d = SchedulerDecision(
                 now, "none", self.k_current.copy(), None,

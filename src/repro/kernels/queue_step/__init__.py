@@ -1,0 +1,5 @@
+"""Bounded-queue fluid-step kernel (batch scenario simulator hot loop)."""
+
+from . import kernel, ops, ref
+
+__all__ = ["kernel", "ops", "ref"]

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: the bounded-queue fluid step over a lane of queues.
+
+One grid step, no loop: the four state/input rows sit in (1, S) VMEM rows
+(S padded to the 128-lane width) and the update is a handful of VPU
+min/max ops per lane:
+
+    served   = min(q, cap_serve)
+    q1       = q - served
+    admitted = min(inflow, max(cap_queue - q1, 0))
+    q_next   = q1 + admitted,   dropped = inflow - admitted
+
+The lane axis is scenarios x operators — exactly the batch the scenario
+matrix sweeps (`streaming/batchsim.py` calls this once per simulated time
+step from inside a lax.scan).  `cap_queue = +inf` encodes unbounded or
+block-policy lanes, whose `dropped` is then identically 0.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["queue_step_pallas"]
+
+
+def _queue_step_kernel(q_ref, inflow_ref, cap_serve_ref, cap_queue_ref,
+                       q_next_ref, served_ref, dropped_ref):
+    q = q_ref[...]  # (1, S)
+    inflow = inflow_ref[...]
+    served = jnp.minimum(q, cap_serve_ref[...])
+    q1 = q - served
+    space = jnp.maximum(cap_queue_ref[...] - q1, 0.0)
+    admitted = jnp.minimum(inflow, space)
+    q_next_ref[...] = q1 + admitted
+    served_ref[...] = served
+    dropped_ref[...] = inflow - admitted
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def queue_step_pallas(q, inflow, cap_serve, cap_queue, *, interpret: bool = False):
+    """[M] queue lanes -> (q_next, served, dropped), each [M] float32.
+
+    Lanes are padded to 128 and the pad is sliced off before returning.
+    Padding rides through as all-zero lanes (0 backlog, 0 inflow, 0
+    capacity -> 0 outputs).
+    """
+    if q.ndim != 1:
+        raise ValueError(f"q must be 1-D, got shape {q.shape}")
+    m = q.shape[0]
+    pad = (-m) % 128
+    rows = [
+        jnp.pad(jnp.asarray(x, dtype=jnp.float32), (0, pad)).reshape(1, m + pad)
+        for x in (q, inflow, cap_serve, cap_queue)
+    ]
+    shape = jax.ShapeDtypeStruct((1, m + pad), jnp.float32)
+    q_next, served, dropped = pl.pallas_call(
+        _queue_step_kernel,
+        out_shape=(shape, shape, shape),
+        interpret=interpret,
+    )(*rows)
+    return q_next[0, :m], served[0, :m], dropped[0, :m]

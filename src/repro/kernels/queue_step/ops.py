@@ -1,0 +1,24 @@
+"""Dispatch wrapper: Pallas on TPU, jnp oracle elsewhere."""
+
+from __future__ import annotations
+
+import jax
+
+from . import kernel as _kernel, ref as _ref
+
+__all__ = ["queue_step"]
+
+
+def queue_step(q, inflow, cap_serve, cap_queue, *,
+               interpret: bool = False, force_kernel: bool = False):
+    """[M] queue lanes -> (q_next, served, dropped).
+
+    Pallas kernel on TPU (or with ``force_kernel=True, interpret=True`` on
+    CPU — repo kernel idiom, see kernels/__init__.py); jnp oracle
+    elsewhere.  Note the kernel computes in float32; the oracle follows
+    the input dtype (float64 under enable_x64).
+    """
+    if force_kernel or jax.default_backend() == "tpu":
+        return _kernel.queue_step_pallas(q, inflow, cap_serve, cap_queue,
+                                         interpret=interpret)
+    return _ref.queue_step(q, inflow, cap_serve, cap_queue)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the bounded-queue fluid step (DESIGN.md §13).
+
+One discrete-time step of every (scenario, operator) queue lane:
+
+    served   = min(q, cap_serve)             # drain the step-start backlog
+    q1       = q - served
+    space    = max(cap_queue - q1, 0)        # +inf lanes never shed (block /
+    admitted = min(inflow, space)            #  unbounded queues)
+    dropped  = inflow - admitted
+    q_next   = q1 + admitted
+
+Entirely elementwise, so the lane axis carries scenarios x operators.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["queue_step"]
+
+
+def queue_step(q, inflow, cap_serve, cap_queue):
+    """[M] lanes -> (q_next, served, dropped), each [M], dtype follows q."""
+    q = jnp.asarray(q)
+    inflow = jnp.asarray(inflow, dtype=q.dtype)
+    cap_serve = jnp.asarray(cap_serve, dtype=q.dtype)
+    cap_queue = jnp.asarray(cap_queue, dtype=q.dtype)
+    served = jnp.minimum(q, cap_serve)
+    q1 = q - served
+    space = jnp.maximum(cap_queue - q1, 0.0)
+    admitted = jnp.minimum(inflow, space)
+    dropped = inflow - admitted
+    return q1 + admitted, served, dropped

@@ -5,6 +5,7 @@ Declare topologies with :mod:`repro.api` (``AppGraph.bind("engine")`` /
 here stay importable as the backend layer.
 """
 
+from .batchsim import BatchArrays, BatchQueueSim, BatchSimResult
 from .des import (
     ArrivalProcess,
     NetworkSimulator,
@@ -15,6 +16,15 @@ from .des import (
 )
 from .engine import Operator, StreamEngine, StreamTuple
 from .overload import OVERLOAD_POLICIES, OverloadPolicy
+from .scenarios import (
+    ArrivalTrace,
+    Scenario,
+    fpd_scenario,
+    pack_scenarios,
+    random_appgraph,
+    scenario_matrix,
+    vld_scenario,
+)
 
 __all__ = [
     "ArrivalProcess",
@@ -28,4 +38,14 @@ __all__ = [
     "StreamTuple",
     "OverloadPolicy",
     "OVERLOAD_POLICIES",
+    "ArrivalTrace",
+    "Scenario",
+    "BatchArrays",
+    "BatchQueueSim",
+    "BatchSimResult",
+    "pack_scenarios",
+    "random_appgraph",
+    "scenario_matrix",
+    "vld_scenario",
+    "fpd_scenario",
 ]

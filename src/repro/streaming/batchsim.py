@@ -1,0 +1,425 @@
+"""Vectorized discrete-time batch simulator for scenario matrices (DESIGN.md §13).
+
+The event DES (`streaming/des.py`) is the repo's high-fidelity validator —
+and a scalar Python heapq loop, so sweeping hundreds of scenarios through
+it is minutes of wall-clock.  This module advances **B scenarios x N
+operators in parallel** with a discrete-time fluid/queue recurrence:
+
+    served_t   = min(q_t, k * mu_eff * dt)          # drain step-start backlog
+    inflow_t   = ext_t + served_{t-1} @ P           # one-step hop delay
+    admitted_t = min(inflow_t, max(cap_queue - (q_t - served_t), 0))
+    q_{t+1}    = q_t - served_t + admitted_t,  dropped_t = inflow_t - admitted_t
+
+External arrivals ``ext_t`` are **pre-sampled counts** (seeded numpy
+Poisson for stochastic kinds, exact ``rate * dt`` for deterministic), so
+both backends consume identical randomness:
+
+* **numpy float64** — the bit-exact debugging twin (same seed => bit-
+  identical ``BatchSimResult``), and the default off-TPU;
+* **jax** — ``jit`` over a ``lax.scan`` whose per-step bounded-queue
+  update dispatches through ``kernels/queue_step`` (Pallas on TPU, jnp
+  oracle elsewhere; ``force_kernel=True, interpret=True`` exercises the
+  kernel on CPU).  Dtype follows JAX's active precision: float64 under
+  ``enable_x64`` (matches the twin to ~1e-9), float32 otherwise.
+
+Overload semantics mirror DESIGN.md §11: ``cap_queue = +inf`` encodes
+unbounded queues AND the ``block`` policy (blocked producers hold tuples
+in a pending line — backlog grows, nothing is shed), finite ``cap_queue``
+encodes the shed policies (in fluid volume terms ``shed-newest`` and
+``shed-oldest`` drop identical mass; only tuple *age* differs, which a
+fluid model does not represent).  Per-operator drop accounting splits
+each step's shed mass proportionally between external and routed inflow
+so the admitted external rate stays unbiased, exactly like the DES's
+``lam0_hat`` rule.
+
+Divergence vs the event DES (bounds in DESIGN.md §13): the fluid model
+carries no stochastic queueing delay (exact for deterministic
+arrival/service kinds when rho < 1; under-estimates M/M/k waiting
+otherwise) and each hop costs one ``dt`` of latency; throughputs, drop
+rates, and the saturated-operator set agree.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["BatchArrays", "BatchSimResult", "BatchQueueSim", "service_capacity"]
+
+
+def service_capacity(k, mu, group, alpha):
+    """Per-operator service rate (tuples/sec) at allocation ``k`` — replica
+    ``k * mu``, chip-gang ``mu * k * eff(k)`` (DESIGN.md §2)."""
+    k = np.maximum(np.asarray(k, dtype=np.float64), 0.0)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        eff = 1.0 / (1.0 + alpha * (k - 1.0))
+    return np.where(group, mu * k * eff, mu * k)
+
+
+def little_wait(q_mean, admitted_rate, dt: float):
+    """Little's-law per-operator wait from a time-averaged backlog, minus
+    the one-step admission floor (a tuple admitted at step t is served
+    earliest at step t+1 — the known discretization bias, DESIGN.md §13)."""
+    with np.errstate(divide="ignore", invalid="ignore"):
+        return np.where(
+            admitted_rate > 0,
+            np.maximum(q_mean / np.maximum(admitted_rate, 1e-300) - dt, 0.0),
+            0.0,
+        )
+
+
+def per_op_service_time(cap, mu, group):
+    """Per-tuple service time: 1/mu per replica server, 1/(gang capacity)
+    for chip-gang operators (DESIGN.md §2)."""
+    with np.errstate(divide="ignore", invalid="ignore"):
+        return np.where(group, np.where(cap > 0, 1.0 / cap, np.inf), 1.0 / mu)
+
+
+def visit_sum_sojourn(admitted_rate, wait, svc, ext_rate):
+    """Eq.-3-style visit-sum E[T]: sum_i admitted_i * (W_i + S_i) / lam0.
+    NaN where no external tuples were admitted (no sojourn is defined —
+    mirrors the measurer's empty-window behaviour)."""
+    contrib = np.where(admitted_rate > 0, admitted_rate * (wait + svc), 0.0)
+    total = contrib.sum(axis=-1)
+    return np.where(ext_rate > 0, total / np.maximum(ext_rate, 1e-300), np.nan)
+
+
+@dataclass(frozen=True)
+class BatchArrays:
+    """Packed inputs for one batch run (index order per scenario is the
+    scenario's AppGraph operator order, padded to the batch-wide N_max
+    with zero-traffic lanes)."""
+
+    ext: np.ndarray  # [T, B, N] external arrival counts per step (tuples)
+    routing: np.ndarray  # [B, N, N] expected multiplicities
+    mu: np.ndarray  # [B, N] per-processor service-rate priors
+    group: np.ndarray  # [B, N] bool: chip-gang scaling
+    alpha: np.ndarray  # [B, N] group efficiency rolloff
+    cap_queue: np.ndarray  # [B, N] queue bound (+inf = unbounded / block)
+    dt: float  # step length (seconds)
+    warmup_steps: int  # steps excluded from rate/backlog accounting
+    # [B, N] bool: which lanes are real operators.  Consumer metadata for
+    # slicing batch results back to per-scenario shape — the dynamics need
+    # no mask (padding lanes carry zero arrivals, routing, and capacity,
+    # so they stay identically zero).
+    active: np.ndarray
+
+    def __post_init__(self):
+        t, b, n = self.ext.shape
+        for name in ("routing", "mu", "group", "alpha", "cap_queue", "active"):
+            got = getattr(self, name).shape
+            want = (b, n, n) if name == "routing" else (b, n)
+            if got != want:
+                raise ValueError(f"{name} must be {want}, got {got}")
+        if not 0 <= self.warmup_steps <= t:
+            raise ValueError(f"warmup_steps must be in [0, {t}], got {self.warmup_steps}")
+
+    @property
+    def steps(self) -> int:
+        return self.ext.shape[0]
+
+    @property
+    def batch(self) -> int:
+        return self.ext.shape[1]
+
+    @property
+    def n(self) -> int:
+        return self.ext.shape[2]
+
+
+@dataclass
+class BatchSimResult:
+    """Post-warmup aggregates for every scenario in the batch.
+
+    Rates are per second of post-warmup simulated time; ``sojourn`` is the
+    Little's-law visit-sum estimate comparable to the DES's
+    ``mean_visit_sum`` (waiting from the time-averaged backlog, service
+    from the effective rate at the final allocation)."""
+
+    offered: np.ndarray  # [B, N] tuples offered at each queue tail
+    served: np.ndarray  # [B, N] tuples served
+    dropped: np.ndarray  # [B, N] tuples shed
+    ext_admitted: np.ndarray  # [B] external tuples admitted
+    ext_offered: np.ndarray  # [B] external tuples offered
+    q_final: np.ndarray  # [B, N] backlog at the horizon
+    q_mean: np.ndarray  # [B, N] time-averaged backlog (post-warmup)
+    max_backlog: np.ndarray  # [B, N] peak backlog (whole run)
+    span: float  # post-warmup simulated seconds
+    dt: float  # step length (for the discretization-bias correction)
+    per_op_wait: np.ndarray = field(init=False)  # [B, N] Little's-law wait
+    arrival_rate: np.ndarray = field(init=False)  # [B, N] offered tuples/s
+    drop_rate: np.ndarray = field(init=False)  # [B, N] shed tuples/s
+
+    def __post_init__(self):
+        span = max(self.span, 1e-12)
+        self.arrival_rate = self.offered / span
+        self.drop_rate = self.dropped / span
+        admitted_rate = (self.offered - self.dropped) / span
+        self.per_op_wait = little_wait(self.q_mean, admitted_rate, self.dt)
+
+    def sojourn(self, k, mu, group, alpha) -> np.ndarray:
+        """[B] visit-sum E[T] estimate at allocation ``k`` (Eq. 3 analogue):
+        sum_i admitted_rate_i * (W_i + S_i) / external admitted rate, with
+        S_i the per-tuple service time at the (possibly gang) allocation.
+        NaN for scenarios that admitted no external tuples."""
+        cap = service_capacity(k, mu, group, alpha)
+        svc = per_op_service_time(cap, mu, group)
+        span = max(self.span, 1e-12)
+        admitted_rate = (self.offered - self.dropped) / span
+        ext_rate = self.ext_admitted / span
+        return visit_sum_sojourn(admitted_rate, self.per_op_wait, svc, ext_rate)
+
+    def saturated(self, k, mu, group, alpha, *, drop_fraction: float = 0.01) -> np.ndarray:
+        """[B, N] bool: offered load at/above capacity, or sustained
+        shedding — mirrors ``DRSScheduler.overloaded_mask``."""
+        cap = service_capacity(k, mu, group, alpha)
+        hot = (self.arrival_rate >= cap * (1.0 - 1e-9)) | (
+            self.drop_rate > drop_fraction * np.maximum(cap, 1e-300)
+        )
+        return hot & (self.arrival_rate > 0)  # idle/padding lanes are never hot
+
+
+# --------------------------------------------------------------------------- #
+# numpy float64 twin
+# --------------------------------------------------------------------------- #
+def _np_window(q, served_prev, ext_chunk, warm, cap_serve_dt, cap_queue, routing):
+    """Advance one window in float64 numpy; returns final state + sums."""
+    b, n = q.shape
+    offered = np.zeros((b, n))
+    served_sum = np.zeros((b, n))
+    dropped = np.zeros((b, n))
+    ext_adm = np.zeros(b)
+    ext_off = np.zeros(b)
+    q_int = np.zeros((b, n))
+    q_max = np.zeros((b, n))
+    for t in range(ext_chunk.shape[0]):
+        ext_t = ext_chunk[t]
+        served = np.minimum(q, cap_serve_dt)
+        q1 = q - served
+        routed = np.einsum("bi,bij->bj", served_prev, routing)
+        inflow = ext_t + routed
+        space = np.maximum(cap_queue - q1, 0.0)
+        admitted = np.minimum(inflow, space)
+        drop_t = inflow - admitted
+        q = q1 + admitted
+        with np.errstate(divide="ignore", invalid="ignore"):
+            adm_frac = np.where(inflow > 0, admitted / np.maximum(inflow, 1e-300), 1.0)
+        w = warm[t]
+        offered += w * inflow
+        served_sum += w * served
+        dropped += w * drop_t
+        ext_adm += w * (ext_t * adm_frac).sum(axis=-1)
+        ext_off += w * ext_t.sum(axis=-1)
+        q_int += w * q
+        q_max = np.maximum(q_max, q)
+        served_prev = served
+    return q, served_prev, offered, served_sum, dropped, ext_adm, ext_off, q_int, q_max
+
+
+# --------------------------------------------------------------------------- #
+# jax path (lax.scan; per-step update through kernels/queue_step)
+# --------------------------------------------------------------------------- #
+_JIT_CACHE: dict = {}
+
+
+def _jax_window_fn(interpret: bool, force_kernel: bool):
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels.queue_step import ops as qs_ops
+
+    def window(q, served_prev, ext_chunk, warm, cap_serve_dt, cap_queue, routing):
+        b, n = q.shape
+        capq_flat = cap_queue.reshape(-1)
+        caps_flat = cap_serve_dt.reshape(-1)
+
+        def step(carry, xs):
+            q, served_prev, offered, served_sum, dropped, ext_adm, ext_off, q_int, q_max = carry
+            ext_t, w = xs
+            routed = jnp.einsum("bi,bij->bj", served_prev, routing)
+            inflow = ext_t + routed
+            q_next_f, served_f, drop_f = qs_ops.queue_step(
+                q.reshape(-1), inflow.reshape(-1), caps_flat, capq_flat,
+                interpret=interpret, force_kernel=force_kernel,
+            )
+            q_next = q_next_f.reshape(b, n).astype(q.dtype)
+            served = served_f.reshape(b, n).astype(q.dtype)
+            drop_t = drop_f.reshape(b, n).astype(q.dtype)
+            admitted = inflow - drop_t
+            adm_frac = jnp.where(inflow > 0, admitted / jnp.maximum(inflow, 1e-300), 1.0)
+            carry = (
+                q_next,
+                served,
+                offered + w * inflow,
+                served_sum + w * served,
+                dropped + w * drop_t,
+                ext_adm + w * (ext_t * adm_frac).sum(axis=-1),
+                ext_off + w * ext_t.sum(axis=-1),
+                q_int + w * q_next,
+                jnp.maximum(q_max, q_next),
+            )
+            return carry, None
+
+        zeros = jnp.zeros_like(q)
+        init = (q, served_prev, zeros, zeros, zeros,
+                jnp.zeros(b, q.dtype), jnp.zeros(b, q.dtype), zeros, zeros)
+        out, _ = jax.lax.scan(step, init, (ext_chunk, warm))
+        return out
+
+    return window
+
+
+class BatchQueueSim:
+    """Stateful batch simulator: B scenarios advanced window by window.
+
+    ``step_window(k, n_steps)`` advances every scenario under (per-
+    scenario) allocation ``k`` and returns that window's aggregates — the
+    measurement surface ``ScenarioRunner`` turns into synthetic
+    :class:`~repro.core.measurer.MeasurementSnapshot`s.  ``run(k)`` is the
+    one-shot whole-horizon convenience.
+    """
+
+    def __init__(
+        self,
+        arrays: BatchArrays,
+        *,
+        backend: str = "numpy",
+        interpret: bool = False,
+        force_kernel: bool = False,
+    ):
+        if backend not in ("numpy", "jax"):
+            raise ValueError(f"unknown backend {backend!r}; expected numpy|jax")
+        self.arrays = arrays
+        self.backend = backend
+        self._t = 0  # next step index
+        b, n = arrays.batch, arrays.n
+        self.q = np.zeros((b, n))
+        self._served_prev = np.zeros((b, n))
+        # Post-warmup whole-run accumulators (run() / finalize view):
+        self._offered = np.zeros((b, n))
+        self._served = np.zeros((b, n))
+        self._dropped = np.zeros((b, n))
+        self._ext_adm = np.zeros(b)
+        self._ext_off = np.zeros(b)
+        self._q_int = np.zeros((b, n))
+        self._q_max = np.zeros((b, n))
+        if backend == "jax":
+            import jax
+
+            key = (interpret, force_kernel)
+            if key not in _JIT_CACHE:  # share traces across sim instances
+                _JIT_CACHE[key] = jax.jit(_jax_window_fn(interpret, force_kernel))
+            self._window_jit = _JIT_CACHE[key]
+
+    @property
+    def now(self) -> float:
+        return self._t * self.arrays.dt
+
+    @property
+    def step_index(self) -> int:
+        """Next step to simulate (== arrays.steps once exhausted)."""
+        return self._t
+
+    def capacity(self, k) -> np.ndarray:
+        a = self.arrays
+        return service_capacity(k, a.mu, a.group, a.alpha)
+
+    # ------------------------------------------------------------------ #
+    def step_window(self, k, n_steps: int | None = None) -> dict:
+        """Advance ``n_steps`` (default: to the horizon) under allocation
+        ``k`` ([B, N] ints).  Returns this window's aggregates (offered /
+        served / dropped tuples per op, admitted external tuples, backlog
+        integral) as plain numpy arrays — *without* the warmup gate, so
+        the caller can measure any window; the whole-run accumulators
+        apply the warmup mask themselves."""
+        a = self.arrays
+        if n_steps is None:
+            n_steps = a.steps - self._t
+        n_steps = min(n_steps, a.steps - self._t)
+        if n_steps <= 0:
+            raise ValueError("simulation horizon exhausted")
+        t0, t1 = self._t, self._t + n_steps
+        ext_chunk = a.ext[t0:t1]
+        warm_run = (np.arange(t0, t1) >= a.warmup_steps).astype(np.float64)
+        ones = np.ones(n_steps)
+        cap_serve_dt = self.capacity(k) * a.dt
+        if self.backend == "jax":
+            import jax.numpy as jnp
+
+            out = self._window_jit(
+                jnp.asarray(self.q), jnp.asarray(self._served_prev),
+                jnp.asarray(ext_chunk), jnp.asarray(ones),
+                jnp.asarray(cap_serve_dt), jnp.asarray(a.cap_queue),
+                jnp.asarray(a.routing),
+            )
+            (q, served_prev, offered, served_sum, dropped,
+             ext_adm, ext_off, q_int, q_max) = (np.asarray(x, dtype=np.float64) for x in out)
+        else:
+            (q, served_prev, offered, served_sum, dropped,
+             ext_adm, ext_off, q_int, q_max) = _np_window(
+                self.q, self._served_prev, ext_chunk, ones,
+                cap_serve_dt, a.cap_queue, a.routing,
+            )
+        # Whole-run accumulators are warmup-gated; a window that straddles
+        # the warmup boundary is re-run on the gated mask (numpy, cheap)
+        # only when the gate actually differs.
+        if warm_run.all():
+            self._offered += offered
+            self._served += served_sum
+            self._dropped += dropped
+            self._ext_adm += ext_adm
+            self._ext_off += ext_off
+            self._q_int += q_int
+        elif warm_run.any():
+            (_q2, _sp2, off_w, srv_w, drop_w, ea_w, eo_w, qi_w, _qm2) = _np_window(
+                self.q, self._served_prev, ext_chunk, warm_run,
+                cap_serve_dt, a.cap_queue, a.routing,
+            )
+            self._offered += off_w
+            self._served += srv_w
+            self._dropped += drop_w
+            self._ext_adm += ea_w
+            self._ext_off += eo_w
+            self._q_int += qi_w
+        self._q_max = np.maximum(self._q_max, q_max)
+        self.q = q
+        self._served_prev = served_prev
+        self._t = t1
+        span = n_steps * a.dt
+        return {
+            "t0": t0 * a.dt,
+            "t1": t1 * a.dt,
+            "span": span,
+            "offered": offered,
+            "served": served_sum,
+            "dropped": dropped,
+            "ext_admitted": ext_adm,
+            "ext_offered": ext_off,
+            "q_mean": q_int / max(n_steps, 1),
+            "q_final": q,
+            "capacity": cap_serve_dt / a.dt,
+        }
+
+    def result(self) -> BatchSimResult:
+        """Whole-run (post-warmup) aggregates so far."""
+        a = self.arrays
+        warm_steps = max(min(self._t, a.steps) - a.warmup_steps, 0)
+        span = warm_steps * a.dt
+        return BatchSimResult(
+            offered=self._offered.copy(),
+            served=self._served.copy(),
+            dropped=self._dropped.copy(),
+            ext_admitted=self._ext_adm.copy(),
+            ext_offered=self._ext_off.copy(),
+            q_final=self.q.copy(),
+            q_mean=self._q_int / max(warm_steps, 1),
+            max_backlog=self._q_max.copy(),
+            span=span,
+            dt=a.dt,
+        )
+
+    def run(self, k) -> BatchSimResult:
+        """Advance to the horizon under a fixed allocation and aggregate."""
+        self.step_window(k)
+        return self.result()

@@ -1,0 +1,36 @@
+#!/usr/bin/env python
+"""Regenerate the committed golden control-loop traces (DESIGN.md §13).
+
+One command, from the repo root:
+
+    PYTHONPATH=src python tests/golden/regen.py
+
+Rewrites ``vld_control_trace.json`` and ``fpd_control_trace.json`` next to
+this script.  Run it after an *intentional* change to the scheduler /
+batch simulator decision path, eyeball the diff (actions and allocations
+are the contract), and commit the new fixtures together with the change.
+``tests/test_golden_traces.py`` replays the same scenarios and diffs.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+HERE = pathlib.Path(__file__).resolve().parent
+
+
+def main() -> None:
+    from repro.streaming.scenarios import control_trace, fpd_scenario, vld_scenario
+
+    for name, scenario in (("vld", vld_scenario()), ("fpd", fpd_scenario())):
+        trace = control_trace([scenario], tick_interval=10.0)
+        path = HERE / f"{name}_control_trace.json"
+        path.write_text(json.dumps(trace, indent=2, sort_keys=True) + "\n")
+        ticks = len(trace["scenarios"][name]["actions"])
+        print(f"wrote {path} ({ticks} ticks)")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

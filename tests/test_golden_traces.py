@@ -1,0 +1,61 @@
+"""Golden-trace regression: the committed VLD / FPD control-loop decision
+traces must replay bit-for-bit on the decision surface (ISSUE 4).
+
+The fixtures live in ``tests/golden/*.json``; regenerate after an
+*intentional* decision-path change with::
+
+    PYTHONPATH=src python tests/golden/regen.py
+
+and commit the diff with the change (DESIGN.md §13).  Actions and
+allocations are exact; scalar metrics compare with a small tolerance so a
+benign float reordering doesn't fail the suite.
+"""
+
+import json
+import pathlib
+
+import pytest
+
+from repro.streaming.scenarios import control_trace, fpd_scenario, vld_scenario
+
+GOLDEN = pathlib.Path(__file__).resolve().parent / "golden"
+
+
+def _replay(name, scenario):
+    path = GOLDEN / f"{name}_control_trace.json"
+    want = json.loads(path.read_text())
+    got = control_trace([scenario], tick_interval=want["tick_interval"])
+    return want["scenarios"][name], got["scenarios"][name]
+
+
+@pytest.mark.parametrize(
+    "name,factory", [("vld", vld_scenario), ("fpd", fpd_scenario)]
+)
+def test_golden_trace_replays(name, factory):
+    want, got = _replay(name, factory())
+    assert got["actions"] == want["actions"], (
+        f"{name} control-loop action sequence drifted; if intentional, "
+        "regenerate with: PYTHONPATH=src python tests/golden/regen.py"
+    )
+    assert got["allocations"] == want["allocations"], (
+        f"{name} per-tick allocations drifted; if intentional, regenerate "
+        "with: PYTHONPATH=src python tests/golden/regen.py"
+    )
+    assert got["provisioned_total"] == want["provisioned_total"]
+    assert got["optimal_total"] == want["optimal_total"]
+    for metric in ("drop_rate", "mean_sojourn", "deadline_miss_rate"):
+        assert got[metric] == pytest.approx(want[metric], rel=1e-6, abs=1e-9), metric
+
+
+def test_golden_traces_are_nontrivial():
+    """The fixtures must actually exercise the control loop: elastic
+    scale-out/in and the §11 overloaded path both appear."""
+    for name, factory in (("vld", vld_scenario), ("fpd", fpd_scenario)):
+        want = json.loads((GOLDEN / f"{name}_control_trace.json").read_text())
+        actions = set(want["scenarios"][name]["actions"])
+        assert "overloaded" in actions, name
+        assert {"scale_in", "scale_out"} & actions, name
+        totals = [
+            sum(a.values()) for a in want["scenarios"][name]["allocations"]
+        ]
+        assert len(set(totals)) > 1, f"{name} allocation never changed"
