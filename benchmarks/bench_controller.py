@@ -1,0 +1,158 @@
+"""Batched control-plane benchmark: fused jit decide vs the per-scenario
+Python loop (DESIGN.md §14).
+
+The claim: extracting the decision math out of ``DRSScheduler`` into the
+batched controller turns B independent measure -> model -> rebalance
+loops from B Python interpreter walks per tick (tables, greedy, gates,
+object plumbing — the per-query scheduling overhead model-driven
+schedulers exist to amortize) into ONE compiled program over ``[B, N]``
+arrays.  Rows:
+
+* ``decide_scalar_seconds_B{B}`` — wall-clock for one control tick driven
+  through B per-scenario ``DRSScheduler.tick_from`` calls (the PR-4
+  ScenarioRunner structure);
+* ``decide_fused_seconds_B{B}`` — the same B decisions through the jit
+  ``make_decide_jax`` program (post-compile, per-call mean);
+* ``speedup_fused_vs_scalar_B64`` — the acceptance gate: >= 20x at B=64;
+* ``fused_loop_ticks_per_second_B{B}`` — whole fused simulate -> measure
+  -> decide -> apply scan throughput (ticks/s across the batch);
+* ``gain_topr_interpret_parity`` — Pallas top-R kernel vs jnp oracle in
+  interpret mode on CPU (1.0 = exact take-for-take agreement).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.api.session import ScenarioRunner
+from repro.core import controller as ctl
+from repro.core.measurer import MeasurementSnapshot
+from repro.core.scheduler import DRSScheduler, SchedulerConfig
+
+
+def _scalar_schedulers(runner: ScenarioRunner):
+    """The pre-extraction structure: one DRSScheduler object per scenario."""
+    scheds = []
+    for bi, s in enumerate(runner.scenarios):
+        scaling, group_alpha = s.graph.scaling_lists()
+        scheds.append(DRSScheduler(
+            s.graph.names,
+            s.graph.routing_matrix(),
+            runner.k[bi, : s.graph.n].copy(),
+            SchedulerConfig(k_max=s.k_max, t_max=s.t_max, allocator=s.allocator),
+            scaling=scaling,
+            group_alpha=group_alpha,
+        ))
+    return scheds
+
+
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
+    import jax.numpy as jnp
+
+    rows: list[tuple[str, float, str]] = []
+    b = 16 if smoke else 64
+    reps = 3 if smoke else 10
+    horizon = 30.0
+    from repro.streaming.scenarios import scenario_matrix
+
+    scens = [
+        s.with_(negotiated=False)
+        for s in scenario_matrix(b, seed=5, horizon=horizon, warmup=5.0, dt=0.05)
+    ]
+    runner = ScenarioRunner(scens, tick_interval=5.0, backend="numpy", fused=False)
+    # One real simulated window -> the measurement both paths decide on.
+    w = runner.sim.step_window(runner.k, runner._steps_per_tick)
+    meas, _ = runner._window_measurement(w)
+    rows.append(("controller_scenarios", float(b), f"scenarios, N={runner.arrays.n}"))
+
+    # --- per-scenario Python loop (the PR-4 structure) ------------------- #
+    scheds = _scalar_schedulers(runner)
+    k0 = runner.k.copy()
+    snaps = [
+        MeasurementSnapshot.from_rates(
+            meas.lam_hat[bi, : s.graph.n], meas.mu_hat[bi, : s.graph.n],
+            float(meas.lam0_hat[bi]), float(meas.sojourn_hat[bi]), 0.0,
+            drop_hat=meas.drop_hat[bi, : s.graph.n],
+        )
+        for bi, s in enumerate(runner.scenarios)
+    ]
+    from repro.core.allocator import InsufficientResourcesError
+    from repro.core.jackson import UnstableTopologyError
+
+    t_scalar = []
+    for _ in range(reps):
+        for bi, sched in enumerate(scheds):
+            sched.k_current = k0[bi, : len(sched.names)].copy()
+        t0 = time.perf_counter()
+        for bi, sched in enumerate(scheds):
+            try:
+                sched.tick_from(snaps[bi], 0.0)
+            except (InsufficientResourcesError, UnstableTopologyError):
+                pass  # the runner's infeasible row (PR-4 semantics)
+        t_scalar.append(time.perf_counter() - t0)
+    scalar_s = float(np.median(t_scalar))
+    rows.append((f"decide_scalar_seconds_B{b}", scalar_s,
+                 "s per tick, B per-scenario DRSScheduler.tick_from"))
+
+    # --- fused jit batch decide ------------------------------------------ #
+    decide = ctl.make_decide_jax(runner.static, runner._params())
+    args = (
+        jnp.asarray(meas.lam_hat), jnp.asarray(meas.mu_hat),
+        jnp.asarray(meas.drop_hat), jnp.asarray(meas.lam0_hat),
+        jnp.asarray(k0),
+    )
+    out = decide(*args)  # compile
+    out[1].block_until_ready()
+    t_fused = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = decide(*args)
+        out[1].block_until_ready()
+        t_fused.append(time.perf_counter() - t0)
+    fused_s = float(np.median(t_fused))
+    rows.append((f"decide_fused_seconds_B{b}", fused_s,
+                 "s per tick, one jit decide over the [B, N] stack"))
+    rows.append((
+        f"speedup_fused_vs_scalar_B{b}",
+        scalar_s / max(fused_s, 1e-12),
+        "x fused jit batch-decide vs per-scenario loop "
+        "(acceptance: >= 20x at B=64)",
+    ))
+
+    # --- whole fused loop: simulate -> measure -> decide -> apply -------- #
+    fused_runner = ScenarioRunner(scens, tick_interval=5.0, backend="jax")
+    n_ticks = fused_runner.arrays.steps // fused_runner._steps_per_tick
+    run_fn, _ = ctl.make_fused_loop(
+        fused_runner.arrays, fused_runner.static, fused_runner._params(),
+        steps_per_tick=fused_runner._steps_per_tick,
+    )
+    run_fn(fused_runner.k)["k_final"].block_until_ready()  # compile
+    t0 = time.perf_counter()
+    run_fn(fused_runner.k)["k_final"].block_until_ready()
+    t_loop = time.perf_counter() - t0
+    rows.append((
+        f"fused_loop_ticks_per_second_B{b}",
+        n_ticks * b / t_loop,
+        f"scenario-ticks/s, {n_ticks} ticks x B={b} in one lax.scan program",
+    ))
+
+    # --- gain_topr kernel parity (interpret mode on CPU) ----------------- #
+    from repro.kernels.gain_topr import kernel as topr_kernel, ref as topr_ref
+
+    rng = np.random.default_rng(7)
+    cand = np.maximum(rng.normal(0.5, 1.0, (8, 6, 24)), 0.0).astype(np.float32)
+    cand.sort(axis=-1)
+    cand = cand[..., ::-1].copy()
+    budget = rng.integers(0, 40, 8).astype(np.int32)
+    want = np.asarray(topr_ref.gain_topr(jnp.asarray(cand), jnp.asarray(budget)))
+    got = np.asarray(topr_kernel.gain_topr_pallas(
+        jnp.asarray(cand), jnp.asarray(budget), interpret=True
+    ))
+    rows.append((
+        "gain_topr_interpret_parity",
+        float((want == got).all()),
+        "Pallas top-R kernel == jnp oracle, interpret mode (1.0 = exact)",
+    ))
+    return rows

@@ -10,8 +10,15 @@ Prints ``name,value,derived`` CSV rows per benchmark.  Mapping:
                             queues, drop agreement, "overloaded" decision)
   bench_scenarios        -> beyond-paper: scenario-matrix sweep (batch
                             simulator vs sequential DES, >= 20x gate)
+  bench_controller       -> beyond-paper: batched control plane (fused jit
+                            batch-decide vs per-scenario loop, >= 20x gate)
   bench_kernels          -> kernel layer (no paper table; TPU hot spots)
   bench_serving          -> beyond-paper: DRS-scheduled LLM serving
+
+Every run also persists its rows to a ``BENCH_<name>.json`` artifact at
+the repo root (schema ``{bench, rows, smoke, timestamp}``); the CI
+bench-smoke job uploads them, so the perf trajectory accumulates per PR
+instead of evaporating with the job log.
 
 Roofline tables (EXPERIMENTS §Dry-run/§Roofline) are produced separately
 by ``python -m benchmarks.roofline`` from the dry-run records.
@@ -20,11 +27,14 @@ by ``python -m benchmarks.roofline`` from the dry-run records.
 from __future__ import annotations
 
 import inspect
+import json
+import pathlib
 import sys
 import time
 import traceback
 
 from . import (
+    bench_controller,
     bench_kernels,
     bench_model_accuracy,
     bench_overhead,
@@ -42,9 +52,29 @@ SUITES = [
     ("rebalance", bench_rebalance),
     ("overload", bench_overload),
     ("scenarios", bench_scenarios),
+    ("controller", bench_controller),
     ("kernels", bench_kernels),
     ("serving", bench_serving),
 ]
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def persist(name: str, rows: list, smoke: bool) -> pathlib.Path:
+    """Write one suite's rows to ``BENCH_<name>.json`` at the repo root."""
+    path = REPO_ROOT / f"BENCH_{name}.json"
+    path.write_text(json.dumps(
+        {
+            "bench": name,
+            "rows": [
+                {"name": rn, "value": val, "note": note} for rn, val, note in rows
+            ],
+            "smoke": smoke,
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        },
+        indent=2,
+    ) + "\n")
+    return path
 
 
 def main() -> None:
@@ -65,8 +95,10 @@ def main() -> None:
                 if "smoke" in inspect.signature(mod.run).parameters
                 else {}
             )
-            for row_name, val, note in mod.run(**kwargs):
+            rows = list(mod.run(**kwargs))
+            for row_name, val, note in rows:
                 print(f"{row_name},{val},{note}", flush=True)
+            persist(name, rows, smoke)
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"{name},ERROR,{traceback.format_exc().splitlines()[-1]}")

@@ -31,9 +31,10 @@ from typing import Any, Mapping, Sequence
 
 import numpy as np
 
+from ..core import controller as ctl
 from ..core.allocator import AllocationResult, InsufficientResourcesError, allocate
 from ..core.jackson import Topology
-from ..core.measurer import Measurer
+from ..core.measurer import Measurer, MeasurementBatch, stack_snapshots
 from ..core.negotiator import Negotiator
 from ..core.planner import FleetPlan, FleetPlanner, Tenant
 from ..core.rebalance import ExecutableCache, RebalanceCostModel
@@ -586,11 +587,18 @@ class FleetSession:
     def _measured_topologies(self, now: float) -> tuple[dict, list[str]]:
         """Per-tenant measured model rebuilds + overloaded tenant names.
 
-        Tenants without a complete snapshot (or never started) fall back
-        to their declared priors by omission — the planner resolves those
-        from the graph."""
+        The per-tenant measurer pulls stay in Python (live probes), but
+        the model plane is batched: the snapshots are stacked into one
+        :class:`~repro.core.measurer.MeasurementBatch` and the §11
+        overload trigger + throughput-capped propagation run vectorized
+        across the whole fleet (core/controller.py) before the per-tenant
+        offered-load clamp.  Tenants without a complete snapshot (or
+        never started) fall back to their declared priors by omission —
+        the planner resolves those from the graph."""
         tops: dict[str, Topology] = {}
         hot: list[str] = []
+        pulled: list[tuple[str, DRSScheduler]] = []
+        snaps = []
         for name, session in self.sessions.items():
             sched = session.scheduler
             if sched is None:
@@ -599,10 +607,48 @@ class FleetSession:
             sched._observe_instances()
             if not snap.complete():
                 continue
-            mask = sched.overloaded_mask(snap)
+            pulled.append((name, sched))
+            snaps.append(snap)
+        if not pulled:
+            return tops, hot
+        batch = stack_snapshots(snaps)
+        b, n = batch.batch, batch.n
+        routing = np.zeros((b, n, n))
+        group = np.zeros((b, n), dtype=bool)
+        alpha = np.zeros((b, n))
+        active = np.zeros((b, n), dtype=bool)
+        k_cur = np.zeros((b, n), dtype=np.int64)
+        mu_eff = batch.mu_hat.copy()
+        for bi, (_, sched) in enumerate(pulled):
+            ni = len(sched.names)
+            routing[bi, :ni, :ni] = sched.base_routing
+            group[bi, :ni] = sched._group
+            alpha[bi, :ni] = sched._alpha
+            active[bi, :ni] = True
+            k_cur[bi, :ni] = sched.k_current
+            if sched.speed_factors is not None:
+                mu_eff[bi, :ni] = mu_eff[bi, :ni] * sched.speed_factors
+        over = ctl.overloaded_mask_batch(
+            batch.lam_hat, mu_eff, batch.drop_hat, k_cur, group, alpha
+        ) & active
+        capped = ctl.capped_mask_batch(over, routing, active)
+        for bi, (name, sched) in enumerate(pulled):
+            ni = len(sched.names)
+            mask = over[bi, :ni]
             if mask.any():
                 hot.append(name)
-            tops[name] = sched.topology_from(snap, mask)
+            tops[name] = ctl.clamp_row(
+                sched.names,
+                sched.base_routing,
+                batch.lam_hat[bi, :ni],
+                batch.mu_hat[bi, :ni],
+                float(batch.lam0_hat[bi]),
+                mask,
+                capped[bi, :ni],
+                sched.scaling,
+                sched.group_alpha,
+                speed=sched.speed_factors,
+            )
         return tops, hot
 
     def _objective_of(self, planner: FleetPlanner, tops: dict) -> float:
@@ -768,17 +814,23 @@ class ScenarioReport:
 
 class ScenarioRunner:
     """Sweep a scenario matrix through the full measure -> model ->
-    rebalance loop on the vectorized batch simulator (DESIGN.md §13).
+    rebalance loop on the vectorized batch simulator (DESIGN.md §13/§14).
 
     Every ``tick_interval`` of simulated time the whole batch advances one
-    window; each scenario's window aggregates become a synthetic
-    :class:`~repro.core.measurer.MeasurementSnapshot`
-    (:meth:`MeasurementSnapshot.from_rates`) fed to that scenario's own
-    :class:`~repro.core.scheduler.DRSScheduler` via ``tick_from`` — the
-    *identical* decide path the live engine runs, including the §11
-    overload semantics — and applied decisions change that scenario's
-    allocation for the next window.  ``controlled=False`` freezes ``k``
-    (pure simulation sweep).
+    window; the window aggregates become ONE stacked
+    :class:`~repro.core.measurer.MeasurementBatch` fed to the batched
+    controller (``core/controller.py``) — the *identical* decide math the
+    live ``DRSScheduler`` shell runs, including the §11 overload
+    semantics — and applied decisions change each scenario's allocation
+    for the next window.  Per-scenario ``Negotiator`` leases are invoked
+    as hooks at the batch boundary between windows.
+
+    When every scenario has a static budget (``negotiated=False``) and
+    ``backend="jax"``, the whole sweep — simulate, measure, decide,
+    apply, for every tick — compiles to ONE jit program
+    (:func:`repro.core.controller.make_fused_loop`); ``fused=False``
+    forces the window-at-a-time float64 twin instead.
+    ``controlled=False`` freezes ``k`` (pure simulation sweep).
 
     Reports per scenario: deadline-miss rate, drop rate, and provisioned
     vs Program-(4)/(6)-optimal resources at the trace's mean rate.
@@ -793,6 +845,7 @@ class ScenarioRunner:
         backend: str = "numpy",
         interpret: bool = False,
         force_kernel: bool = False,
+        fused: bool | None = None,
     ):
         from ..streaming.batchsim import BatchQueueSim
         from ..streaming.scenarios import pack_allocations, pack_scenarios
@@ -800,111 +853,235 @@ class ScenarioRunner:
         self.scenarios = list(scenarios)
         self.tick_interval = tick_interval
         self.controlled = controlled
+        self.backend = backend
+        self.interpret = interpret
+        self.force_kernel = force_kernel
         self.arrays = pack_scenarios(self.scenarios)
         self.sim = BatchQueueSim(
             self.arrays, backend=backend, interpret=interpret, force_kernel=force_kernel
         )
         self.k = pack_allocations(self.scenarios, [s.plan_k0() for s in self.scenarios])
-        self.schedulers = [
-            self._scheduler_for(s, self.k[bi, : s.graph.n])
+        self.static = ctl.ControllerStatic.from_graphs(
+            [s.graph for s in self.scenarios],
+            speed=[s.speed_vector() for s in self.scenarios],
+        )
+        self.negotiators = [
+            self._negotiator_for(s, self.k[bi, : s.graph.n])
             for bi, s in enumerate(self.scenarios)
         ]
+        self._steps_per_tick = max(int(round(self.tick_interval / self.arrays.dt)), 1)
+        can_fuse = (
+            controlled
+            and backend == "jax"
+            and all(neg is None for neg in self.negotiators)
+            and self.arrays.steps % self._steps_per_tick == 0
+        )
+        if fused is None:
+            fused = can_fuse
+        elif fused and not can_fuse:
+            # Forcing the fused path past its preconditions would silently
+            # change semantics (leases need Python hooks, controlled=False
+            # must freeze k, a partial final window would be dropped).
+            raise GraphValidationError(
+                "fused=True requires controlled=True, backend='jax', no "
+                "negotiated scenarios, and a horizon divisible by the tick "
+                "interval; use fused=None for the automatic gate"
+            )
+        self.fused = fused
+        # Per-scenario decision parameters are static except the budgets,
+        # which negotiator leases move between ticks — stack once here,
+        # refresh only k_max in _params() (the tick hot loop).
+        self._base_params = ctl.ControllerParams.stack(
+            [
+                SchedulerConfig(
+                    k_max=None if neg is not None else s.k_max,
+                    t_max=s.t_max,
+                    tick_interval=self.tick_interval,
+                    allocator=s.allocator,
+                )
+                for s, neg in zip(self.scenarios, self.negotiators)
+            ],
+            [
+                neg.k_max if neg is not None else s.k_max
+                for s, neg in zip(self.scenarios, self.negotiators)
+            ],
+        )
         self.decisions: list[list[SchedulerDecision]] = [[] for _ in self.scenarios]
         self._miss = np.zeros(len(self.scenarios), dtype=np.int64)
         self._windows_warm = 0
+        self._fused_result = None
 
-    def _scheduler_for(self, s, k0: np.ndarray) -> DRSScheduler:
-        scaling, group_alpha = s.graph.scaling_lists()
-        negotiator = None
-        if s.negotiated:
-            from ..core.negotiator import Machine, Negotiator as _Neg, ResourcePool
+    def _negotiator_for(self, s, k0: np.ndarray):
+        """The scenario zoo's optional machine lease: ``negotiated``
+        scenarios draw ``machine_size``-processor machines from a finite
+        pool (speed-tagged when the scenario declares machine-class
+        factors) instead of holding a static budget."""
+        if not s.negotiated:
+            return None
+        from ..core.negotiator import Machine, Negotiator as _Neg, ResourcePool
 
-            size = max(int(s.machine_size), 1)
-            pool = ResourcePool(
-                [Machine(f"m{i}", size) for i in range(-(-s.k_max // size))]
-            )
-            negotiator = _Neg(pool)
-            negotiator.ensure(int(k0.sum()))
-        return DRSScheduler(
-            s.graph.names,
-            s.graph.routing_matrix(),
-            k0.copy(),
-            SchedulerConfig(
-                k_max=None if negotiator is not None else s.k_max,
-                t_max=s.t_max,
-                tick_interval=self.tick_interval,
-                allocator=s.allocator,
-            ),
-            negotiator=negotiator,
-            scaling=scaling,
-            group_alpha=group_alpha,
+        size = max(int(s.machine_size), 1)
+        speed = s.speed_vector()
+        mean_speed = 1.0 if speed is None else float(np.mean(speed))
+        pool = ResourcePool(
+            [
+                Machine(f"m{i}", size, speed=mean_speed)
+                for i in range(-(-s.k_max // size))
+            ]
         )
+        negotiator = _Neg(pool)
+        negotiator.ensure(int(k0.sum()))
+        return negotiator
+
+    def _params(self) -> ctl.ControllerParams:
+        """Per-scenario decision parameters with the budget re-resolved
+        from each negotiator's current lease (the scalar ``_k_max`` rule)."""
+        if all(neg is None for neg in self.negotiators):
+            return self._base_params
+        from dataclasses import replace
+
+        return replace(self._base_params, k_max=np.array(
+            [
+                neg.k_max if neg is not None else s.k_max
+                for s, neg in zip(self.scenarios, self.negotiators)
+            ],
+            dtype=np.int64,
+        ))
 
     # ------------------------------------------------------------------ #
-    def _window_snapshot(self, w: dict, bi: int):
-        """Synthetic per-scenario snapshot from one window's aggregates.
+    def _window_measurement(self, w: dict) -> tuple[MeasurementBatch, np.ndarray]:
+        """One stacked synthetic measurement from a window's aggregates.
 
-        The sojourn estimate is NaN for a window that admitted no external
-        tuples (no sojourn is defined; ``NaN > t_max`` is False, so idle
-        trace troughs never register deadline misses)."""
-        from ..core.measurer import MeasurementSnapshot
+        The sojourn estimate is NaN for a scenario that admitted no
+        external tuples this window (no sojourn is defined; ``NaN >
+        t_max`` is False, so idle trace troughs never register deadline
+        misses).  ``mu_hat`` carries the reference-class priors — the
+        controller applies the machine-class ``speed`` factors on the
+        model side, mirroring the sim's scaled service capacity."""
         from ..streaming.batchsim import little_wait, per_op_service_time, visit_sum_sojourn
 
-        s = self.scenarios[bi]
-        n = s.graph.n
+        a = self.arrays
         span = w["span"]
-        lam_hat = w["offered"][bi, :n] / span
-        drop_hat = w["dropped"][bi, :n] / span
-        mu = self.arrays.mu[bi, :n]
+        lam_hat = w["offered"] / span
+        drop_hat = w["dropped"] / span
+        mu_eff = a.mu if a.speed is None else a.mu * a.speed
         admitted = np.maximum(lam_hat - drop_hat, 0.0)
-        wait = little_wait(w["q_mean"][bi, :n], admitted, self.arrays.dt)
-        svc = per_op_service_time(w["capacity"][bi, :n], mu, self.arrays.group[bi, :n])
-        lam0 = max(w["ext_admitted"][bi] / span, 0.0)
-        sojourn = float(visit_sum_sojourn(admitted, wait, svc, lam0))
-        return MeasurementSnapshot.from_rates(
-            lam_hat, mu, lam0, sojourn, self.sim.now, drop_hat=drop_hat
+        wait = little_wait(w["q_mean"], admitted, a.dt)
+        svc = per_op_service_time(w["capacity"], mu_eff, a.group)
+        lam0 = np.maximum(w["ext_admitted"] / span, 0.0)
+        sojourn = visit_sum_sojourn(admitted, wait, svc, lam0)
+        return MeasurementBatch.from_rates(
+            lam_hat, a.mu, lam0, sojourn, self.sim.now, drop_hat=drop_hat
         ), sojourn
 
-    def run(self) -> list[ScenarioReport]:
-        from ..core.allocator import InsufficientResourcesError
-        from ..core.jackson import UnstableTopologyError
+    def _ensure_hooks(self):
+        hooks = []
+        for neg in self.negotiators:
+            if neg is None:
+                hooks.append(None)
+            else:
+                def hook(target: int, _neg=neg) -> int:
+                    _neg.ensure(target)
+                    return _neg.k_max
+                hooks.append(hook)
+        return hooks
 
+    def _to_decision(self, bi: int, row: ctl.RowDecision, meas, error) -> SchedulerDecision:
+        s = self.scenarios[bi]
+        return SchedulerDecision(
+            self.sim.now,
+            row.action,
+            row.k_next.copy(),
+            row.k_target,
+            s.k_max if error is not None else row.k_max,
+            row.et_cur,
+            row.et_target,
+            float(meas.sojourn_hat[bi]),
+            row.plan,
+            row.reason,
+        )
+
+    def run(self) -> list[ScenarioReport]:
+        if self.fused:
+            return self._run_fused()
         a = self.arrays
-        steps_per_tick = max(int(round(self.tick_interval / a.dt)), 1)
+        t_max = np.array(
+            [np.nan if s.t_max is None else s.t_max for s in self.scenarios]
+        )
+        hooks = self._ensure_hooks()
         while self.sim.step_index < a.steps:
-            w = self.sim.step_window(self.k, steps_per_tick)
+            w = self.sim.step_window(self.k, self._steps_per_tick)
             warm = w["t0"] >= self.scenarios[0].warmup
             if warm:
                 self._windows_warm += 1
-            for bi, (s, sched) in enumerate(zip(self.scenarios, self.schedulers)):
-                snap, sojourn = self._window_snapshot(w, bi)
-                if warm and s.t_max is not None and sojourn > s.t_max:
-                    self._miss[bi] += 1
-                if not self.controlled:
-                    continue
-                try:
-                    decision = sched.tick_from(snap, self.sim.now)
-                except (InsufficientResourcesError, UnstableTopologyError) as e:
-                    decision = SchedulerDecision(
-                        self.sim.now, "infeasible", sched.k_current.copy(), None,
-                        s.k_max, float("inf"), None, snap.sojourn_hat, reason=str(e),
-                    )
-                self.decisions[bi].append(decision)
-                if (
-                    decision.action in ("rebalance", "scale_out", "scale_in", "overloaded")
-                    and decision.k_target is not None
-                ):
-                    self.k[bi, : s.graph.n] = decision.k_target
+            meas, sojourn = self._window_measurement(w)
+            if warm:
+                with np.errstate(invalid="ignore"):
+                    self._miss += (sojourn > t_max).astype(np.int64)
+            if not self.controlled:
+                continue
+            batch = ctl.tick_batch(
+                meas, self.k, self.static, self._params(), ensure=hooks
+            )
+            for bi, row in enumerate(batch.rows):
+                s = self.scenarios[bi]
+                self.decisions[bi].append(
+                    self._to_decision(bi, row, meas, batch.errors[bi])
+                )
+                if row.applied:
+                    self.k[bi, : s.graph.n] = row.k_next
+        return self.reports()
+
+    def _run_fused(self) -> list[ScenarioReport]:
+        """The one-program path: lax.scan over every control window, the
+        decide compiled inline (negotiator-free scenarios only)."""
+        from ..streaming.batchsim import BatchSimResult
+
+        a = self.arrays
+        run, n_ticks = ctl.make_fused_loop(
+            a, self.static, self._params(),
+            steps_per_tick=self._steps_per_tick,
+            warmup_seconds=self.scenarios[0].warmup,
+            interpret=self.interpret, force_kernel=self.force_kernel,
+        )
+        out = {key: np.asarray(v) for key, v in run(self.k).items()}
+        self.k = out["k_final"].astype(np.int64)
+        self._windows_warm = int(out["warm_windows"])
+        self._miss = np.where(
+            [s.t_max is not None for s in self.scenarios], out["miss"], 0
+        ).astype(np.int64)
+        for ti in range(n_ticks):
+            now = (ti + 1) * self._steps_per_tick * a.dt
+            for bi, s in enumerate(self.scenarios):
+                action = ctl.ACTIONS[int(out["codes"][ti, bi])]
+                k_row = out["k"][ti, bi, : s.graph.n].astype(np.int64)
+                # k_target only when the jit decide actually applied an
+                # allocation (the twin's rule: an infeasible "overloaded"
+                # row proposes nothing).
+                applied = bool(out["applied"][ti, bi])
+                self.decisions[bi].append(SchedulerDecision(
+                    now, action, k_row, k_row if applied else None, s.k_max,
+                    float(out["et_cur"][ti, bi]), float(out["et_target"][ti, bi]),
+                    float(out["sojourn"][ti, bi]),
+                    reason="fused jit decide",
+                ))
+        warm_steps = max(a.steps - a.warmup_steps, 0)
+        self._fused_result = BatchSimResult(
+            offered=out["offered"], served=out["served"], dropped=out["dropped"],
+            ext_admitted=out["ext_admitted"], ext_offered=out["ext_offered"],
+            q_final=out["q_final"], q_mean=out["q_int"] / max(warm_steps, 1),
+            max_backlog=out["q_max"], span=warm_steps * a.dt, dt=a.dt,
+        )
         return self.reports()
 
     def reports(self) -> list[ScenarioReport]:
         from ..core.allocator import InsufficientResourcesError, allocate
         from ..core.jackson import UnstableTopologyError
 
-        res = self.sim.result()
+        res = self._fused_result if self._fused_result is not None else self.sim.result()
         a = self.arrays
-        sojourns = res.sojourn(self.k, a.mu, a.group, a.alpha)
-        sat = res.saturated(self.k, a.mu, a.group, a.alpha)
+        sojourns = res.sojourn(self.k, a.mu, a.group, a.alpha, a.speed)
+        sat = res.saturated(self.k, a.mu, a.group, a.alpha, a.speed)
         out = []
         for bi, s in enumerate(self.scenarios):
             n = s.graph.n

@@ -41,12 +41,20 @@ from .batched import (
     solve_traffic_batch,
 )
 from .planner import FleetPlan, FleetPlanner, Tenant
+from .controller import (
+    ControllerParams,
+    ControllerStatic,
+    decide_single,
+    tick_batch,
+)
 from .measurer import (
     EwmaSmoother,
     InstanceProbe,
     Measurer,
+    MeasurementBatch,
     MeasurementSnapshot,
     WindowSmoother,
+    stack_snapshots,
 )
 from .negotiator import LeaseChange, Machine, Negotiator, ResourcePool
 from .rebalance import ExecutableCache, RebalanceCostModel, RebalancePlan
@@ -69,8 +77,9 @@ __all__ = [
     "OperatorArrays", "operator_arrays", "sojourn_table", "gain_table",
     "expected_sojourn_batch", "solve_traffic_batch",
     "FleetPlan", "FleetPlanner", "Tenant",
-    "EwmaSmoother", "InstanceProbe", "Measurer", "MeasurementSnapshot",
-    "WindowSmoother",
+    "ControllerParams", "ControllerStatic", "decide_single", "tick_batch",
+    "EwmaSmoother", "InstanceProbe", "Measurer", "MeasurementBatch",
+    "MeasurementSnapshot", "WindowSmoother", "stack_snapshots",
     "LeaseChange", "Machine", "Negotiator", "ResourcePool",
     "ExecutableCache", "RebalanceCostModel", "RebalancePlan",
     "DRSScheduler", "SchedulerConfig", "SchedulerDecision", "StragglerDetector",

@@ -48,6 +48,8 @@ __all__ = [
     "OperatorMetrics",
     "Measurer",
     "MeasurementSnapshot",
+    "MeasurementBatch",
+    "stack_snapshots",
 ]
 
 
@@ -244,6 +246,102 @@ class MeasurementSnapshot:
             t=float(t),
             drop_hat=None if drop_hat is None else np.asarray(drop_hat, dtype=np.float64),
         )
+
+
+@dataclass(frozen=True)
+class MeasurementBatch:
+    """A ``[B, N]`` stack of measurement snapshots — the batched
+    controller's input surface (DESIGN.md §14).
+
+    Scenarios narrower than ``N`` are padded with inert lanes (zero
+    rates, finite mu) so the stacked arrays are rectangular; per-scenario
+    ``active`` masks (carried by the controller's static bundle, not
+    here) recover the real lanes.  Build one with :func:`stack_snapshots`
+    (from per-tenant live pulls) or directly from window aggregates (the
+    vectorized scenario sweep).
+    """
+
+    lam_hat: np.ndarray  # [B, N] smoothed offered arrival rates
+    mu_hat: np.ndarray  # [B, N] per-processor service rates (reference class)
+    lam0_hat: np.ndarray  # [B] external (admitted) arrival rates
+    sojourn_hat: np.ndarray  # [B] measured mean sojourn E[T^]
+    t: float  # timestamp shared by the stack
+    drop_hat: np.ndarray  # [B, N] smoothed shed rates (zeros when none)
+
+    @property
+    def batch(self) -> int:
+        return self.lam_hat.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.lam_hat.shape[1]
+
+    def complete(self, active: np.ndarray | None = None) -> np.ndarray:
+        """[B] bool: every *active* lane finite (the per-snapshot
+        ``complete()`` rule, vectorized)."""
+        fin = np.isfinite(self.lam_hat) & np.isfinite(self.mu_hat)
+        if active is not None:
+            fin = fin | ~np.asarray(active, dtype=bool)
+        return fin.all(axis=1) & np.isfinite(self.lam0_hat)
+
+    def row(self, bi: int, n: int | None = None) -> MeasurementSnapshot:
+        """Scenario ``bi``'s lanes as a scalar MeasurementSnapshot."""
+        sl = slice(None) if n is None else slice(0, n)
+        return MeasurementSnapshot.from_rates(
+            self.lam_hat[bi, sl],
+            self.mu_hat[bi, sl],
+            float(self.lam0_hat[bi]),
+            float(self.sojourn_hat[bi]),
+            self.t,
+            drop_hat=self.drop_hat[bi, sl],
+        )
+
+    @classmethod
+    def from_rates(
+        cls, lam_hat, mu_hat, lam0_hat, sojourn_hat, t: float, drop_hat=None
+    ) -> "MeasurementBatch":
+        lam_hat = np.atleast_2d(np.asarray(lam_hat, dtype=np.float64))
+        return cls(
+            lam_hat=lam_hat,
+            mu_hat=np.atleast_2d(np.asarray(mu_hat, dtype=np.float64)),
+            lam0_hat=np.atleast_1d(np.asarray(lam0_hat, dtype=np.float64)),
+            sojourn_hat=np.atleast_1d(np.asarray(sojourn_hat, dtype=np.float64)),
+            t=float(t),
+            drop_hat=(
+                np.zeros_like(lam_hat)
+                if drop_hat is None
+                else np.atleast_2d(np.asarray(drop_hat, dtype=np.float64))
+            ),
+        )
+
+
+def stack_snapshots(
+    snaps: "list[MeasurementSnapshot]", n: int | None = None
+) -> MeasurementBatch:
+    """Stack per-scenario/tenant snapshots into one padded batch.
+
+    Padding lanes get zero arrival/drop rates and ``mu = 1`` (finite, so
+    they never fail the completeness check); ``n`` widens the batch
+    beyond the widest snapshot when the caller's static arrays demand it.
+    """
+    if not snaps:
+        raise ValueError("need at least one snapshot to stack")
+    width = max(len(s.lam_hat) for s in snaps)
+    n = width if n is None else max(n, width)
+    b = len(snaps)
+    lam = np.zeros((b, n))
+    mu = np.ones((b, n))
+    drop = np.zeros((b, n))
+    lam0 = np.zeros(b)
+    soj = np.zeros(b)
+    for bi, s in enumerate(snaps):
+        ni = len(s.lam_hat)
+        lam[bi, :ni] = s.lam_hat
+        mu[bi, :ni] = s.mu_hat
+        drop[bi, :ni] = s.drop_rates()
+        lam0[bi] = s.lam0_hat
+        soj[bi] = s.sojourn_hat
+    return MeasurementBatch(lam, mu, lam0, soj, float(snaps[0].t), drop)
 
 
 class Measurer:

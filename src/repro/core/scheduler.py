@@ -13,6 +13,19 @@ Each tick:
      rebalance the allocation when the cost/benefit plan says so;
   5. emit a :class:`SchedulerDecision` for the CSP layer to execute.
 
+Since the controller extraction (DESIGN.md §14) this class is a thin
+*stateful shell*: every step above is pure math living in
+:mod:`repro.core.controller` — ``overloaded_mask_batch`` /
+``capped_mask_batch`` (vectorized trigger + throughput-capped
+propagation), ``clamp_row`` (offered-load model rebuild), and
+``decide_single`` (the whole decision flow, bit-identical float64 twin of
+the jit batch path).  The shell owns what cannot be batched: the
+measurer, the negotiator lease (passed to the controller as the
+``ensure`` hook), the cost model / executable cache, the straggler
+watchdog, and the decision history.  One scheduler is exactly a B=1 lane
+of the batched controller — which is what lets ``ScenarioRunner`` run
+thousands of these loops as one fused program.
+
 Straggler handling is paper-native: a straggler inside operator i drags the
 measured mu_hat_i down; the model then predicts a T_max violation and the
 loop reallocates — no special case needed.  A separate watchdog
@@ -30,6 +43,11 @@ routing multiplicities are kept for every edge whose upstream measurement
 is capped.  The decision action is ``"overloaded"``, which bypasses the
 rebalance cost/benefit gate and the scale-in hysteresis and asks the
 negotiator for capacity immediately.
+
+Heterogeneous machine classes (paper §III-A): pass ``speed_factors`` —
+per-operator speed of the machine class serving that operator, relative
+to the class ``mu_hat`` is measured against — and the controller scales
+the effective service rates ``mu_eff = mu_hat * speed`` throughout.
 """
 
 from __future__ import annotations
@@ -42,15 +60,8 @@ from typing import Callable
 
 import numpy as np
 
-from .allocator import (
-    AllocationResult,
-    InsufficientResourcesError,
-    assign_processors,
-    assign_processors_table,
-    min_processors,
-    min_processors_table,
-)
-from .jackson import OperatorSpec, Topology, UnstableTopologyError
+from . import controller as ctl
+from .jackson import Topology
 from .measurer import Measurer, MeasurementSnapshot
 from .negotiator import Negotiator
 from .rebalance import ExecutableCache, RebalanceCostModel, RebalancePlan
@@ -77,10 +88,9 @@ class SchedulerConfig:
     allocator: str = "table"
 
 
-_ALLOCATORS = {
-    "table": (assign_processors_table, min_processors_table),
-    "heap": (assign_processors, min_processors),
-}
+# Backwards-compatible alias: the solver pairs now live with the rest of
+# the decision math in core/controller.py.
+_ALLOCATORS = ctl.ALLOCATORS
 
 
 @dataclass(frozen=True)
@@ -122,7 +132,8 @@ class SchedulerDecision:
 
 
 class DRSScheduler:
-    """The DRS optimizer + scheduler modules glued together."""
+    """The DRS optimizer + scheduler modules glued together (stateful
+    shell over the pure controller — see module docstring)."""
 
     def __init__(
         self,
@@ -137,6 +148,7 @@ class DRSScheduler:
         executable_cache: ExecutableCache | None = None,
         scaling: list[str] | None = None,
         group_alpha: list[float] | None = None,
+        speed_factors: list[float] | None = None,
         on_decision: Callable[[SchedulerDecision], None] | None = None,
         straggler_detector: "StragglerDetector | None" = None,
     ):
@@ -150,134 +162,76 @@ class DRSScheduler:
         self.cache = executable_cache
         self.scaling = scaling or ["replica"] * len(self.names)
         self.group_alpha = group_alpha or [0.0] * len(self.names)
+        self.speed_factors = (
+            None if speed_factors is None
+            else np.asarray(speed_factors, dtype=np.float64)
+        )
         self.on_decision = on_decision
         self.straggler_detector = (
             StragglerDetector() if straggler_detector is None else straggler_detector
         )
-        try:
-            self._assign, self._min_proc = _ALLOCATORS[config.allocator]
-        except KeyError:
+        if config.allocator not in ctl.ALLOCATORS:
             raise ValueError(
                 f"unknown allocator {config.allocator!r}; "
-                f"expected one of {sorted(_ALLOCATORS)}"
-            ) from None
+                f"expected one of {sorted(ctl.ALLOCATORS)}"
+            )
+        self._group = np.array([s == "group" for s in self.scaling], dtype=bool)
+        self._alpha = np.asarray(self.group_alpha, dtype=np.float64)
         self.history: list[SchedulerDecision] = []
         self.rebalance_count = 0
 
-    # ------------------------------------------------------------------ #
-    # Drop-rate trigger: an operator shedding more than this fraction of
-    # its capacity is overloaded even if the smoothed arrival rate dips
-    # below capacity (EWMA lag under bursty arrivals).
-    DROP_TRIGGER_FRACTION = 0.01
+    # Kept as a class attribute for callers/tests that read the trigger
+    # threshold off the scheduler; the value lives with the math now.
+    DROP_TRIGGER_FRACTION = ctl.DROP_TRIGGER_FRACTION
+
+    def _mu_eff(self, snap: MeasurementSnapshot) -> np.ndarray:
+        if self.speed_factors is None:
+            return snap.mu_hat
+        return snap.mu_hat * self.speed_factors
 
     def overloaded_mask(self, snap: MeasurementSnapshot) -> np.ndarray:
         """Per-operator bool: measured offered load >= current capacity,
-        OR sustained shedding at the operator's queue.
-
-        Combines the two overload signals (measurer docstring): queue-tail
-        arrival rates (offered load, shed tuples included) against
-        k_current * mu_hat — with group scaling's efficiency curve applied
-        — and the per-operator drop rate, which catches saturation the
-        smoothed arrival rate is still lagging behind.  This is the
-        defined trigger for the ``"overloaded"`` path.
-        """
-        n = len(self.names)
-        drops = snap.drop_rates()
-        mask = np.zeros(n, dtype=bool)
-        for i in range(n):
-            lam, mu = float(snap.lam_hat[i]), float(snap.mu_hat[i])
-            if not (math.isfinite(lam) and math.isfinite(mu)) or mu <= 0:
-                continue
-            k_i = max(int(self.k_current[i]), 1)
-            if self.scaling[i] == "group":
-                eff = 1.0 / (1.0 + self.group_alpha[i] * (k_i - 1))
-                capacity = mu * k_i * eff
-            else:
-                capacity = mu * k_i
-            mask[i] = (
-                lam >= capacity * (1.0 - 1e-9)
-                or float(drops[i]) > self.DROP_TRIGGER_FRACTION * capacity
-            )
-        return mask
+        OR sustained shedding at the operator's queue (the §11 trigger —
+        vectorized in :func:`repro.core.controller.overloaded_mask_batch`)."""
+        return ctl.overloaded_mask_batch(
+            snap.lam_hat[None],
+            self._mu_eff(snap)[None],
+            snap.drop_rates()[None],
+            self.k_current[None],
+            self._group[None],
+            self._alpha[None],
+        )[0]
 
     def _capped_mask(self, overloaded: np.ndarray) -> np.ndarray:
-        """Operators whose *measured arrival rate* is throughput-capped:
-        anything downstream (transitively) of a saturated operator — a
-        saturated operator emits at its capacity, not its offered load, so
-        measurements below it cannot be trusted during overload."""
-        n = len(self.names)
-        adj = self.base_routing > 0
-        out_capped = overloaded.copy()  # operator's output under-represents load
-        in_capped = np.zeros(n, dtype=bool)
-        for _ in range(n):
-            new_in = np.array([(adj[:, j] & out_capped).any() for j in range(n)])
-            new_out = overloaded | new_in
-            if (new_in == in_capped).all() and (new_out == out_capped).all():
-                break
-            in_capped, out_capped = new_in, new_out
-        return in_capped
+        """Operators whose *measured arrival rate* is throughput-capped
+        (transitively downstream of a saturated operator)."""
+        return ctl.capped_mask_batch(overloaded[None], self.base_routing[None])[0]
 
     def topology_from(
         self, snap: MeasurementSnapshot, overloaded: np.ndarray | None = None
     ) -> Topology:
-        """Rebuild the model from measurements.
-
-        Routing multiplicities are rescaled from the *declared* graph
-        shape and the *measured* arrival ratios: for edge (i -> j) with
-        declared weight w_ij > 0 we set w'_ij = w_ij * r_j where r_j scales
-        all of j's in-edges so the traffic equations reproduce lam_hat_j.
-        This keeps the graph structure (which DRS knows) but tracks data-
-        dependent fan-out (which only measurement can see).
-
-        Unstable snapshots (some measured rho_i >= 1) clamp the model to
-        offered-load rates: source lam0 comes straight from the queue-tail
-        arrival probes (``lam0_hat`` only counts admitted tuples and
-        under-reports during shedding), and the measured rescale is
-        skipped for operators whose in-flow is throughput-capped by a
-        saturated upstream — their declared multiplicities are kept.
-        """
+        """Rebuild the model from measurements (controller ``clamp_row``;
+        see DESIGN.md §4/§11 for the offered-load clamping rules)."""
         n = len(self.names)
         if overloaded is None:
             overloaded = self.overloaded_mask(snap)
-        hot = bool(overloaded.any())
-        capped = self._capped_mask(overloaded) if hot else np.zeros(n, dtype=bool)
-        lam_hat = np.array(snap.lam_hat, dtype=np.float64)
-        lam0 = np.zeros(n)
-        # External arrivals enter at declared sources (no in-edges).
-        in_deg = self.base_routing.sum(axis=0)
-        sources = np.nonzero(in_deg == 0)[0]
-        if len(sources) == 0:
-            sources = np.array([0])
-        if hot:
-            # Offered load at the queue tail (includes shed tuples).
-            for s in sources:
-                lam0[s] = lam_hat[s] if math.isfinite(lam_hat[s]) else 0.0
-        else:
-            src_lam = lam_hat[sources]
-            total_src = max(src_lam.sum(), 1e-12)
-            for s, l in zip(sources, src_lam):
-                lam0[s] = snap.lam0_hat * (l / total_src) if math.isfinite(snap.lam0_hat) else l
-        routing = self.base_routing.copy()
-        # Rescale in-edges to match measured per-operator arrival rates.
-        for j in range(n):
-            declared_in = routing[:, j]
-            if declared_in.sum() == 0:
-                continue
-            if capped[j]:
-                continue  # measured lam_hat[j] is capacity, not offered load
-            inflow = float(np.dot(declared_in, lam_hat))  # predicted from measured upstream
-            if inflow > 1e-12 and math.isfinite(lam_hat[j]) and lam_hat[j] > 0:
-                routing[:, j] *= lam_hat[j] / inflow
-        ops = [
-            OperatorSpec(
-                name=self.names[i],
-                mu=float(snap.mu_hat[i]),
-                scaling=self.scaling[i],
-                group_alpha=self.group_alpha[i],
-            )
-            for i in range(n)
-        ]
-        return Topology(ops, lam0, routing)
+        capped = (
+            self._capped_mask(overloaded)
+            if overloaded.any()
+            else np.zeros(n, dtype=bool)
+        )
+        return ctl.clamp_row(
+            self.names,
+            self.base_routing,
+            snap.lam_hat,
+            snap.mu_hat,
+            snap.lam0_hat,
+            overloaded,
+            capped,
+            self.scaling,
+            self.group_alpha,
+            speed=self.speed_factors,
+        )
 
     # ------------------------------------------------------------------ #
     def tick(self, now: float | None = None) -> SchedulerDecision:
@@ -291,9 +245,9 @@ class DRSScheduler:
 
         This is the batched-snapshot hook: callers that measure outside
         the live probe path — the vectorized scenario sweep
-        (``api.session.ScenarioRunner``) builds one synthetic snapshot per
-        scenario per window via :meth:`MeasurementSnapshot.from_rates` —
-        drive the identical model/decide path the live loop uses.
+        (``api.session.ScenarioRunner``) stacks whole windows into
+        :class:`~repro.core.measurer.MeasurementBatch` rows — drive the
+        identical model/decide path through the controller.
         """
         if not snap.complete():
             d = SchedulerDecision(
@@ -339,191 +293,60 @@ class DRSScheduler:
         now: float,
         overloaded: np.ndarray | None = None,
     ) -> SchedulerDecision:
-        cfg = self.config
-        k_max = self._k_max()
-        et_cur = top.expected_sojourn(self.k_current)
-        stragglers = self.straggler_hints()
+        """One decision on an already-built model: delegates the whole
+        flow to the controller's float64 twin (``decide_single``) and
+        applies the outcome to the shell state.
 
-        # --- Overload: defined unstable-snapshot path ------------------- #
-        # tick() passes the mask it already clamped the topology with, so
-        # detection and clamping cannot disagree; direct callers get it
-        # computed here.
-        if overloaded is None:
-            overloaded = self.overloaded_mask(snap)
-        if overloaded.any():
-            return self._handle_overload(top, snap, now, k_max, et_cur, overloaded)
-
-        # --- Program (6): how many processors do we actually need? ------ #
-        need: AllocationResult | None = None
-        if cfg.t_max is not None:
-            try:
-                need = self._min_proc(top, cfg.t_max)
-            except InsufficientResourcesError:
-                need = None
-
-        # Scale out: T_max unreachable within the current lease.
-        if cfg.t_max is not None:
-            needed_total = (
-                math.ceil(need.total * cfg.headroom) if need is not None else k_max + 1
-            )
-            if needed_total > k_max and self.negotiator is not None:
-                self.negotiator.ensure(needed_total)
-                new_k_max = self.negotiator.k_max
-                if new_k_max > k_max:
-                    k_max = new_k_max
-                    best = self._assign(top, k_max)
-                    return self._apply(
-                        now, "scale_out", best, top, et_cur, snap,
-                        reason=f"Program(6) needs {needed_total} > leased; "
-                        f"negotiated k_max={k_max}",
-                    )
-            # Scale in: we need much less than we lease (with hysteresis).
-            if (
-                need is not None
-                and self.negotiator is not None
-                and math.ceil(need.total * cfg.headroom) < cfg.scale_in_hysteresis * k_max
-            ):
-                target_total = math.ceil(need.total * cfg.headroom)
-                self.negotiator.ensure(target_total)
-                new_k_max = self.negotiator.k_max
-                if new_k_max < k_max:
-                    best = self._assign(top, new_k_max)
-                    return self._apply(
-                        now, "scale_in", best, top, et_cur, snap,
-                        reason=f"Program(6) needs {need.total} (headroom "
-                        f"{target_total}) << leased {k_max}; released to {new_k_max}",
-                    )
-
-        # --- Program (4): best placement within k_max ------------------- #
-        try:
-            best = self._assign(top, k_max)
-        except InsufficientResourcesError as e:
-            d = SchedulerDecision(
-                now, "infeasible", self.k_current.copy(), None, k_max,
-                et_cur, None, snap.sojourn_hat,
-                reason=str(e),
-            )
-            self._emit(d)
-            return d
-
-        improvement = (
-            (et_cur - best.expected_sojourn) / et_cur if math.isfinite(et_cur) and et_cur > 0
-            else float("inf")
-        )
-        if np.array_equal(best.k, self.k_current) or improvement < cfg.min_improvement:
-            d = self._none_or_hint(
-                now, best, k_max, et_cur, snap, stragglers,
-                reason=f"improvement {improvement:.1%} < {cfg.min_improvement:.0%}",
-            )
-            self._emit(d)
-            return d
-
-        plan = self.cost_model.plan(
-            top, self.k_current, best.k, cache=self.cache, stage_names=self.names
-        )
-        if not plan.worthwhile(cfg.horizon_seconds, top.lam0_total) and math.isfinite(et_cur):
-            d = self._none_or_hint(
-                now, best, k_max, et_cur, snap, stragglers, plan=plan,
-                reason="rebalance cost exceeds benefit over horizon",
-            )
-            self._emit(d)
-            return d
-        return self._apply(now, "rebalance", best, top, et_cur, snap, plan=plan)
-
-    def _none_or_hint(
-        self,
-        now: float,
-        best: AllocationResult,
-        k_max: int,
-        et_cur: float,
-        snap: MeasurementSnapshot,
-        stragglers: tuple,
-        *,
-        plan: RebalancePlan | None = None,
-        reason: str = "",
-    ) -> SchedulerDecision:
-        """A model-driven no-op — unless the straggler watchdog flagged slow
-        instances, in which case the decision becomes an advisory
-        ``"rebalance_hint"`` naming them (the model can't see *which*
-        instance is slow, only the dragged-down operator mu_hat)."""
-        action = "none"
-        if stragglers:
-            action = "rebalance_hint"
-            named = ", ".join(f"{op}[{inst}]" for op, inst in stragglers)
-            reason = (reason + "; " if reason else "") + f"stragglers flagged: {named}"
-        return SchedulerDecision(
-            now, action, self.k_current.copy(), best.k, k_max,
-            et_cur, best.expected_sojourn, snap.sojourn_hat, plan,
-            reason, stragglers,
-        )
-
-    def _handle_overload(
-        self,
-        top: Topology,
-        snap: MeasurementSnapshot,
-        now: float,
-        k_max: int,
-        et_cur: float,
-        overloaded: np.ndarray,
-    ) -> SchedulerDecision:
-        """Measured rho_i >= 1 somewhere: scale out *now*.
-
-        ``top`` is already offered-load-clamped by :meth:`topology_from`.
-        Sizing uses Program (6) when a T_max is configured, else the
-        minimum feasible (stable) allocation; the negotiator is asked
-        immediately — no scale-in hysteresis, no cost/benefit gate (queues
-        are growing or shedding while we deliberate).
+        tick() passes the mask it already clamped the topology with, so
+        detection and clamping cannot disagree; direct callers get it
+        computed here.
         """
         cfg = self.config
-        hot_names = [self.names[i] for i in np.nonzero(overloaded)[0]]
-        try:
-            if cfg.t_max is not None:
-                need_total = math.ceil(self._min_proc(top, cfg.t_max).total * cfg.headroom)
-            else:
-                need_total = math.ceil(
-                    int(top.min_feasible_allocation().sum()) * cfg.headroom
-                )
-        except (InsufficientResourcesError, UnstableTopologyError):
-            # T_max (or stability itself) unreachable at any k — lease as
-            # much as the pool allows and do the best we can.
-            need_total = k_max + 1
-        if need_total > k_max and self.negotiator is not None:
-            self.negotiator.ensure(need_total)
-            k_max = max(k_max, self.negotiator.k_max)
-        try:
-            best = self._assign(top, k_max)
-        except (InsufficientResourcesError, UnstableTopologyError) as e:
-            d = SchedulerDecision(
-                now, "overloaded", self.k_current.copy(), None, k_max,
-                et_cur, None, snap.sojourn_hat,
-                reason=f"overloaded at {hot_names}; offered load infeasible "
-                f"within k_max={k_max}: {e}",
-            )
-            self._emit(d)
-            return d
-        return self._apply(
-            now, "overloaded", best, top, et_cur, snap,
-            reason=f"measured rho >= 1 at {hot_names}; offered-load model "
-            f"needs {need_total}, reallocated within k_max={k_max}",
-        )
+        stragglers = self.straggler_hints()
+        if overloaded is None:
+            overloaded = self.overloaded_mask(snap)
 
-    def _apply(
-        self,
-        now: float,
-        action: str,
-        best: AllocationResult,
-        top: Topology,
-        et_cur: float,
-        snap: MeasurementSnapshot,
-        *,
-        plan: RebalancePlan | None = None,
-        reason: str = "",
-    ) -> SchedulerDecision:
-        self.k_current = best.k.copy()
-        self.rebalance_count += 1
+        ensure = None
+        if self.negotiator is not None:
+            negotiator = self.negotiator
+
+            def ensure(target: int) -> int:
+                negotiator.ensure(target)
+                return negotiator.k_max
+
+        row = ctl.decide_single(
+            top,
+            self.k_current,
+            self._k_max(),
+            t_max=cfg.t_max,
+            headroom=cfg.headroom,
+            scale_in_hysteresis=cfg.scale_in_hysteresis,
+            min_improvement=cfg.min_improvement,
+            horizon_seconds=cfg.horizon_seconds,
+            allocator=cfg.allocator,
+            overloaded=overloaded,
+            ensure=ensure,
+            cost_model=self.cost_model,
+            cache=self.cache,
+            stage_names=self.names,
+            stragglers=stragglers,
+            names=self.names,
+        )
+        if row.applied:
+            self.k_current = row.k_next.copy()
+            self.rebalance_count += 1
         d = SchedulerDecision(
-            now, action, self.k_current.copy(), best.k, self._k_max(),
-            et_cur, best.expected_sojourn, snap.sojourn_hat, plan, reason,
+            now,
+            row.action,
+            self.k_current.copy(),
+            row.k_target,
+            self._k_max() if row.applied else row.k_max,
+            row.et_cur,
+            row.et_target,
+            snap.sojourn_hat,
+            row.plan,
+            row.reason,
+            stragglers if row.action in ("none", "rebalance_hint") else (),
         )
         self._emit(d)
         return d

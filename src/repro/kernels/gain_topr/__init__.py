@@ -1,0 +1,5 @@
+"""Batched masked top-R marginal-gain selection (controller hot loop)."""
+
+from . import kernel, ops, ref
+
+__all__ = ["kernel", "ops", "ref"]

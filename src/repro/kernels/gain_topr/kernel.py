@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: batched masked top-R marginal-gain selection.
+
+One grid step per scenario.  The candidate-gain tile sits in VMEM as a
+``(J, N)`` block (gain index on sublanes, operators on lanes, both padded
+to the float32 tile shape) and the budget scalar in SMEM.  Instead of a
+sort, the budget-th largest positive gain is found by **bisection over
+float bit patterns**: positive IEEE-754 floats order like their int32
+bits, so 31 fori_loop steps of one masked VPU count-reduction each pin
+the threshold *exactly* (no epsilon).  Per-operator takes are then two
+more masked row counts, and threshold ties are distributed in operator
+order via a lower-triangular matmul prefix-sum (MXU) — the same
+tie-breaking as ``allocator.greedy_increments``.
+
+The selection is exact on the float32 values it is given; the jnp oracle
+(`ref.py`) computes the identical result with a sort, which the
+interpret-mode CPU test asserts elementwise.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["gain_topr_pallas"]
+
+_LANE = 128
+
+
+def _gain_topr_kernel(cand_ref, budget_ref, take_ref):
+    x = cand_ref[0]  # (Jp, Np) float32; masked/padding entries are 0
+    budget = budget_ref[0, 0]  # int32
+    budget_f = budget.astype(jnp.float32)
+    pos = x > 0.0
+    pos_row = jnp.sum(jnp.where(pos, 1.0, 0.0), axis=0, keepdims=True)  # (1, Np)
+    total_pos = jnp.sum(pos_row)
+    use_all = total_pos <= budget_f
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = lo + (hi - lo) // 2  # int32-overflow-safe midpoint
+        t = jax.lax.bitcast_convert_type(mid, jnp.float32)
+        c = jnp.sum(jnp.where(pos & (x >= t), 1.0, 0.0))
+        enough = c >= budget_f  # still >= budget entries at/above mid
+        return jnp.where(enough, mid, lo), jnp.where(enough, hi, mid)
+
+    # Invariant: count(>= bitcast(lo)) >= budget > count(>= bitcast(hi)).
+    # 31 halvings of the positive-float bit range leave hi == lo + 1, so
+    # bitcast(lo) IS the budget-th largest positive gain.
+    lo, hi = jax.lax.fori_loop(
+        0, 31, body, (jnp.int32(1), jnp.int32(0x7F800000))
+    )
+    thresh = jax.lax.bitcast_convert_type(lo, jnp.float32)
+    strict = jnp.sum(jnp.where(pos & (x > thresh), 1.0, 0.0), axis=0, keepdims=True)
+    ties = jnp.sum(jnp.where(pos & (x == thresh), 1.0, 0.0), axis=0, keepdims=True)
+    rem = budget_f - jnp.sum(strict)
+    np_ = ties.shape[-1]
+    row = jax.lax.broadcasted_iota(jnp.float32, (np_, np_), 0)
+    col = jax.lax.broadcasted_iota(jnp.float32, (np_, np_), 1)
+    lower = jnp.where(row < col, 1.0, 0.0)  # strictly-lower mask
+    before = jnp.dot(ties, lower, preferred_element_type=jnp.float32)
+    extra = jnp.clip(jnp.minimum(ties, rem - before), 0.0, None)
+    take = jnp.where(use_all, pos_row, strict + extra)
+    take_ref[...] = jnp.where(budget > 0, take, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gain_topr_pallas(cand, budget, *, interpret: bool = False):
+    """``cand [B, N, J]`` + ``budget [B]`` -> ``take [B, N]`` int32.
+
+    Computes in float32 (counts are exact integers far below 2^24).
+    Operators and gain columns are padded to the 128-lane tile; padding
+    rides through as zero gains, which the positivity mask discards.
+    """
+    if cand.ndim != 3:
+        raise ValueError(f"cand must be [B, N, J], got shape {cand.shape}")
+    b, n, j = cand.shape
+    n_pad = (-n) % _LANE
+    j_pad = (-j) % 8
+    x = jnp.pad(
+        jnp.asarray(cand, dtype=jnp.float32), ((0, 0), (0, n_pad), (0, j_pad))
+    )
+    x = jnp.swapaxes(x, 1, 2)  # (B, Jp, Np): gains on sublanes, ops on lanes
+    bud = jnp.asarray(budget, dtype=jnp.int32).reshape(b, 1)
+    take = pl.pallas_call(
+        _gain_topr_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, j + j_pad, n + n_pad), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n + n_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n + n_pad), jnp.float32),
+        interpret=interpret,
+    )(x, bud)
+    return take[:, :n].astype(jnp.int32)

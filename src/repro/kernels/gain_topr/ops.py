@@ -1,0 +1,22 @@
+"""Dispatch wrapper: Pallas on TPU, jnp sort-based oracle elsewhere."""
+
+from __future__ import annotations
+
+import jax
+
+from . import kernel as _kernel, ref as _ref
+
+__all__ = ["gain_topr"]
+
+
+def gain_topr(cand, budget, *, interpret: bool = False, force_kernel: bool = False):
+    """[B, N, J] candidate gains + [B] budgets -> [B, N] int32 takes.
+
+    Pallas kernel on TPU (or with ``force_kernel=True, interpret=True`` on
+    CPU — repo kernel idiom, see kernels/__init__.py); jnp oracle
+    elsewhere.  The kernel selects in float32; the oracle follows the
+    input dtype (float64 under enable_x64).
+    """
+    if force_kernel or jax.default_backend() == "tpu":
+        return _kernel.gain_topr_pallas(cand, budget, interpret=interpret)
+    return _ref.gain_topr(cand, budget)

@@ -45,13 +45,23 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-__all__ = ["BatchArrays", "BatchSimResult", "BatchQueueSim", "service_capacity"]
+__all__ = [
+    "BatchArrays",
+    "BatchSimResult",
+    "BatchQueueSim",
+    "service_capacity",
+    "window_step_fn",
+]
 
 
-def service_capacity(k, mu, group, alpha):
+def service_capacity(k, mu, group, alpha, speed=None):
     """Per-operator service rate (tuples/sec) at allocation ``k`` — replica
-    ``k * mu``, chip-gang ``mu * k * eff(k)`` (DESIGN.md §2)."""
+    ``k * mu``, chip-gang ``mu * k * eff(k)`` (DESIGN.md §2).  ``speed``
+    applies per-operator machine-class factors (heterogeneous pools,
+    paper §III-A): processors of class s serve at ``s * mu``."""
     k = np.maximum(np.asarray(k, dtype=np.float64), 0.0)
+    if speed is not None:
+        mu = mu * speed
     with np.errstate(divide="ignore", invalid="ignore"):
         eff = 1.0 / (1.0 + alpha * (k - 1.0))
     return np.where(group, mu * k * eff, mu * k)
@@ -104,10 +114,17 @@ class BatchArrays:
     # no mask (padding lanes carry zero arrivals, routing, and capacity,
     # so they stay identically zero).
     active: np.ndarray
+    # [B, N] machine-class speed factors (None = homogeneous reference
+    # class).  Scales service capacity; the controller applies the same
+    # factors on the model side (DESIGN.md §14).
+    speed: np.ndarray | None = None
 
     def __post_init__(self):
         t, b, n = self.ext.shape
-        for name in ("routing", "mu", "group", "alpha", "cap_queue", "active"):
+        names = ["routing", "mu", "group", "alpha", "cap_queue", "active"]
+        if self.speed is not None:
+            names.append("speed")
+        for name in names:
             got = getattr(self, name).shape
             want = (b, n, n) if name == "routing" else (b, n)
             if got != want:
@@ -158,22 +175,24 @@ class BatchSimResult:
         admitted_rate = (self.offered - self.dropped) / span
         self.per_op_wait = little_wait(self.q_mean, admitted_rate, self.dt)
 
-    def sojourn(self, k, mu, group, alpha) -> np.ndarray:
+    def sojourn(self, k, mu, group, alpha, speed=None) -> np.ndarray:
         """[B] visit-sum E[T] estimate at allocation ``k`` (Eq. 3 analogue):
         sum_i admitted_rate_i * (W_i + S_i) / external admitted rate, with
         S_i the per-tuple service time at the (possibly gang) allocation.
         NaN for scenarios that admitted no external tuples."""
-        cap = service_capacity(k, mu, group, alpha)
-        svc = per_op_service_time(cap, mu, group)
+        cap = service_capacity(k, mu, group, alpha, speed)
+        svc = per_op_service_time(cap, mu if speed is None else mu * speed, group)
         span = max(self.span, 1e-12)
         admitted_rate = (self.offered - self.dropped) / span
         ext_rate = self.ext_admitted / span
         return visit_sum_sojourn(admitted_rate, self.per_op_wait, svc, ext_rate)
 
-    def saturated(self, k, mu, group, alpha, *, drop_fraction: float = 0.01) -> np.ndarray:
+    def saturated(
+        self, k, mu, group, alpha, speed=None, *, drop_fraction: float = 0.01
+    ) -> np.ndarray:
         """[B, N] bool: offered load at/above capacity, or sustained
         shedding — mirrors ``DRSScheduler.overloaded_mask``."""
-        cap = service_capacity(k, mu, group, alpha)
+        cap = service_capacity(k, mu, group, alpha, speed)
         hot = (self.arrival_rate >= cap * (1.0 - 1e-9)) | (
             self.drop_rate > drop_fraction * np.maximum(cap, 1e-300)
         )
@@ -223,7 +242,24 @@ def _np_window(q, served_prev, ext_chunk, warm, cap_serve_dt, cap_queue, routing
 _JIT_CACHE: dict = {}
 
 
-def _jax_window_fn(interpret: bool, force_kernel: bool):
+def window_step_fn(*, interpret: bool = False, force_kernel: bool = False):
+    """The batch simulator's window step in controller-consumable form.
+
+    Returns ``window(q, served_prev, ext_chunk, warm, cap_serve_dt,
+    cap_queue, routing)`` — a pure, traceable function advancing a whole
+    control window (one lax.scan over the chunk's steps, each step's
+    bounded-queue update dispatching through ``kernels/queue_step``) that
+    the fused control loop (core/controller.py ``make_fused_loop``) scans
+    *again* across ticks.  It carries **dual accumulators**: the ungated
+    window sums (the §13 measurement surface a synthetic snapshot is made
+    of) and the ``warm``-weighted sums (the whole-run post-warmup
+    aggregates), so one pass serves both consumers.
+
+    Output tuple (15): ``q, served_prev`` (state), then ungated
+    ``offered, served, dropped, ext_admitted, ext_offered, q_int, q_max``
+    ([B, N] / [B]), then warm-gated ``offered, served, dropped,
+    ext_admitted, ext_offered, q_int``.
+    """
     import jax
     import jax.numpy as jnp
 
@@ -235,7 +271,8 @@ def _jax_window_fn(interpret: bool, force_kernel: bool):
         caps_flat = cap_serve_dt.reshape(-1)
 
         def step(carry, xs):
-            q, served_prev, offered, served_sum, dropped, ext_adm, ext_off, q_int, q_max = carry
+            (q, served_prev, offered, served_sum, dropped, ext_adm, ext_off,
+             q_int, q_max, w_off, w_srv, w_drop, w_ea, w_eo, w_qi) = carry
             ext_t, w = xs
             routed = jnp.einsum("bi,bij->bj", served_prev, routing)
             inflow = ext_t + routed
@@ -248,24 +285,48 @@ def _jax_window_fn(interpret: bool, force_kernel: bool):
             drop_t = drop_f.reshape(b, n).astype(q.dtype)
             admitted = inflow - drop_t
             adm_frac = jnp.where(inflow > 0, admitted / jnp.maximum(inflow, 1e-300), 1.0)
+            ext_adm_t = (ext_t * adm_frac).sum(axis=-1)
+            ext_off_t = ext_t.sum(axis=-1)
             carry = (
                 q_next,
                 served,
-                offered + w * inflow,
-                served_sum + w * served,
-                dropped + w * drop_t,
-                ext_adm + w * (ext_t * adm_frac).sum(axis=-1),
-                ext_off + w * ext_t.sum(axis=-1),
-                q_int + w * q_next,
+                offered + inflow,
+                served_sum + served,
+                dropped + drop_t,
+                ext_adm + ext_adm_t,
+                ext_off + ext_off_t,
+                q_int + q_next,
                 jnp.maximum(q_max, q_next),
+                w_off + w * inflow,
+                w_srv + w * served,
+                w_drop + w * drop_t,
+                w_ea + w * ext_adm_t,
+                w_eo + w * ext_off_t,
+                w_qi + w * q_next,
             )
             return carry, None
 
         zeros = jnp.zeros_like(q)
-        init = (q, served_prev, zeros, zeros, zeros,
-                jnp.zeros(b, q.dtype), jnp.zeros(b, q.dtype), zeros, zeros)
+        zb = jnp.zeros(b, q.dtype)
+        init = (q, served_prev, zeros, zeros, zeros, zb, zb, zeros, zeros,
+                zeros, zeros, zeros, zb, zb, zeros)
         out, _ = jax.lax.scan(step, init, (ext_chunk, warm))
         return out
+
+    return window
+
+
+def _jax_window_fn(interpret: bool, force_kernel: bool):
+    """BatchQueueSim's window view: the warm-weighted accumulator set of
+    :func:`window_step_fn` (plus the unweighted peak backlog)."""
+    dual = window_step_fn(interpret=interpret, force_kernel=force_kernel)
+
+    def window(q, served_prev, ext_chunk, warm, cap_serve_dt, cap_queue, routing):
+        (q1, sp1, _off, _srv, _drop, _ea, _eo, _qi, q_max,
+         w_off, w_srv, w_drop, w_ea, w_eo, w_qi) = dual(
+            q, served_prev, ext_chunk, warm, cap_serve_dt, cap_queue, routing
+        )
+        return (q1, sp1, w_off, w_srv, w_drop, w_ea, w_eo, w_qi, q_max)
 
     return window
 
@@ -323,7 +384,7 @@ class BatchQueueSim:
 
     def capacity(self, k) -> np.ndarray:
         a = self.arrays
-        return service_capacity(k, a.mu, a.group, a.alpha)
+        return service_capacity(k, a.mu, a.group, a.alpha, a.speed)
 
     # ------------------------------------------------------------------ #
     def step_window(self, k, n_steps: int | None = None) -> dict:

@@ -276,6 +276,12 @@ class Scenario:
     # static budget — the controller then scales out/in (paper Fig. 10).
     negotiated: bool = False
     machine_size: int = 4
+    # Heterogeneous machine classes (paper §III-A): per-operator speed
+    # factor of the machine class serving that operator (1.0 = reference).
+    # Scales the simulator's service capacity, the model's effective mu
+    # (core/controller.py), and — for ``negotiated`` scenarios — tags the
+    # leased machines' ``speed``.
+    speed_factors: Mapping[str, float] | None = None
 
     _ARRIVAL_KINDS = ("exponential", "uniform", "deterministic")
     _SERVICE_KINDS = ("exponential", "uniform", "deterministic", "lognormal")
@@ -286,6 +292,15 @@ class Scenario:
         unknown = set(self.traces) - set(self.graph.names)
         if unknown:
             raise ValueError(f"traces for unknown operators: {sorted(unknown)}")
+        if self.speed_factors is not None:
+            unknown = set(self.speed_factors) - set(self.graph.names)
+            if unknown:
+                raise ValueError(
+                    f"speed_factors for unknown operators: {sorted(unknown)}"
+                )
+            bad = {k: v for k, v in self.speed_factors.items() if not v > 0}
+            if bad:
+                raise ValueError(f"speed_factors must be > 0, got {bad}")
         if self.arrival_kind not in self._ARRIVAL_KINDS:
             raise ValueError(
                 f"unknown arrival_kind {self.arrival_kind!r}; expected one of "
@@ -342,9 +357,19 @@ class Scenario:
         rng = np.random.default_rng(np.random.SeedSequence([self.seed, 0xA881]))
         return rng.poisson(rates * self.dt).astype(np.float64)
 
+    def speed_vector(self) -> np.ndarray | None:
+        """[N] machine-class speed factors in graph order (None when the
+        scenario is homogeneous)."""
+        if self.speed_factors is None:
+            return None
+        return np.array(
+            [float(self.speed_factors.get(n, 1.0)) for n in self.graph.names]
+        )
+
     def mean_topology(self):
         """Model Topology at the traces' time-averaged rates (the "true"
-        model a controller should converge to)."""
+        model a controller should converge to), with machine-class speed
+        factors applied to the per-processor service rates."""
         sources = {}
         lam0 = self.graph.lam0_vector()
         for i, name in enumerate(self.graph.names):
@@ -353,7 +378,13 @@ class Scenario:
                 sources[name] = trace.mean_rate(self.horizon, self.seed)
             elif lam0[i] > 0:
                 sources[name] = float(lam0[i])
-        return self.graph.with_sources(sources).topology()
+        g = self.graph.with_sources(sources)
+        if self.speed_factors is None:
+            return g.topology()
+        return g.topology(
+            {op.name: op.mu * float(self.speed_factors.get(op.name, 1.0))
+             for op in g.ops}
+        )
 
     # -- DES compilation -------------------------------------------------- #
     def simulator(self, k, *, measurer=None):
@@ -362,7 +393,15 @@ class Scenario:
         from ..api.session import _group_effective_services
         from .des import ArrivalProcess, NetworkSimulator, ServiceProcess, SimConfig
 
-        top = self.graph.topology()
+        # Machine-class speed factors scale the DES per-processor rates,
+        # matching the batch sim's capacity rule and the controller model.
+        if self.speed_factors is None:
+            top = self.graph.topology()
+        else:
+            top = self.graph.topology(
+                {op.name: op.mu * float(self.speed_factors.get(op.name, 1.0))
+                 for op in self.graph.ops}
+            )
         k_vec = self.graph.k_vector(k)
         arrivals = []
         changes: list[tuple[float, int, float]] = []
@@ -442,6 +481,8 @@ def pack_scenarios(scenarios: Sequence[Scenario]) -> BatchArrays:
     alpha = np.zeros((b, n))
     cap_queue = np.full((b, n), np.inf)
     active = np.zeros((b, n), dtype=bool)
+    speed = np.ones((b, n))
+    heterogeneous = False
     for bi, s in enumerate(scenarios):
         ni = s.graph.n
         ext[:, bi, :ni] = s.sample_arrivals()
@@ -453,6 +494,10 @@ def pack_scenarios(scenarios: Sequence[Scenario]) -> BatchArrays:
         active[bi, :ni] = True
         if s.queue_capacity is not None and s.policy.sheds:
             cap_queue[bi, :ni] = float(s.queue_capacity)
+        sv = s.speed_vector()
+        if sv is not None:
+            speed[bi, :ni] = sv
+            heterogeneous = True
     return BatchArrays(
         ext=ext,
         routing=routing,
@@ -463,6 +508,7 @@ def pack_scenarios(scenarios: Sequence[Scenario]) -> BatchArrays:
         dt=dt,
         warmup_steps=int(round(scenarios[0].warmup / dt)),
         active=active,
+        speed=speed if heterogeneous else None,
     )
 
 

@@ -1,14 +1,21 @@
 #!/usr/bin/env python
-"""Regenerate the committed golden control-loop traces (DESIGN.md §13).
+"""Regenerate (or verify) the committed golden control-loop traces
+(DESIGN.md §13).
 
 One command, from the repo root:
 
-    PYTHONPATH=src python tests/golden/regen.py
+    PYTHONPATH=src python tests/golden/regen.py           # rewrite fixtures
+    PYTHONPATH=src python tests/golden/regen.py --check   # drift guard (CI)
 
-Rewrites ``vld_control_trace.json`` and ``fpd_control_trace.json`` next to
-this script.  Run it after an *intentional* change to the scheduler /
-batch simulator decision path, eyeball the diff (actions and allocations
-are the contract), and commit the new fixtures together with the change.
+The default mode rewrites ``vld_control_trace.json`` and
+``fpd_control_trace.json`` next to this script.  Run it after an
+*intentional* change to the scheduler / batch simulator decision path,
+eyeball the diff (actions and allocations are the contract), and commit
+the new fixtures together with the change.
+
+``--check`` regenerates into a temporary directory and diffs against the
+committed fixtures, exiting non-zero on any difference — CI runs it so a
+silent decision-logic change can't leave stale goldens behind.
 ``tests/test_golden_traces.py`` replays the same scenarios and diffs.
 """
 
@@ -17,19 +24,52 @@ from __future__ import annotations
 import json
 import pathlib
 import sys
+import tempfile
 
 HERE = pathlib.Path(__file__).resolve().parent
 
 
-def main() -> None:
+def generate(out_dir: pathlib.Path) -> list[pathlib.Path]:
     from repro.streaming.scenarios import control_trace, fpd_scenario, vld_scenario
 
+    paths = []
     for name, scenario in (("vld", vld_scenario()), ("fpd", fpd_scenario())):
         trace = control_trace([scenario], tick_interval=10.0)
-        path = HERE / f"{name}_control_trace.json"
+        path = out_dir / f"{name}_control_trace.json"
         path.write_text(json.dumps(trace, indent=2, sort_keys=True) + "\n")
-        ticks = len(trace["scenarios"][name]["actions"])
-        print(f"wrote {path} ({ticks} ticks)")
+        paths.append(path)
+    return paths
+
+
+def main() -> int:
+    check = "--check" in sys.argv[1:]
+    if not check:
+        for path in generate(HERE):
+            ticks = len(
+                next(iter(json.loads(path.read_text())["scenarios"].values()))["actions"]
+            )
+            print(f"wrote {path} ({ticks} ticks)")
+        return 0
+    drifted = []
+    with tempfile.TemporaryDirectory(prefix="golden-check-") as tmp:
+        for fresh in generate(pathlib.Path(tmp)):
+            committed = HERE / fresh.name
+            if not committed.exists():
+                drifted.append(f"{committed} is missing")
+            elif committed.read_text() != fresh.read_text():
+                drifted.append(f"{committed} differs from a fresh regeneration")
+    if drifted:
+        for line in drifted:
+            print(f"GOLDEN DRIFT: {line}", file=sys.stderr)
+        print(
+            "The committed golden traces no longer match the decision path.\n"
+            "If the change is intentional, regenerate and commit them:\n"
+            "    PYTHONPATH=src python tests/golden/regen.py",
+            file=sys.stderr,
+        )
+        return 1
+    print("golden traces match a fresh regeneration")
+    return 0
 
 
 if __name__ == "__main__":

@@ -57,3 +57,99 @@ def test_mixed_pool_stabilises_all_operators():
     lam = top.arrival_rates
     for i in range(top.n):
         assert het.k[i] * mu_eff[i] > lam[i]  # stable everywhere
+
+
+# --------------------------------------------------------------------------- #
+# Controller wiring (ISSUE 5): machine-class speed factors scale per-op mu
+# in the batched decide path, consistent with the scalar heterogeneous math
+# --------------------------------------------------------------------------- #
+def test_uniform_speed_pool_matches_speed_factor_scheduler():
+    """A uniform-speed pool is the exact case of the mean-speed M/M/k
+    approximation: assign_heterogeneous at speed s == Algorithm 1 on
+    mu*s == DRSScheduler(speed_factors=s) Program 4."""
+    import numpy as np
+
+    from repro.core import OperatorSpec
+    from repro.core.measurer import MeasurementSnapshot
+    from repro.core.scheduler import DRSScheduler, SchedulerConfig
+
+    top = vld()
+    s, k_total = 0.5, 30
+    het = assign_heterogeneous(top, SpeedPool.of({s: k_total}))
+    scaled = Topology(
+        [OperatorSpec(op.name, op.mu * s) for op in top.operators],
+        top.lam0, top.routing,
+    )
+    hom = assign_processors(scaled, k_total)
+    np.testing.assert_array_equal(het.k, hom.k)
+    assert het.expected_sojourn == pytest.approx(hom.expected_sojourn, rel=1e-9)
+
+    routing = top.routing
+    names = [op.name for op in top.operators]
+    sched = DRSScheduler(
+        names, routing, het.k.copy(),
+        SchedulerConfig(k_max=k_total),
+        speed_factors=[s] * top.n,
+    )
+    lam = top.arrival_rates
+    snap = MeasurementSnapshot.from_rates(
+        lam, [op.mu for op in top.operators], top.lam0_total, 1.0, 60.0
+    )
+    d = sched.tick_from(snap, 60.0)
+    assert d.action in ("none", "rebalance")
+    np.testing.assert_array_equal(d.k_target, het.k)
+    assert d.model_sojourn_target == pytest.approx(het.expected_sojourn, rel=1e-9)
+
+
+def test_scenario_speed_factors_match_prescaled_mus():
+    """Zoo wiring: a Scenario with speed_factors decides bit-identically
+    to the same scenario with the factors baked into the declared mus
+    (sim capacity, synthetic measurement, and model all agree)."""
+    import numpy as np
+
+    from repro.api.graph import AppGraph, Edge, OpDef
+    from repro.api.session import ScenarioRunner
+    from repro.streaming.scenarios import ArrivalTrace, Scenario
+
+    def graph(scale):
+        return AppGraph(
+            [OpDef("a", mu=2.0 * scale[0]), OpDef("b", mu=5.0 * scale[1]),
+             OpDef("c", mu=50.0 * scale[2])],
+            [Edge("a", "b"), Edge("b", "c")],
+            {"a": 10.0},
+        )
+
+    factors = (0.5, 1.5, 1.0)
+    base = dict(
+        traces={"a": ArrivalTrace(kind="flash", rate=8.0, peak=16.0,
+                                  t_on=10.0, t_off=20.0)},
+        seed=3, horizon=30.0, warmup=5.0, dt=0.05, k_max=32, t_max=None,
+    )
+    hetero = Scenario(
+        name="hetero", graph=graph((1.0, 1.0, 1.0)),
+        speed_factors={"a": factors[0], "b": factors[1], "c": factors[2]},
+        **base,
+    )
+    baked = Scenario(name="baked", graph=graph(factors), **base)
+
+    r_het = ScenarioRunner([hetero], tick_interval=5.0, backend="numpy")
+    r_bak = ScenarioRunner([baked], tick_interval=5.0, backend="numpy")
+    rep_het = r_het.run()[0]
+    rep_bak = r_bak.run()[0]
+    assert list(rep_het.actions) == list(rep_bak.actions)
+    assert rep_het.k_final == rep_bak.k_final
+    np.testing.assert_array_equal(r_het.k, r_bak.k)
+
+
+def test_negotiated_scenario_lease_carries_machine_speed():
+    """The scenario zoo's optional leases tag machines with the class
+    speed (Machine.speed) when the scenario is heterogeneous."""
+    from repro.api.session import ScenarioRunner
+    from repro.streaming.scenarios import vld_scenario
+
+    s = vld_scenario(speed_factors={"extract": 0.5, "match": 0.5, "aggregate": 0.5})
+    runner = ScenarioRunner([s], tick_interval=10.0, backend="numpy")
+    neg = runner.negotiators[0]
+    assert neg is not None
+    machines = neg.pool.leased + neg.pool.available
+    assert machines and all(m.speed == 0.5 for m in machines)
