@@ -72,9 +72,17 @@ def run() -> list[tuple[str, float, str]]:
     np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
     naive_bytes = 4 * (bb * h * s * s)  # the materialised logits the kernel avoids
     rows.append(("flash_attention_ref", t_ref * 1e6, "us jnp (materialises S^2)"))
+    # Interpret-mode flash attention is slower than the jnp oracle on CPU
+    # (the online-softmax recurrence serialises badly when interpreted);
+    # the row is REFERENCE-ONLY — a correctness artifact excluded from any
+    # speedup gate — until the ROADMAP item "Make the Pallas kernels real:
+    # compiled-path perf, not interpret-mode parity" lands compiled
+    # numbers.  Don't read it as a regression.
     rows.append((
         "flash_attention_pallas_interp", t_k * 1e6,
-        f"us interpret; avoids {naive_bytes/2**20:.0f} MiB logits round-trip",
+        "us interpret REFERENCE-ONLY (excluded from speedup gates; "
+        f"correctness run, avoids {naive_bytes/2**20:.0f} MiB logits "
+        "round-trip; compiled-path bench tracked in ROADMAP)",
     ))
 
     # decode attention

@@ -14,6 +14,9 @@ Prints ``name,value,derived`` CSV rows per benchmark.  Mapping:
                             batch-decide vs per-scenario loop, >= 20x gate)
   bench_kernels          -> kernel layer (no paper table; TPU hot spots)
   bench_serving          -> beyond-paper: DRS-scheduled LLM serving
+  bench_forecast         -> beyond-paper: proactive forecast/MPC control
+                            vs the reactive trigger (miss/drop/cost gates,
+                            confidence-gate fallback, twin-vs-jit parity)
 
 Every run also persists its rows to a ``BENCH_<name>.json`` artifact at
 the repo root (schema ``{bench, rows, smoke, timestamp}``); the CI
@@ -35,6 +38,7 @@ import traceback
 
 from . import (
     bench_controller,
+    bench_forecast,
     bench_kernels,
     bench_model_accuracy,
     bench_overhead,
@@ -55,6 +59,7 @@ SUITES = [
     ("controller", bench_controller),
     ("kernels", bench_kernels),
     ("serving", bench_serving),
+    ("forecast", bench_forecast),
 ]
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent

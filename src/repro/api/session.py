@@ -295,6 +295,7 @@ class DRSSession:
         cost_model: RebalanceCostModel | None = None,
         executable_cache: ExecutableCache | None = None,
         on_decision=None,
+        proactive=None,
     ):
         self.graph = graph
         self.backend = backend
@@ -303,12 +304,13 @@ class DRSSession:
         self.cost_model = cost_model
         self.executable_cache = executable_cache
         self.on_decision = on_decision
+        self.proactive = proactive  # forecast/MPC mode (MPCConfig | True)
         self.scheduler: DRSScheduler | None = None
 
     # Construction ------------------------------------------------------ #
     @classmethod
     def bind(cls, graph: AppGraph, backend: Any = "des", **kwargs) -> "DRSSession":
-        session_keys = ("config", "negotiator", "cost_model", "executable_cache", "on_decision")
+        session_keys = ("config", "negotiator", "cost_model", "executable_cache", "on_decision", "proactive")
         session_kw = {k: kwargs.pop(k) for k in session_keys if k in kwargs}
         if isinstance(backend, str):
             try:
@@ -361,6 +363,7 @@ class DRSSession:
             scaling=scaling,
             group_alpha=group_alpha,
             on_decision=self.on_decision,
+            proactive=self.proactive,
         )
 
     def start(
@@ -383,7 +386,9 @@ class DRSSession:
         if self.scheduler is None:
             raise RuntimeError("session not started; call start() first")
         decision = self.scheduler.tick(now)
-        if decision.action in ("rebalance", "scale_out", "scale_in", "overloaded"):
+        if decision.action in (
+            "rebalance", "scale_out", "scale_in", "overloaded", "proactive"
+        ):
             # "overloaded" with no feasible target keeps the current k.
             if decision.k_target is not None:
                 self.backend.apply_allocation(self.graph.k_dict(decision.k_target))
@@ -796,6 +801,12 @@ class ScenarioReport:
     drop_rate: float  # post-warmup shed fraction of offered load
     mean_sojourn: float  # batchsim visit-sum E[T] estimate at k_final
     saturated: tuple  # operator names at/above capacity post-warmup
+    # Per-tick time series (dict of equal-length lists): "t", "k_total"
+    # (allocation in force after the tick = the per-tick provisioned
+    # cost), "miss" (post-warmup deadline-miss mask), "sojourn", "warm",
+    # and — in proactive mode — "mpc_used" / "confident".  None for an
+    # uncontrolled sweep.
+    trajectory: dict | None = None
 
     def as_dict(self) -> dict:
         return {
@@ -809,6 +820,7 @@ class ScenarioReport:
             "drop_rate": self.drop_rate,
             "mean_sojourn": self.mean_sojourn,
             "saturated": list(self.saturated),
+            "trajectory": self.trajectory,
         }
 
 
@@ -846,6 +858,7 @@ class ScenarioRunner:
         interpret: bool = False,
         force_kernel: bool = False,
         fused: bool | None = None,
+        proactive=None,
     ):
         from ..streaming.batchsim import BatchQueueSim
         from ..streaming.scenarios import pack_allocations, pack_scenarios
@@ -856,6 +869,14 @@ class ScenarioRunner:
         self.backend = backend
         self.interpret = interpret
         self.force_kernel = force_kernel
+        # Forecast/MPC mode (DESIGN.md §15): True -> default MPCConfig;
+        # an MPCConfig customizes predictor/horizon/gate knobs.
+        if proactive is True:
+            from ..forecast.mpc import MPCConfig
+
+            proactive = MPCConfig()
+        self.proactive_cfg = proactive
+        self._proactive_ctl = None
         self.arrays = pack_scenarios(self.scenarios)
         self.sim = BatchQueueSim(
             self.arrays, backend=backend, interpret=interpret, force_kernel=force_kernel
@@ -910,6 +931,10 @@ class ScenarioRunner:
         self._miss = np.zeros(len(self.scenarios), dtype=np.int64)
         self._windows_warm = 0
         self._fused_result = None
+        self._traj: list[dict[str, list]] = [
+            {"t": [], "k_total": [], "miss": [], "sojourn": [], "warm": []}
+            for _ in self.scenarios
+        ]
 
     def _negotiator_for(self, s, k0: np.ndarray):
         """The scenario zoo's optional machine lease: ``negotiated``
@@ -1009,27 +1034,50 @@ class ScenarioRunner:
             [np.nan if s.t_max is None else s.t_max for s in self.scenarios]
         )
         hooks = self._ensure_hooks()
+        pc = None
+        if self.controlled and self.proactive_cfg is not None:
+            from ..forecast.mpc import ProactiveController
+
+            pc = ProactiveController.create(
+                len(self.scenarios), self.static.n, self.proactive_cfg,
+                cap_queue=a.cap_queue, span=self._steps_per_tick * a.dt,
+            )
+            self._proactive_ctl = pc
+            for tr in self._traj:
+                tr["mpc_used"] = []
+                tr["confident"] = []
         while self.sim.step_index < a.steps:
             w = self.sim.step_window(self.k, self._steps_per_tick)
             warm = w["t0"] >= self.scenarios[0].warmup
             if warm:
                 self._windows_warm += 1
             meas, sojourn = self._window_measurement(w)
+            with np.errstate(invalid="ignore"):
+                miss_mask = (sojourn > t_max) & warm
             if warm:
-                with np.errstate(invalid="ignore"):
-                    self._miss += (sojourn > t_max).astype(np.int64)
-            if not self.controlled:
-                continue
-            batch = ctl.tick_batch(
-                meas, self.k, self.static, self._params(), ensure=hooks
-            )
-            for bi, row in enumerate(batch.rows):
-                s = self.scenarios[bi]
-                self.decisions[bi].append(
-                    self._to_decision(bi, row, meas, batch.errors[bi])
+                self._miss += miss_mask.astype(np.int64)
+            if self.controlled:
+                batch = ctl.tick_batch(
+                    meas, self.k, self.static, self._params(), ensure=hooks,
+                    proactive=pc, q_backlog=w["q_final"],
                 )
-                if row.applied:
-                    self.k[bi, : s.graph.n] = row.k_next
+                for bi, row in enumerate(batch.rows):
+                    s = self.scenarios[bi]
+                    self.decisions[bi].append(
+                        self._to_decision(bi, row, meas, batch.errors[bi])
+                    )
+                    if row.applied:
+                        self.k[bi, : s.graph.n] = row.k_next
+            for bi, s in enumerate(self.scenarios):
+                tr = self._traj[bi]
+                tr["t"].append(float(self.sim.now))
+                tr["k_total"].append(int(self.k[bi, : s.graph.n].sum()))
+                tr["miss"].append(bool(miss_mask[bi]))
+                tr["sojourn"].append(float(sojourn[bi]))
+                tr["warm"].append(bool(warm))
+                if pc is not None:
+                    tr["mpc_used"].append(bool(pc.mpc_used[bi]))
+                    tr["confident"].append(bool(pc.confident[bi]))
         return self.reports()
 
     def _run_fused(self) -> list[ScenarioReport]:
@@ -1043,6 +1091,7 @@ class ScenarioRunner:
             steps_per_tick=self._steps_per_tick,
             warmup_seconds=self.scenarios[0].warmup,
             interpret=self.interpret, force_kernel=self.force_kernel,
+            proactive=self.proactive_cfg,
         )
         out = {key: np.asarray(v) for key, v in run(self.k).items()}
         self.k = out["k_final"].astype(np.int64)
@@ -1050,8 +1099,16 @@ class ScenarioRunner:
         self._miss = np.where(
             [s.t_max is not None for s in self.scenarios], out["miss"], 0
         ).astype(np.int64)
+        if self.proactive_cfg is not None:
+            for tr in self._traj:
+                tr["mpc_used"] = []
+                tr["confident"] = []
+        t_max_arr = np.array(
+            [np.nan if s.t_max is None else s.t_max for s in self.scenarios]
+        )
         for ti in range(n_ticks):
             now = (ti + 1) * self._steps_per_tick * a.dt
+            warm = (ti * self._steps_per_tick * a.dt) >= self.scenarios[0].warmup
             for bi, s in enumerate(self.scenarios):
                 action = ctl.ACTIONS[int(out["codes"][ti, bi])]
                 k_row = out["k"][ti, bi, : s.graph.n].astype(np.int64)
@@ -1065,6 +1122,18 @@ class ScenarioRunner:
                     float(out["sojourn"][ti, bi]),
                     reason="fused jit decide",
                 ))
+                tr = self._traj[bi]
+                soj = float(out["sojourn"][ti, bi])
+                with np.errstate(invalid="ignore"):
+                    missed = bool((soj > t_max_arr[bi]) and warm)
+                tr["t"].append(now)
+                tr["k_total"].append(int(k_row.sum()))
+                tr["miss"].append(missed)
+                tr["sojourn"].append(soj)
+                tr["warm"].append(bool(warm))
+                if self.proactive_cfg is not None:
+                    tr["mpc_used"].append(bool(out["mpc_used"][ti, bi]))
+                    tr["confident"].append(bool(out["confident"][ti, bi]))
         warm_steps = max(a.steps - a.warmup_steps, 0)
         self._fused_result = BatchSimResult(
             offered=out["offered"], served=out["served"], dropped=out["dropped"],
@@ -1112,6 +1181,7 @@ class ScenarioRunner:
                     saturated=tuple(
                         nm for i, nm in enumerate(s.graph.names) if sat[bi, i]
                     ),
+                    trajectory=self._traj[bi] if self._traj[bi]["t"] else None,
                 )
             )
         return out

@@ -80,6 +80,8 @@ __all__ = [
 ]
 
 # Action vocabulary (codes shared by the numpy twin and the jit path).
+# "proactive" (appended last so earlier codes stay stable) marks an
+# allocation committed by the forecast/MPC planner ahead of any trigger.
 ACTIONS = (
     "none",
     "rebalance",
@@ -88,6 +90,7 @@ ACTIONS = (
     "infeasible",
     "overloaded",
     "rebalance_hint",
+    "proactive",
 )
 _CODE = {name: i for i, name in enumerate(ACTIONS)}
 
@@ -193,6 +196,17 @@ class ControllerParams:
 # --------------------------------------------------------------------------- #
 # Vectorized measurement plane
 # --------------------------------------------------------------------------- #
+def _source_mask(static: ControllerStatic) -> np.ndarray:
+    """[B, N] bool: declared external-arrival entry points (no in-edges;
+    a scenario with none falls back to operator 0 — the scalar rule)."""
+    in_deg = static.base_routing.sum(axis=1)
+    src = (in_deg == 0) & static.active
+    for bi in range(static.batch):
+        if not src[bi].any():
+            src[bi, 0] = True
+    return src
+
+
 def effective_capacity(k, mu_eff, group, alpha) -> np.ndarray:
     """Per-operator service capacity at allocation ``k`` with the group
     efficiency curve applied (k floored at 1, mirroring the scalar
@@ -534,6 +548,8 @@ def tick_batch(
     ensure: Sequence[Callable[[int], int] | None] | None = None,
     cost_models: Sequence[RebalanceCostModel | None] | None = None,
     raise_errors: bool = False,
+    proactive=None,
+    q_backlog: np.ndarray | None = None,
 ) -> BatchDecision:
     """One control tick for the whole batch (the float64 numpy twin).
 
@@ -545,6 +561,14 @@ def tick_batch(
     Model hard failures become per-row ``errors`` entries with an
     ``"infeasible"`` row (the ScenarioRunner semantics) unless
     ``raise_errors`` (the scalar-scheduler semantics).
+
+    ``proactive`` (a :class:`~repro.forecast.mpc.ProactiveController`)
+    switches on the forecast/MPC plane (DESIGN.md §15): the predictor
+    state advances on every complete tick, and scenarios whose forecast
+    passes the confidence gate — and are NOT currently overloaded (the
+    §11 trigger always wins) — commit the MPC plan instead of the
+    reactive decide.  ``q_backlog [B, N]`` seeds the planner's rollout
+    with the actual queue backlog (0 when the caller has no probe).
     """
     b, n = static.batch, static.n
     k_current = np.asarray(k_current, dtype=np.int64)
@@ -558,12 +582,76 @@ def tick_batch(
         capped = capped_mask_batch(overloaded, static.base_routing, static.active)
     complete = meas.complete(static.active)
 
+    use = np.zeros(b, dtype=bool)
+    k_plan = et_hold = et_plan = need_mpc = None
+    if proactive is not None:
+        from ..forecast.mpc import forecast_step, mpc_plan
+
+        t_arr = np.nan_to_num(params.t_max, nan=np.inf)
+        k_hi = int(max(params.k_max.max(), k_current.max(), 1))
+        q0 = (
+            np.zeros((b, n)) if q_backlog is None
+            else np.asarray(q_backlog, dtype=np.float64)
+        )
+        proactive.state, lam_pred, conf = forecast_step(
+            proactive.state, meas.lam_hat, static.active, proactive.cfg
+        )
+        plan_kw = dict(
+            mu=np.asarray(meas.mu_hat, dtype=np.float64),
+            group=static.group, alpha=static.alpha, speed=static.speed,
+            active=static.active, src_mask=_source_mask(static),
+            cap_queue=proactive.cap_queue, t_max=t_arr,
+            span=proactive.span, cfg=proactive.cfg, k_hi=k_hi,
+        )
+        k_maxes = params.k_max.astype(np.int64).copy()
+        k_plan, any_ok, et_hold, et_plan, need_mpc = mpc_plan(
+            lam_pred, q0, k_current, k_max=k_maxes, **plan_kw
+        )
+        use = conf & any_ok & complete & ~hot & np.isfinite(t_arr)
+        # Negotiator leases: grow toward the Program-6-at-peak demand,
+        # release (with hysteresis) when it shrinks; one re-plan pass if
+        # any lease moved (the twin-side analogue of scale_out/scale_in).
+        if ensure is not None:
+            hyst = proactive.cfg.scale_in_hysteresis
+            moved = False
+            for bi in range(b):
+                hook = ensure[bi]
+                if hook is None or not use[bi]:
+                    continue
+                tgt, lease = int(need_mpc[bi]), int(k_maxes[bi])
+                if tgt > lease or tgt < hyst * lease:
+                    new_lease = int(hook(max(tgt, 1)))
+                    if new_lease != lease:
+                        k_maxes[bi] = new_lease
+                        moved = True
+            if moved:
+                k_plan, any_ok, et_hold, et_plan, need_mpc = mpc_plan(
+                    lam_pred, q0, k_current, k_max=k_maxes, **plan_kw
+                )
+                use = conf & any_ok & complete & ~hot & np.isfinite(t_arr)
+        proactive.mpc_used = use.copy()
+        proactive.confident = conf.copy()
+        proactive.need = np.asarray(need_mpc).copy()
+
     rows: list[RowDecision] = []
     errors: list = [None] * b
     for bi in range(b):
         ni = int(static.n_ops[bi])
         k_row = k_current[bi, :ni]
         k_max = int(params.k_max[bi])
+        if use[bi]:
+            k_new = np.asarray(k_plan[bi, :ni], dtype=np.int64)
+            changed = bool((k_new != k_row).any())
+            rows.append(RowDecision(
+                "proactive" if changed else "none",
+                k_new.copy() if changed else k_row.copy(),
+                k_new, int(k_maxes[bi]), float(et_hold[bi]), float(et_plan[bi]),
+                int(need_mpc[bi]), None,
+                "MPC plan committed ahead of trigger" if changed
+                else "proactive hold",
+                applied=changed,
+            ))
+            continue
         if not complete[bi]:
             rows.append(RowDecision(
                 "none", k_row.copy(), None, k_max, float("nan"), None, None,
@@ -658,14 +746,7 @@ def make_decide_jax(
     alpha = jnp.asarray(static.alpha)
     active = jnp.asarray(static.active)
     speed = jnp.asarray(static.speed)
-    # External arrivals enter at declared sources (no in-edges); a
-    # scenario with none falls back to operator 0 (scalar rule).
-    in_deg = static.base_routing.sum(axis=1)
-    src = (in_deg == 0) & static.active
-    for bi in range(b):
-        if not src[bi].any():
-            src[bi, 0] = True
-    src_mask = jnp.asarray(src)
+    src_mask = jnp.asarray(_source_mask(static))
     t_max = jnp.asarray(np.nan_to_num(params.t_max, nan=np.inf))
     k_max = jnp.asarray(params.k_max)
     min_improvement = jnp.asarray(params.min_improvement)
@@ -821,6 +902,7 @@ def make_fused_loop(
     warmup_seconds: float | None = None,
     interpret: bool = False,
     force_kernel: bool = False,
+    proactive=None,
 ):
     """Fuse simulate -> measure -> decide -> apply into ONE jit program.
 
@@ -834,6 +916,15 @@ def make_fused_loop(
     ticks.  Outputs per-tick stacked decisions plus the post-warmup
     whole-run aggregates (the BatchSimResult surface).
 
+    ``proactive`` (a :class:`~repro.forecast.mpc.MPCConfig`) extends the
+    scan carry with the forecast state (DESIGN.md §15): each tick also
+    advances the rate predictors, runs the MPC planner from the live
+    queue backlog, and — where the confidence gate is open, no operator
+    is overloaded, and some candidate meets T_max — commits the plan over
+    the reactive decide.  The whole predict -> simulate -> price ->
+    commit step stays inside the one ``lax.scan`` (outputs gain
+    ``mpc_used`` / ``confident`` per tick).
+
     Negotiated scenarios cannot ride in here (leases are Python): callers
     keep those on the numpy twin path.
     """
@@ -846,8 +937,10 @@ def make_fused_loop(
     dt = float(arrays.dt)
     steps = arrays.steps
     n_ticks = steps // steps_per_tick
+    k_hi_res = int(k_hi if k_hi is not None else max(int(params.k_max.max()), 1))
     decide = make_decide_jax(
-        static, params, k_hi=k_hi, interpret=interpret, force_kernel=force_kernel
+        static, params, k_hi=k_hi_res, interpret=interpret,
+        force_kernel=force_kernel,
     )
     window = window_step_fn(interpret=interpret, force_kernel=force_kernel)
     mu = jnp.asarray(arrays.mu)  # reference-class priors (decide applies speed)
@@ -880,13 +973,31 @@ def make_fused_loop(
     )
     span = steps_per_tick * dt
 
+    active = jnp.asarray(static.active)
+    if proactive is not None:
+        from ..forecast.mpc import forecast_init_state, forecast_step, mpc_plan
+        from ..kernels.gain_topr import ops as topr_ops
+
+        src_mask = jnp.asarray(_source_mask(static))
+        group_b = jnp.asarray(static.group)
+        k_max_j = jnp.asarray(params.k_max)
+        fstate0 = forecast_init_state(b, n, proactive, xp=jnp, dtype=mu.dtype)
+
+        def topr(c, bud):
+            return topr_ops.gain_topr(
+                c, bud, interpret=interpret, force_kernel=force_kernel
+            )
+
     def capacity_of(k):
         kf = jnp.maximum(k.astype(mu.dtype), 0.0)
         eff = 1.0 / (1.0 + alpha * (kf - 1.0))
         return jnp.where(group, mu * speed * kf * eff, mu * speed * kf)
 
     def tick(carry, xs):
-        q, served_prev, k, acc = carry
+        if proactive is not None:
+            q, served_prev, k, acc, fstate = carry
+        else:
+            q, served_prev, k, acc = carry
         ext_chunk, warm_chunk, warm_tick = xs
         cap_serve_dt = capacity_of(k) * dt
         out = window(
@@ -919,6 +1030,57 @@ def make_fused_loop(
         code, k_next, et_cur, et_target, applied = decide(
             lam_hat, mu, drop_hat, lam0, k
         )
+        if proactive is not None:
+            # Forecast plane: advance the predictors on this window's
+            # measured rates, plan over the horizon from the live
+            # backlog, and commit where the gate is open and the §11
+            # trigger is quiet (the trigger always outranks the plan).
+            fstate, lam_pred, conf = forecast_step(
+                fstate, lam_hat, active, proactive, xp=jnp
+            )
+            k_plan, any_ok, et_hold, et_plan, _need = mpc_plan(
+                lam_pred, q1, k, mu=mu, group=group_b, alpha=alpha,
+                speed=speed, active=active, src_mask=src_mask,
+                cap_queue=cap_queue, t_max=t_max, k_max=k_max_j,
+                span=span, cfg=proactive, k_hi=k_hi_res, xp=jnp, topr=topr,
+            )
+            # Inline recompute of the trigger + completeness (decide owns
+            # them internally; same formulas as the twin's gating).
+            k_floor = jnp.maximum(k.astype(jnp.int32), 1).astype(lam_hat.dtype)
+            eff_t = 1.0 / (1.0 + alpha * (k_floor - 1.0))
+            capacity = jnp.where(
+                group, mu_eff * k_floor * eff_t, mu_eff * k_floor
+            )
+            valid = jnp.isfinite(lam_hat) & jnp.isfinite(mu_eff) & (mu_eff > 0)
+            drops_t = jnp.nan_to_num(drop_hat, nan=0.0)
+            hot = (
+                valid & active & (
+                    (lam_hat >= capacity * (1.0 - 1e-9))
+                    | (drops_t > DROP_TRIGGER_FRACTION * capacity)
+                )
+            ).any(axis=-1)
+            complete = (
+                jnp.where(active, jnp.isfinite(lam_hat) & jnp.isfinite(mu), True)
+                .all(axis=-1)
+                & jnp.isfinite(lam0)
+            )
+            use = conf & any_ok & complete & ~hot & jnp.isfinite(t_max)
+            changed = use & (
+                (k_plan.astype(jnp.int32) != k) & active
+            ).any(axis=-1)
+            k_next = jnp.where(
+                use[:, None],
+                jnp.where(active, k_plan.astype(jnp.int32), k),
+                k_next,
+            )
+            code = jnp.where(
+                use,
+                jnp.where(changed, _CODE["proactive"], _CODE["none"]),
+                code,
+            )
+            applied = jnp.where(use, changed, applied)
+            et_cur = jnp.where(use, et_hold, et_cur)
+            et_target = jnp.where(use, et_plan, et_target)
         new_acc = tuple(
             a + w for a, w in zip(
                 acc[:6],
@@ -926,20 +1088,24 @@ def make_fused_loop(
             )
         ) + (jnp.maximum(acc[6], q_max),)
         ys = (code, k_next, sojourn, et_cur, et_target, applied, warm_tick)
+        if proactive is not None:
+            ys = ys + (use, conf)
+            return (q1, served_prev1, k_next, new_acc, fstate), ys
         return (q1, served_prev1, k_next, new_acc), ys
 
     def run(k0):
         zeros = jnp.zeros((b, n))
         acc0 = (zeros, zeros, zeros, jnp.zeros(b), jnp.zeros(b), zeros, zeros)
         init = (zeros, zeros, jnp.asarray(k0, dtype=jnp.int32), acc0)
-        (q, served_prev, k, acc), ys = jax.lax.scan(
-            tick, init, (ext, warm, tick_warm)
-        )
-        codes, k_hist, sojourns, et_cur, et_target, applied, warm_flags = ys
+        if proactive is not None:
+            init = init + (fstate0,)
+        final, ys = jax.lax.scan(tick, init, (ext, warm, tick_warm))
+        q, served_prev, k, acc = final[:4]
+        codes, k_hist, sojourns, et_cur, et_target, applied, warm_flags = ys[:7]
         miss = (
             (sojourns > t_max[None, :]) & (warm_flags[:, None] > 0)
         ).sum(axis=0)
-        return {
+        out = {
             "codes": codes, "k": k_hist, "sojourn": sojourns,
             "et_cur": et_cur, "et_target": et_target, "applied": applied,
             "miss": miss, "warm_windows": (warm_flags > 0).sum(),
@@ -948,5 +1114,9 @@ def make_fused_loop(
             "ext_admitted": acc[3], "ext_offered": acc[4],
             "q_int": acc[5], "q_max": acc[6],
         }
+        if proactive is not None:
+            out["mpc_used"] = ys[7]
+            out["confident"] = ys[8]
+        return out
 
     return jax.jit(run), n_ticks

@@ -104,6 +104,8 @@ class SchedulerDecision:
     # | "rebalance_hint" (no model-driven change, but the StragglerDetector
     #   flagged slow instances — advisory: the CSP layer should consider
     #   replacing/rebalancing the named (operator, instance) pairs)
+    # | "proactive" (forecast/MPC plane committed an allocation ahead of
+    #   any trigger — DESIGN.md §15; only with a `proactive=` scheduler)
     action: str
     k_current: np.ndarray
     k_target: np.ndarray | None
@@ -151,6 +153,7 @@ class DRSScheduler:
         speed_factors: list[float] | None = None,
         on_decision: Callable[[SchedulerDecision], None] | None = None,
         straggler_detector: "StragglerDetector | None" = None,
+        proactive=None,
     ):
         self.names = list(operator_names)
         self.base_routing = np.asarray(base_routing, dtype=np.float64)
@@ -177,6 +180,18 @@ class DRSScheduler:
             )
         self._group = np.array([s == "group" for s in self.scaling], dtype=bool)
         self._alpha = np.asarray(self.group_alpha, dtype=np.float64)
+        # Forecast/MPC plane (DESIGN.md §15): `proactive=True` enables the
+        # default MPCConfig; an MPCConfig customizes it.  The live shell is
+        # one B=1 lane of the batched proactive tick (no backlog probe on
+        # the live measurement path, so the planner's rollout starts at 0).
+        self._proactive = None
+        if proactive is not None:
+            from ..forecast.mpc import MPCConfig, ProactiveController
+
+            cfg = MPCConfig() if proactive is True else proactive
+            self._proactive = ProactiveController.create(
+                1, len(self.names), cfg, span=config.tick_interval
+            )
         self.history: list[SchedulerDecision] = []
         self.rebalance_count = 0
 
@@ -258,8 +273,94 @@ class DRSScheduler:
             self._emit(d)
             return d
         overloaded = self.overloaded_mask(snap)
+        if self._proactive is not None:
+            d = self._tick_proactive(snap, now, overloaded)
+            if d is not None:
+                return d
         top = self.topology_from(snap, overloaded)
         return self.decide(top, snap, now, overloaded=overloaded)
+
+    def _tick_proactive(
+        self, snap: MeasurementSnapshot, now: float, overloaded: np.ndarray
+    ) -> SchedulerDecision | None:
+        """One proactive tick (DESIGN.md §15): advance the predictors on
+        this (complete) snapshot, and commit the MPC plan when the
+        confidence gate is open, the §11 trigger is quiet, and some
+        candidate meets T_max.  Returns ``None`` to fall back to the
+        reactive decide (which also handles the gate-closed case)."""
+        from ..forecast.mpc import forecast_step, mpc_plan
+
+        pc = self._proactive
+        n = len(self.names)
+        active = np.ones((1, n), dtype=bool)
+        pc.state, lam_pred, conf = forecast_step(
+            pc.state, np.asarray(snap.lam_hat, dtype=np.float64)[None],
+            active, pc.cfg,
+        )
+        pc.confident = conf.copy()
+        pc.mpc_used = np.zeros(1, dtype=bool)
+        if self.config.t_max is None or overloaded.any() or not conf[0]:
+            return None
+        in_deg = self.base_routing.sum(axis=0)
+        src = in_deg == 0
+        if not src.any():
+            src[0] = True
+        speed = (
+            np.ones(n) if self.speed_factors is None else self.speed_factors
+        )
+        k_max = self._k_max()
+        plan_kw = dict(
+            mu=np.asarray(snap.mu_hat, dtype=np.float64)[None],
+            group=self._group[None], alpha=self._alpha[None],
+            speed=np.asarray(speed, dtype=np.float64)[None], active=active,
+            src_mask=src[None], cap_queue=pc.cap_queue,
+            t_max=np.array([float(self.config.t_max)]), span=pc.span,
+            cfg=pc.cfg,
+        )
+        q0 = np.zeros((1, n))
+        k_cur = self.k_current[None]
+        k_hi = int(max(k_max, self.k_current.max(), 1))
+        k_plan, any_ok, et_hold, et_plan, need = mpc_plan(
+            lam_pred, q0, k_cur, k_max=np.array([k_max]), k_hi=k_hi, **plan_kw
+        )
+        pc.need = np.asarray(need).copy()
+        if self.negotiator is not None:
+            tgt = int(need[0])
+            if tgt > k_max or tgt < pc.cfg.scale_in_hysteresis * k_max:
+                self.negotiator.ensure(max(tgt, 1))
+                new_k_max = self._k_max()
+                if new_k_max != k_max:
+                    k_max = new_k_max
+                    k_hi = int(max(k_max, self.k_current.max(), 1))
+                    k_plan, any_ok, et_hold, et_plan, need = mpc_plan(
+                        lam_pred, q0, k_cur, k_max=np.array([k_max]),
+                        k_hi=k_hi, **plan_kw
+                    )
+                    pc.need = np.asarray(need).copy()
+        if not any_ok[0]:
+            return None  # no candidate meets T_max: reactive fallback
+        pc.mpc_used = np.ones(1, dtype=bool)
+        k_new = np.asarray(k_plan[0], dtype=np.int64)
+        changed = bool((k_new != self.k_current).any())
+        if changed:
+            self.k_current = k_new.copy()
+            self.rebalance_count += 1
+        d = SchedulerDecision(
+            now,
+            "proactive" if changed else "none",
+            self.k_current.copy(),
+            k_new,
+            k_max,
+            float(et_hold[0]),
+            float(et_plan[0]),
+            snap.sojourn_hat,
+            reason=(
+                "MPC plan committed ahead of trigger" if changed
+                else "proactive hold"
+            ),
+        )
+        self._emit(d)
+        return d
 
     def _k_max(self) -> int:
         if self.config.k_max is not None:

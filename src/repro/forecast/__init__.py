@@ -1,0 +1,51 @@
+"""Predictive arrival modeling + MPC lookahead planning (DESIGN.md §15).
+
+Layers: :mod:`repro.forecast.predictors` (EWMA / Holt / seasonal rate
+forecasters + MASE/sMAPE trust tracking) and :mod:`repro.forecast.mpc`
+(horizon pricing of a small candidate-allocation set, confidence-gated
+against the reactive controller).  Integration lives in
+``core/controller.py`` (``proactive=`` on ``tick_batch`` /
+``make_fused_loop``), ``core/scheduler.py`` and ``api/session.py``.
+"""
+
+from .mpc import (
+    MPCConfig,
+    ProactiveController,
+    forecast_init_state,
+    forecast_step,
+    gain_topr_np,
+    mpc_plan,
+    sojourn_table_arrays,
+)
+from .predictors import (
+    PREDICTOR_KINDS,
+    PredictorParams,
+    confidence,
+    error_init,
+    error_update,
+    forecast_rates,
+    history_init,
+    history_push,
+    mase,
+    smape,
+)
+
+__all__ = [
+    "PREDICTOR_KINDS",
+    "PredictorParams",
+    "forecast_rates",
+    "error_init",
+    "error_update",
+    "mase",
+    "smape",
+    "confidence",
+    "history_init",
+    "history_push",
+    "MPCConfig",
+    "ProactiveController",
+    "forecast_init_state",
+    "forecast_step",
+    "gain_topr_np",
+    "mpc_plan",
+    "sojourn_table_arrays",
+]

@@ -1,0 +1,235 @@
+"""Per-operator arrival-rate forecasters over the measurement history
+window (DESIGN.md §15).
+
+Every predictor is one pure batched function ``(history [B, W, N],
+horizon) -> predicted rates [B, H, N]`` written once against an ``xp``
+array namespace, so the float64 numpy twin and the jit jax path execute
+the *identical* float-op sequence (the batchsim twin/jit discipline):
+``forecast_rates(h, H, params)`` is the twin, ``forecast_rates(h, H,
+params, xp=jnp)`` traces under ``jax.jit`` / ``lax.scan`` with no shape
+dynamism (the smoothing recursions unroll over the static window length).
+
+Kinds (:class:`PredictorParams`):
+
+* ``ewma`` — simple exponential smoothing; the h-step forecast is the
+  level (flat), the right prior for noisy-but-stationary rates;
+* ``holt`` — Holt double-exponential (level + trend); the h-step
+  forecast extrapolates the trend (clamped at 0), which is what lets the
+  MPC planner see a flash-crowd ramp *before* the overload trigger;
+* ``seasonal`` — seasonal-naive over ``season`` ticks: the forecast for
+  phase p is the observation one season back at the same phase — the
+  diurnal-aware variant (a sinusoid with period = ``season`` ticks is
+  predicted exactly after one full season of history).
+
+Online error tracking (:func:`error_update` etc.) keeps per-operator
+MASE and sMAPE of the one-step-ahead forecasts; :func:`confidence`
+collapses them into the planner's per-scenario trust gate — the MPC
+layer (forecast/mpc.py) falls back to the reactive ``decide_single``
+path whenever the gate is closed (DESIGN.md §15 fallback semantics).
+
+State is a flat tuple of arrays (no objects), so it slots directly into
+the fused loop's ``lax.scan`` carry (core/controller.py).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = [
+    "PREDICTOR_KINDS",
+    "PredictorParams",
+    "forecast_rates",
+    "error_init",
+    "error_update",
+    "mase",
+    "smape",
+    "confidence",
+    "history_init",
+    "history_push",
+]
+
+PREDICTOR_KINDS = ("ewma", "holt", "seasonal")
+
+# sMAPE denominator guard: a 0-rate observation met by a 0-rate forecast
+# scores 0 error, not 0/0.
+_SMAPE_EPS = 1e-9
+# MASE denominator guard (a perfectly constant history has zero naive
+# error; any model error then rightly blows the ratio up).
+_MASE_EPS = 1e-12
+
+
+@dataclass(frozen=True)
+class PredictorParams:
+    """One predictor's knobs (static: baked into the jit program)."""
+
+    kind: str = "holt"
+    alpha: float = 0.5  # level smoothing weight (newest observation)
+    beta: float = 0.3  # trend smoothing weight (holt)
+    season: int = 0  # season length in ticks (seasonal; >= 2)
+
+    def __post_init__(self):
+        if self.kind not in PREDICTOR_KINDS:
+            raise ValueError(
+                f"unknown predictor kind {self.kind!r}; expected one of "
+                f"{PREDICTOR_KINDS}"
+            )
+        if not 0.0 < self.alpha <= 1.0 or not 0.0 <= self.beta <= 1.0:
+            raise ValueError(
+                f"need 0 < alpha <= 1 and 0 <= beta <= 1; got "
+                f"alpha={self.alpha}, beta={self.beta}"
+            )
+        if self.kind == "seasonal" and self.season < 2:
+            raise ValueError(
+                f"seasonal predictor needs season >= 2 ticks, got {self.season}"
+            )
+
+
+def _ewma_level(history, alpha: float, xp):
+    """[B, N] smoothed level after one pass over the window."""
+    level = history[:, 0, :]
+    for t in range(1, history.shape[1]):
+        level = alpha * history[:, t, :] + (1.0 - alpha) * level
+    return level
+
+
+def _holt_state(history, alpha: float, beta: float, xp):
+    """[B, N] (level, trend) after one Holt pass over the window."""
+    level = history[:, 0, :]
+    trend = xp.zeros_like(level)
+    for t in range(1, history.shape[1]):
+        y = history[:, t, :]
+        new_level = alpha * y + (1.0 - alpha) * (level + trend)
+        trend = beta * (new_level - level) + (1.0 - beta) * trend
+        level = new_level
+    return level, trend
+
+
+def forecast_rates(history, horizon: int, params: PredictorParams, xp=np):
+    """``history [B, W, N]`` (oldest first) -> predicted rates ``[B, H, N]``.
+
+    ``history[:, -1]`` is the latest observed per-operator rate;
+    prediction step h (0-based) targets tick ``now + h + 1``.  Pure and
+    shape-static: jit-able with ``xp=jax.numpy``.  Negative
+    extrapolations clamp to 0 (rates).  The seasonal kind requires
+    ``W >= season``; callers size the window accordingly
+    (:class:`~repro.forecast.mpc.MPCConfig` validates it).
+    """
+    b, w, n = history.shape
+    if horizon < 1:
+        raise ValueError(f"need horizon >= 1, got {horizon}")
+    if params.kind == "ewma":
+        level = _ewma_level(history, params.alpha, xp)
+        return xp.broadcast_to(level[:, None, :], (b, horizon, n)) + xp.zeros(
+            (b, horizon, n), dtype=history.dtype
+        )
+    if params.kind == "holt":
+        level, trend = _holt_state(history, params.alpha, params.beta, xp)
+        steps = xp.arange(1, horizon + 1, dtype=history.dtype)
+        return xp.maximum(
+            level[:, None, :] + steps[None, :, None] * trend[:, None, :], 0.0
+        )
+    # seasonal-naive: phase h of the next season = the same phase one
+    # season back.  Static integer gather, so twin/jit agreement is exact.
+    s = params.season
+    if w < s:
+        raise ValueError(f"seasonal window {w} shorter than season {s}")
+    idx = np.array([w - s + (h % s) for h in range(horizon)], dtype=np.int64)
+    return history[:, idx, :]
+
+
+# --------------------------------------------------------------------------- #
+# Online forecast-error tracking (MASE / sMAPE per operator)
+# --------------------------------------------------------------------------- #
+def error_init(b: int, n: int, xp=np, dtype=np.float64):
+    """Zeroed tracker state: ``(prev_pred [B,N], prev_y [B,N],
+    abs_err_sum [B,N], naive_err_sum [B,N], smape_sum [B,N], n_obs [B])``.
+
+    ``n_obs`` counts observations; comparison i is only scored once both
+    a prior prediction and a prior observation exist (n_obs >= 2 at
+    scoring time), so the zero-initialised ``prev_*`` never pollute the
+    sums.  A flat tuple of arrays: drops straight into a lax.scan carry.
+    """
+    z = xp.zeros((b, n), dtype=dtype)
+    return (z, z, z, z, z, xp.zeros(b, dtype=dtype))
+
+
+def error_update(state, pred_next, y, xp=np):
+    """Score last tick's one-step forecast against the observed ``y``
+    [B, N], then arm ``pred_next`` (this tick's h=1 forecast) for the
+    next scoring round.  Returns the new state tuple."""
+    prev_pred, prev_y, abs_err, naive_err, smape_sum, n_obs = state
+    scored = xp.where(n_obs >= 1.0, 1.0, 0.0)[:, None]
+    err = xp.abs(prev_pred - y)
+    naive = xp.abs(y - prev_y)
+    sm = 2.0 * err / (xp.abs(prev_pred) + xp.abs(y) + _SMAPE_EPS)
+    return (
+        pred_next,
+        y,
+        abs_err + scored * err,
+        naive_err + scored * naive,
+        smape_sum + scored * sm,
+        n_obs + 1.0,
+    )
+
+
+def mase(state, xp=np):
+    """[B, N] mean absolute scaled error: model error relative to the
+    naive (persistence) forecaster.  < 1 = beats persistence."""
+    return state[2] / xp.maximum(state[3], _MASE_EPS)
+
+
+def smape(state, xp=np):
+    """[B, N] symmetric MAPE of the one-step forecasts, in [0, 2]."""
+    scored = xp.maximum(state[5] - 1.0, 1.0)[:, None]
+    return state[4] / scored
+
+
+def confidence(
+    state,
+    active,
+    *,
+    min_scored: int,
+    mase_gate: float,
+    smape_gate: float,
+    xp=np,
+):
+    """[B] bool: is this scenario's forecast trustworthy?
+
+    Requires at least ``min_scored`` scored comparisons AND the
+    active-lane mean MASE / sMAPE under their gates.  The MPC planner
+    treats a closed gate as "fall back to the reactive decide"
+    (DESIGN.md §15) — an unforecastable trace (e.g. an adversarial MMPP
+    switcher) keeps sMAPE high and never hands control to the planner.
+    """
+    m = mase(state, xp=xp)
+    s = smape(state, xp=xp)
+    act = xp.where(active, 1.0, 0.0)
+    cnt = xp.maximum(act.sum(axis=-1), 1.0)
+    m_mean = (act * m).sum(axis=-1) / cnt
+    s_mean = (act * s).sum(axis=-1) / cnt
+    scored = state[5] - 1.0
+    return (scored >= float(min_scored)) & (m_mean <= mase_gate) & (s_mean <= smape_gate)
+
+
+# --------------------------------------------------------------------------- #
+# Rolling history window
+# --------------------------------------------------------------------------- #
+def history_init(b: int, w: int, n: int, xp=np, dtype=np.float64):
+    """Zeroed ``[B, W, N]`` rate-history window (oldest first)."""
+    return xp.zeros((b, w, n), dtype=dtype)
+
+
+def history_push(hist, y, n_obs, xp=np):
+    """Append observation ``y [B, N]`` to the window.
+
+    The very first observation (``n_obs < 1``) back-fills the whole
+    window, so the smoothing recursions start from the first real rate
+    instead of a zero ramp — without this, the first W forecasts would
+    chase a phantom step from 0.
+    """
+    rolled = xp.concatenate([hist[:, 1:, :], y[:, None, :]], axis=1)
+    filled = xp.broadcast_to(y[:, None, :], hist.shape)
+    first = (n_obs < 1.0)[:, None, None]
+    return xp.where(first, filled, rolled)

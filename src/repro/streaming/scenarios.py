@@ -124,9 +124,15 @@ class ArrivalTrace:
         return rates
 
     def mean_rate(self, horizon: float, seed: int = 0, dt: float = 0.5) -> float:
-        """Time-averaged rate over [0, horizon] (model-side lam0)."""
-        grid = np.arange(0.0, max(horizon, dt), dt)
-        return float(np.mean(self.rates(grid, seed)))
+        """Time-averaged rate over [0, horizon] (model-side lam0): the
+        trapezoid integral of :meth:`rates` on a ``dt`` grid divided by
+        the covered span — the contract the forecast predictors train
+        against (tests/test_scenarios.py locks the <= 1e-9 agreement)."""
+        span = max(horizon, dt)
+        grid = np.arange(0.0, span + dt / 2.0, dt)
+        r = self.rates(grid, seed)
+        integral = 0.5 * (r[1:] + r[:-1]).sum() * dt
+        return float(integral / (grid[-1] - grid[0]))
 
     def des_schedule(self, horizon: float, seed: int = 0, dt: float = 1.0):
         """(initial ArrivalProcess kwargs, [(t, rate), ...] mid-run changes)
@@ -581,22 +587,51 @@ def fpd_scenario(**kw) -> Scenario:
     return Scenario(**defaults)
 
 
-def control_trace(scenarios: Sequence[Scenario], *, tick_interval: float = 10.0) -> dict:
+def control_trace(
+    scenarios: Sequence[Scenario],
+    *,
+    tick_interval: float = 10.0,
+    proactive=None,
+) -> dict:
     """JSON-able decision trace of the full control loop over ``scenarios``
     (the golden-trace surface, DESIGN.md §13).
 
     Runs the scenarios through :class:`~repro.api.session.ScenarioRunner`
     on the numpy float64 twin — fully deterministic given the scenario
-    seeds — and records, per scenario, the scheduler's action sequence and
-    the allocation in force after every tick.  Regenerate the committed
+    seeds — and records, per scenario, the scheduler's action sequence,
+    the allocation in force after every tick, and the per-tick trajectory
+    (provisioned k, miss mask — the reactive-vs-proactive lead-time
+    surface).  ``proactive`` (True or an
+    :class:`~repro.forecast.mpc.MPCConfig`) switches on the forecast/MPC
+    plane, which is just as deterministic — the proactive golden fixture
+    proves predictor + planner replayability.  Regenerate the committed
     fixtures with ``PYTHONPATH=src python tests/golden/regen.py``.
     """
     from ..api.session import ScenarioRunner
 
-    runner = ScenarioRunner(scenarios, tick_interval=tick_interval, backend="numpy")
+    runner = ScenarioRunner(
+        scenarios, tick_interval=tick_interval, backend="numpy",
+        proactive=proactive,
+    )
     reports = runner.run()
+
+    def _traj(tr):
+        if tr is None:
+            return None
+        out = {
+            "t": [round(float(t), 9) for t in tr["t"]],
+            "k_total": list(tr["k_total"]),
+            "miss": [int(m) for m in tr["miss"]],
+            "warm": [int(w) for w in tr["warm"]],
+        }
+        if "mpc_used" in tr:
+            out["mpc_used"] = [int(u) for u in tr["mpc_used"]]
+            out["confident"] = [int(c) for c in tr["confident"]]
+        return out
+
     return {
         "tick_interval": tick_interval,
+        "proactive": proactive is not None,
         "scenarios": {
             r.name: {
                 "actions": list(r.actions),
@@ -606,6 +641,7 @@ def control_trace(scenarios: Sequence[Scenario], *, tick_interval: float = 10.0)
                 "drop_rate": round(r.drop_rate, 9),
                 "mean_sojourn": round(r.mean_sojourn, 9),
                 "deadline_miss_rate": round(r.deadline_miss_rate, 9),
+                "trajectory": _traj(r.trajectory),
             }
             for r in reports
         },

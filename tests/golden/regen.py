@@ -7,11 +7,13 @@ One command, from the repo root:
     PYTHONPATH=src python tests/golden/regen.py           # rewrite fixtures
     PYTHONPATH=src python tests/golden/regen.py --check   # drift guard (CI)
 
-The default mode rewrites ``vld_control_trace.json`` and
-``fpd_control_trace.json`` next to this script.  Run it after an
-*intentional* change to the scheduler / batch simulator decision path,
-eyeball the diff (actions and allocations are the contract), and commit
-the new fixtures together with the change.
+The default mode rewrites ``vld_control_trace.json``,
+``fpd_control_trace.json``, and ``vld_proactive_control_trace.json``
+(the forecast/MPC plane on the flash-crowd VLD — proving predictor +
+planner replayability, DESIGN.md §15) next to this script.  Run it
+after an *intentional* change to the scheduler / batch simulator /
+forecast decision path, eyeball the diff (actions and allocations are
+the contract), and commit the new fixtures together with the change.
 
 ``--check`` regenerates into a temporary directory and diffs against the
 committed fixtures, exiting non-zero on any difference — CI runs it so a
@@ -29,12 +31,43 @@ import tempfile
 HERE = pathlib.Path(__file__).resolve().parent
 
 
+def entries():
+    """(fixture name, scenario, proactive cfg | None) — the one list both
+    this script and tests/test_golden_traces.py replay from."""
+    import numpy as np
+
+    from repro.forecast import MPCConfig, PredictorParams
+    from repro.streaming.scenarios import ArrivalTrace, fpd_scenario, vld_scenario
+
+    mpc = MPCConfig(
+        horizon=3, window=12, min_scored=2, headroom=1.1,
+        scale_in_hysteresis=0.7,
+        predictor=PredictorParams(kind="holt", alpha=0.6, beta=0.4),
+    )
+    # Flash crowd as a steep ramp (the benchmarks/bench_forecast.py flash
+    # scenario): forecastable, so the MPC plane actually commits plans
+    # ahead of the trigger instead of just holding.
+    t5 = np.arange(0.0, 231.0, 5.0)
+    ramp = np.interp(t5, [0, 80, 120, 140, 170, 230], [10, 10, 30, 30, 12, 12])
+    flash_vld = vld_scenario(
+        name="vld_proactive",
+        traces={"extract": ArrivalTrace(kind="replay", samples=tuple(ramp),
+                                        sample_dt=5.0)},
+        t_max=1.0, queue_capacity=40, machine_size=1, horizon=230.0,
+    )
+    return [
+        ("vld", vld_scenario(), None),
+        ("fpd", fpd_scenario(), None),
+        ("vld_proactive", flash_vld, mpc),
+    ]
+
+
 def generate(out_dir: pathlib.Path) -> list[pathlib.Path]:
-    from repro.streaming.scenarios import control_trace, fpd_scenario, vld_scenario
+    from repro.streaming.scenarios import control_trace
 
     paths = []
-    for name, scenario in (("vld", vld_scenario()), ("fpd", fpd_scenario())):
-        trace = control_trace([scenario], tick_interval=10.0)
+    for name, scenario, proactive in entries():
+        trace = control_trace([scenario], tick_interval=10.0, proactive=proactive)
         path = out_dir / f"{name}_control_trace.json"
         path.write_text(json.dumps(trace, indent=2, sort_keys=True) + "\n")
         paths.append(path)

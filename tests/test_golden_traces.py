@@ -1,5 +1,6 @@
 """Golden-trace regression: the committed VLD / FPD control-loop decision
-traces must replay bit-for-bit on the decision surface (ISSUE 4).
+traces — and the proactive forecast/MPC trace on the flash-crowd VLD —
+must replay bit-for-bit on the decision surface (ISSUE 4 + §15).
 
 The fixtures live in ``tests/golden/*.json``; regenerate after an
 *intentional* decision-path change with::
@@ -11,28 +12,39 @@ allocations are exact; scalar metrics compare with a small tolerance so a
 benign float reordering doesn't fail the suite.
 """
 
+import importlib.util
 import json
 import pathlib
 
 import pytest
 
-from repro.streaming.scenarios import control_trace, fpd_scenario, vld_scenario
+from repro.streaming.scenarios import control_trace
 
 GOLDEN = pathlib.Path(__file__).resolve().parent / "golden"
 
+# The fixture list (scenario + proactive cfg per name) lives in regen.py
+# so the drift guard and this replay can never disagree about what a
+# fixture is.
+_spec = importlib.util.spec_from_file_location("golden_regen", GOLDEN / "regen.py")
+_regen = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(_regen)
 
-def _replay(name, scenario):
+ENTRIES = {name: (scenario, proactive) for name, scenario, proactive in _regen.entries()}
+
+
+def _replay(name):
     path = GOLDEN / f"{name}_control_trace.json"
     want = json.loads(path.read_text())
-    got = control_trace([scenario], tick_interval=want["tick_interval"])
+    scenario, proactive = ENTRIES[name]
+    got = control_trace(
+        [scenario], tick_interval=want["tick_interval"], proactive=proactive
+    )
     return want["scenarios"][name], got["scenarios"][name]
 
 
-@pytest.mark.parametrize(
-    "name,factory", [("vld", vld_scenario), ("fpd", fpd_scenario)]
-)
-def test_golden_trace_replays(name, factory):
-    want, got = _replay(name, factory())
+@pytest.mark.parametrize("name", ["vld", "fpd", "vld_proactive"])
+def test_golden_trace_replays(name):
+    want, got = _replay(name)
     assert got["actions"] == want["actions"], (
         f"{name} control-loop action sequence drifted; if intentional, "
         "regenerate with: PYTHONPATH=src python tests/golden/regen.py"
@@ -43,6 +55,10 @@ def test_golden_trace_replays(name, factory):
     )
     assert got["provisioned_total"] == want["provisioned_total"]
     assert got["optimal_total"] == want["optimal_total"]
+    assert got["trajectory"] == want["trajectory"], (
+        f"{name} per-tick trajectory (k/miss/mpc_used) drifted; if "
+        "intentional, regenerate the goldens"
+    )
     for metric in ("drop_rate", "mean_sojourn", "deadline_miss_rate"):
         assert got[metric] == pytest.approx(want[metric], rel=1e-6, abs=1e-9), metric
 
@@ -50,7 +66,7 @@ def test_golden_trace_replays(name, factory):
 def test_golden_traces_are_nontrivial():
     """The fixtures must actually exercise the control loop: elastic
     scale-out/in and the §11 overloaded path both appear."""
-    for name, factory in (("vld", vld_scenario), ("fpd", fpd_scenario)):
+    for name in ("vld", "fpd"):
         want = json.loads((GOLDEN / f"{name}_control_trace.json").read_text())
         actions = set(want["scenarios"][name]["actions"])
         assert "overloaded" in actions, name
@@ -59,3 +75,16 @@ def test_golden_traces_are_nontrivial():
             sum(a.values()) for a in want["scenarios"][name]["allocations"]
         ]
         assert len(set(totals)) > 1, f"{name} allocation never changed"
+
+
+def test_golden_proactive_trace_is_nontrivial():
+    """The proactive fixture must prove the forecast/MPC plane actually
+    drove decisions: committed MPC plans appear alongside the per-tick
+    mpc_used/confident trajectory."""
+    want = json.loads((GOLDEN / "vld_proactive_control_trace.json").read_text())
+    assert want["proactive"] is True
+    scen = want["scenarios"]["vld_proactive"]
+    assert "proactive" in scen["actions"]
+    traj = scen["trajectory"]
+    assert sum(traj["mpc_used"]) > 0
+    assert sum(traj["confident"]) >= sum(traj["mpc_used"])

@@ -71,6 +71,29 @@ def test_trace_mmpp_differs_across_seeds_not_within():
     assert set(np.unique(a)) <= {2.0, 20.0}
 
 
+@pytest.mark.parametrize(
+    "trace",
+    [
+        ArrivalTrace(kind="mmpp", rate=3.0, peak=18.0, switch01=0.15, switch10=0.1),
+        ArrivalTrace(kind="diurnal", rate=12.0, amplitude=9.0, period=40.0),
+        ArrivalTrace(kind="flash", rate=4.0, peak=17.0, t_on=20.0, t_off=45.0),
+    ],
+    ids=["mmpp", "diurnal", "flash"],
+)
+def test_trace_mean_rate_matches_trapezoid_of_rates(trace):
+    """``mean_rate`` is exactly the trapezoid integral of ``rates()`` over
+    the horizon grid divided by the covered span — the forecastability
+    contract the predictors (repro/forecast) train against."""
+    horizon, dt, seed = 120.0, 0.5, 13
+    got1 = trace.mean_rate(horizon, seed, dt=dt)
+    got2 = trace.mean_rate(horizon, seed, dt=dt)
+    assert got1 == got2  # deterministic given (trace, seed)
+    t_grid = np.arange(0.0, horizon + dt / 2.0, dt)
+    r = trace.rates(t_grid, seed)
+    want = (0.5 * (r[1:] + r[:-1]) * dt).sum() / (t_grid[-1] - t_grid[0])
+    assert abs(got1 - want) <= 1e-9
+
+
 def test_trace_validation_errors():
     with pytest.raises(ValueError):
         ArrivalTrace(kind="nope")
