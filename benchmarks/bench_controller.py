@@ -16,12 +16,26 @@ arrays.  Rows:
 * ``speedup_fused_vs_scalar_B64`` — the acceptance gate: >= 20x at B=64;
 * ``fused_loop_ticks_per_second_B{B}`` — whole fused simulate -> measure
   -> decide -> apply scan throughput (ticks/s across the batch);
+* ``fused_loop_sharded_ticks_per_second_B{B}_D{D}`` — the mesh story
+  (DESIGN.md §16): the same fused loop at fleet scale (B=4096 full run,
+  B=64 smoke) with the batch axis sharded over D emulated host devices,
+  measured in a subprocess because ``XLA_FLAGS=
+  --xla_force_host_platform_device_count`` must be set before jax
+  imports.  A ``_pinned_..._D1`` twin row runs the identical shard_map
+  program on a 1-device mesh; ``sharded_vs_pinned_ratio`` reports the
+  device-parallel speedup (only meaningful when the host has cores to
+  back the emulated devices — the note records the core count);
 * ``gain_topr_interpret_parity`` — Pallas top-R kernel vs jnp oracle in
   interpret mode on CPU (1.0 = exact take-for-take agreement).
 """
 
 from __future__ import annotations
 
+import json
+import os
+import pathlib
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -137,6 +151,34 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
         n_ticks * b / t_loop,
         f"scenario-ticks/s, {n_ticks} ticks x B={b} in one lax.scan program",
     ))
+    base_tps = n_ticks * b / t_loop
+
+    # --- sharded fused loop at fleet scale (subprocess: XLA_FLAGS) ------- #
+    b_shard, d = (64, 2) if smoke else (4096, 8)
+    info = _run_sharded_subprocess(b_shard, d, horizon, reps=2)
+    sharded_tps = info["ticks_per_s_sharded"]
+    pinned_tps = info["ticks_per_s_pinned"]
+    rows.append((
+        f"fused_loop_sharded_ticks_per_second_B{b_shard}_D{d}", sharded_tps,
+        f"scenario-ticks/s, batch axis shard_map'd over {d} emulated host "
+        f"devices ({info['n_ticks']} ticks)",
+    ))
+    rows.append((
+        f"fused_loop_pinned_ticks_per_second_B{b_shard}_D1", pinned_tps,
+        "same shard_map program on a 1-device mesh (the pinned baseline)",
+    ))
+    rows.append((
+        f"sharded_vs_pinned_ratio_B{b_shard}",
+        sharded_tps / max(pinned_tps, 1e-12),
+        f"x D={d} mesh vs 1-device mesh; host has {os.cpu_count()} core(s) "
+        "backing the emulated devices — parallel speedup needs real cores",
+    ))
+    rows.append((
+        f"sharded_vs_B{b}_throughput_ratio",
+        sharded_tps / max(base_tps, 1e-12),
+        f"x B={b_shard} sharded aggregate scenario-ticks/s vs this run's "
+        f"B={b} single-device row (ROADMAP's ~4.4k ticks/s reference)",
+    ))
 
     # --- gain_topr kernel parity (interpret mode on CPU) ----------------- #
     from repro.kernels.gain_topr import kernel as topr_kernel, ref as topr_ref
@@ -156,3 +198,68 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
         "Pallas top-R kernel == jnp oracle, interpret mode (1.0 = exact)",
     ))
     return rows
+
+
+# --------------------------------------------------------------------------- #
+# Sharded rows run out-of-process: the emulated-device flag must be in
+# XLA_FLAGS before jax ever imports, which this (already-jax-importing)
+# process cannot retrofit.
+# --------------------------------------------------------------------------- #
+def _run_sharded_subprocess(b: int, d: int, horizon: float, reps: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={d}"
+    ).strip()
+    src = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, __file__, "--sharded-worker",
+         str(b), str(d), str(horizon), str(reps)],
+        env=env, capture_output=True, text=True, timeout=1800,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"sharded bench worker failed (rc={proc.returncode}):\n"
+            f"{proc.stderr[-2000:]}"
+        )
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def _sharded_worker(argv: list[str]) -> None:
+    b, d, horizon, reps = (
+        int(argv[0]), int(argv[1]), float(argv[2]), int(argv[3])
+    )
+    import jax
+
+    from repro.distributed.sharding import fleet_mesh
+    from repro.streaming.scenarios import scenario_matrix
+
+    scens = [
+        s.with_(negotiated=False)
+        for s in scenario_matrix(b, seed=5, horizon=horizon, warmup=5.0, dt=0.05)
+    ]
+    runner = ScenarioRunner(scens, tick_interval=5.0, backend="jax")
+    out: dict = {"b": b, "devices": len(jax.devices())}
+    for tag, nd in (("sharded", d), ("pinned", 1)):
+        loop, n_ticks = ctl.make_fused_loop(
+            runner.arrays, runner.static, runner._params(),
+            steps_per_tick=runner._steps_per_tick, mesh=fleet_mesh(nd),
+        )
+        np.asarray(loop(runner.k)["k_final"])  # compile + warm
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            loop(runner.k)["k_final"].block_until_ready()
+            ts.append(time.perf_counter() - t0)
+        out[f"ticks_per_s_{tag}"] = n_ticks * b / min(ts)
+        out["n_ticks"] = n_ticks
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--sharded-worker":
+        _sharded_worker(sys.argv[2:])
+    else:
+        for _name, _val, _note in run(smoke="--smoke" in sys.argv[1:]):
+            print(f"{_name},{_val},{_note}")

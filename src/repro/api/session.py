@@ -513,11 +513,19 @@ class FleetSession:
         headroom: float = 1.1,
         scale_in_hysteresis: float = 0.8,
         on_decision=None,
+        solver: str = "scalar",
+        mesh=None,
     ):
         if not sessions:
             raise GraphValidationError("fleet needs at least one session")
         if k_max is None and negotiator is None:
             raise GraphValidationError("fleet needs k_max= and/or negotiator=")
+        if solver not in ("scalar", "batched"):
+            raise GraphValidationError(
+                f"unknown solver {solver!r}; expected 'scalar' or 'batched'"
+            )
+        if mesh is not None and solver != "batched":
+            raise GraphValidationError("mesh= requires solver='batched'")
         self.sessions: dict[str, DRSSession] = dict(sessions)
         self._static_k_max = k_max
         self.negotiator = negotiator
@@ -526,6 +534,11 @@ class FleetSession:
         self.headroom = headroom
         self.scale_in_hysteresis = scale_in_hysteresis
         self.on_decision = on_decision
+        # "batched" solves the merged greedy as one gain_topr selection
+        # (FleetPlanner.plan_batched); mesh= additionally runs it as the
+        # cross-device fleet reduction of DESIGN.md §16.
+        self.solver = solver
+        self.mesh = mesh
         self.history: list[FleetDecision] = []
         # tenant -> index-ordered allocation currently in force
         self._k: dict[str, np.ndarray] = {}
@@ -549,7 +562,17 @@ class FleetSession:
 
     def plan(self, *, k_max: int | None = None) -> FleetPlan:
         """Cross-tenant Programs (4)/(6) on the declared priors."""
-        return self.planner().plan(k_max=k_max)
+        return self._plan_with(self.planner(), k_max=k_max)
+
+    def _plan_with(
+        self, planner: FleetPlanner, tops: dict | None = None,
+        *, k_max: int | None = None,
+    ) -> FleetPlan:
+        """Every plan call routes here so the solver choice (scalar greedy
+        vs batched/sharded top-R) applies uniformly across start/tick."""
+        if self.solver == "batched":
+            return planner.plan_batched(tops, k_max=k_max, mesh=self.mesh)
+        return planner.plan(tops, k_max=k_max)
 
     def allocations(self) -> dict[str, dict[str, int]]:
         """tenant -> name-keyed allocation currently in force."""
@@ -695,13 +718,13 @@ class FleetSession:
         k_max = self.k_max
         planner = FleetPlanner(self.tenants(), k_max, objective=self.objective)
         try:
-            plan = planner.plan(tops, k_max=k_max)
+            plan = self._plan_with(planner, tops, k_max=k_max)
         except InsufficientResourcesError as e:
             if self.negotiator is not None:
                 self.negotiator.ensure(int(np.ceil(e.needed * self.headroom)))
                 k_max = self.k_max
                 try:
-                    plan = planner.plan(tops, k_max=k_max)
+                    plan = self._plan_with(planner, tops, k_max=k_max)
                 except InsufficientResourcesError as e2:
                     return self._emit(FleetDecision(
                         now, "infeasible", k_max, None, self.allocations(),
@@ -719,7 +742,7 @@ class FleetSession:
             self.negotiator.ensure(int(np.ceil(plan.needed_total * self.headroom)))
             if self.k_max > k_max:
                 k_max = self.k_max
-                plan = planner.plan(tops, k_max=k_max)
+                plan = self._plan_with(planner, tops, k_max=k_max)
         elif (
             self.negotiator is not None
             and self._static_k_max is None
@@ -740,7 +763,7 @@ class FleetSession:
             if self.k_max < k_max:
                 cur_obj = self._objective_of(planner, tops)
                 k_max = self.k_max
-                plan = planner.plan(tops, k_max=k_max)
+                plan = self._plan_with(planner, tops, k_max=k_max)
                 self._apply(plan)
                 return self._emit(FleetDecision(
                     now, "scale_in", k_max, plan, self.allocations(), tuple(hot),
@@ -859,6 +882,7 @@ class ScenarioRunner:
         force_kernel: bool = False,
         fused: bool | None = None,
         proactive=None,
+        mesh=None,
     ):
         from ..streaming.batchsim import BatchQueueSim
         from ..streaming.scenarios import pack_allocations, pack_scenarios
@@ -869,6 +893,10 @@ class ScenarioRunner:
         self.backend = backend
         self.interpret = interpret
         self.force_kernel = force_kernel
+        # Device mesh for the fused loop (DESIGN.md §16): shard the batch
+        # axis across devices.  Only the fused path consumes it — the
+        # window-at-a-time twin is a numpy debugging surface.
+        self.mesh = mesh
         # Forecast/MPC mode (DESIGN.md §15): True -> default MPCConfig;
         # an MPCConfig customizes predictor/horizon/gate knobs.
         if proactive is True:
@@ -909,6 +937,11 @@ class ScenarioRunner:
                 "interval; use fused=None for the automatic gate"
             )
         self.fused = fused
+        if mesh is not None and not fused:
+            raise GraphValidationError(
+                "mesh= shards the fused loop's batch axis; it has no effect "
+                "on the window-at-a-time path (pass fused=True or drop mesh)"
+            )
         # Per-scenario decision parameters are static except the budgets,
         # which negotiator leases move between ticks — stack once here,
         # refresh only k_max in _params() (the tick hot loop).
@@ -1091,7 +1124,7 @@ class ScenarioRunner:
             steps_per_tick=self._steps_per_tick,
             warmup_seconds=self.scenarios[0].warmup,
             interpret=self.interpret, force_kernel=self.force_kernel,
-            proactive=self.proactive_cfg,
+            proactive=self.proactive_cfg, mesh=self.mesh,
         )
         out = {key: np.asarray(v) for key, v in run(self.k).items()}
         self.k = out["k_final"].astype(np.int64)

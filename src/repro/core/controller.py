@@ -47,7 +47,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Callable, Sequence
+from typing import Any, Callable, NamedTuple, Sequence
 
 import numpy as np
 
@@ -68,6 +68,8 @@ __all__ = [
     "ALLOCATORS",
     "ControllerStatic",
     "ControllerParams",
+    "ControllerState",
+    "FusedLoop",
     "RowDecision",
     "BatchDecision",
     "overloaded_mask_batch",
@@ -75,6 +77,8 @@ __all__ = [
     "clamp_row",
     "decide_single",
     "tick_batch",
+    "pad_static",
+    "pad_params",
     "make_decide_jax",
     "make_fused_loop",
 ]
@@ -191,6 +195,72 @@ class ControllerParams:
             horizon_seconds=np.array([c.horizon_seconds for c in configs]),
             allocator=tuple(c.allocator for c in configs),
         )
+
+
+# --------------------------------------------------------------------------- #
+# Batch-axis padding (device-mesh sharding needs B % device count == 0)
+# --------------------------------------------------------------------------- #
+def pad_static(static: ControllerStatic, b_total: int) -> ControllerStatic:
+    """Append ``b_total - B`` inert scenario lanes: no operators
+    (``n_ops = 0``), ``active`` all-False, zero routing/alpha, unit speed.
+    Padded lanes provably decide ``"none"`` with an unchanged allocation
+    (tests/test_mesh_control.py asserts this bit-for-bit) so they never
+    influence real decisions — the masked-lane contract DESIGN.md §16."""
+    b, n = static.batch, static.n
+    if b_total < b:
+        raise ValueError(f"b_total {b_total} < batch {b}")
+    if b_total == b:
+        return static
+    pad = b_total - b
+    return ControllerStatic(
+        base_routing=np.concatenate(
+            [static.base_routing, np.zeros((pad, n, n))], axis=0
+        ),
+        group=np.concatenate([static.group, np.zeros((pad, n), dtype=bool)]),
+        alpha=np.concatenate([static.alpha, np.zeros((pad, n))]),
+        active=np.concatenate([static.active, np.zeros((pad, n), dtype=bool)]),
+        speed=np.concatenate([static.speed, np.ones((pad, n))]),
+        n_ops=np.concatenate([static.n_ops, np.zeros(pad, dtype=np.int64)]),
+        names=static.names + ((),) * pad,
+    )
+
+
+def pad_params(params: ControllerParams, b_total: int) -> ControllerParams:
+    """Decision parameters for inert padded lanes: no constraint
+    (``t_max = NaN``), zero budget, and an infinite improvement gate —
+    every gate in the decide is provably closed on a padded lane."""
+    b = params.k_max.shape[0]
+    if b_total < b:
+        raise ValueError(f"b_total {b_total} < batch {b}")
+    if b_total == b:
+        return params
+    pad = b_total - b
+    return ControllerParams(
+        t_max=np.concatenate([params.t_max, np.full(pad, np.nan)]),
+        k_max=np.concatenate([params.k_max, np.zeros(pad, dtype=np.int64)]),
+        headroom=np.concatenate([params.headroom, np.ones(pad)]),
+        scale_in_hysteresis=np.concatenate(
+            [params.scale_in_hysteresis, np.zeros(pad)]
+        ),
+        min_improvement=np.concatenate([params.min_improvement, np.full(pad, np.inf)]),
+        horizon_seconds=np.concatenate([params.horizon_seconds, np.zeros(pad)]),
+        allocator=params.allocator + ("table",) * pad,
+    )
+
+
+def _mesh_axis(mesh) -> tuple[str, int]:
+    """The (axis name, device count) of a 1-D controller mesh."""
+    if len(mesh.axis_names) != 1:
+        raise ValueError(
+            f"controller mesh must be 1-D (batch axis only); got axes "
+            f"{mesh.axis_names}"
+        )
+    return mesh.axis_names[0], int(mesh.size)
+
+
+def _padded_batch(b: int, n_shards: int) -> int:
+    """B rounded up to a multiple of the shard count."""
+    return -(-b // n_shards) * n_shards
 
 
 # --------------------------------------------------------------------------- #
@@ -639,6 +709,15 @@ def tick_batch(
         ni = int(static.n_ops[bi])
         k_row = k_current[bi, :ni]
         k_max = int(params.k_max[bi])
+        if ni == 0:
+            # Padded batch lane (pad_static / pack_scenarios pad_to=): no
+            # operators, nothing to decide — the masked-lane contract says
+            # it is always "none" with an unchanged (empty) allocation.
+            rows.append(RowDecision(
+                "none", k_row.copy(), None, k_max, float("nan"), None, None,
+                None, "padded lane", applied=False,
+            ))
+            continue
         if use[bi]:
             k_new = np.asarray(k_plan[bi, :ni], dtype=np.int64)
             changed = bool((k_new != k_row).any())
@@ -705,32 +784,36 @@ def tick_batch(
 # --------------------------------------------------------------------------- #
 # jit path: the whole decide (and the fused simulate->decide loop) in JAX
 # --------------------------------------------------------------------------- #
-def make_decide_jax(
-    static: ControllerStatic,
-    params: ControllerParams,
-    *,
-    k_hi: int | None = None,
-    pause_seconds: float | None = None,
-    interpret: bool = False,
-    force_kernel: bool = False,
+def _decide_statics(static: ControllerStatic, params: ControllerParams) -> dict:
+    """The decide's per-lane array inputs as one ``[B, ...]``-leading dict.
+
+    Every entry has the batch axis leading, so a device mesh shards the
+    whole bundle with one rule (``P(axis, None, ...)``) — this is what
+    lets the decide run under ``shard_map`` with the statics passed as
+    explicit (sharded) arguments instead of replicated closure constants.
+    """
+    return {
+        "routing0": np.asarray(static.base_routing, dtype=np.float64),
+        "group": np.asarray(static.group, dtype=bool),
+        "alpha": np.asarray(static.alpha, dtype=np.float64),
+        "active": np.asarray(static.active, dtype=bool),
+        "speed": np.asarray(static.speed, dtype=np.float64),
+        "src": _source_mask(static),
+        "k_max": np.asarray(params.k_max, dtype=np.int64),
+        "min_improvement": np.asarray(params.min_improvement, dtype=np.float64),
+        "horizon": np.asarray(params.horizon_seconds, dtype=np.float64),
+    }
+
+
+def _make_decide_core(
+    n: int, k_hi: int, pause: float, interpret: bool, force_kernel: bool
 ):
-    """Compile the batched decide into one jit program.
+    """The decide body as a pure function of (statics dict, measurements).
 
-    Returns ``decide(lam_hat, mu_hat, drop_hat, lam0_hat, k_current) ->
-    (action_code [B], k_next [B, N], et_cur [B], et_target [B],
-    applied [B])`` — the
-    complete non-negotiated decision flow: overload masks, offered-load
-    clamping, batched Jackson solve, one Erlang table pass
-    (``kernels/erlang_c``), Program-4 top-R selection
-    (``kernels/gain_topr``), and the vectorized improvement + cost gates.
-    Negotiator-owned branches (scale_out / scale_in) need the Python
-    lease hook and are deliberately absent: ``params.k_max`` is the
-    static per-scenario budget.  Dtype follows JAX's active precision.
-
-    Semantics mirror the numpy twin with two documented deviations
-    (DESIGN.md §14): a singular/unstable traffic solve is detected from
-    non-finite or negative solved rates (no eigvalue check inside jit),
-    and Program (6) sizing is skipped (it only feeds negotiator leases).
+    ``core(st, lam_hat, mu_hat, drop_hat, lam0_hat, k_current)`` operates
+    on whatever batch extent its inputs carry — the full ``B`` under plain
+    jit, or one device's ``B/D`` shard under ``shard_map`` (every op is
+    per-lane, so shard results are bit-identical to the unsharded run).
     """
     import jax
     import jax.numpy as jnp
@@ -738,25 +821,18 @@ def make_decide_jax(
     from ..kernels.gain_topr import ops as topr_ops
     from .batched import sojourn_table_jax, solve_traffic_batch_jax
 
-    b, n = static.batch, static.n
-    k_hi = int(k_hi if k_hi is not None else max(int(params.k_max.max()), 1))
-    routing0 = jnp.asarray(static.base_routing)
-    adj = routing0 > 0
-    group = jnp.asarray(static.group)
-    alpha = jnp.asarray(static.alpha)
-    active = jnp.asarray(static.active)
-    speed = jnp.asarray(static.speed)
-    src_mask = jnp.asarray(_source_mask(static))
-    t_max = jnp.asarray(np.nan_to_num(params.t_max, nan=np.inf))
-    k_max = jnp.asarray(params.k_max)
-    min_improvement = jnp.asarray(params.min_improvement)
-    horizon = jnp.asarray(params.horizon_seconds)
-    pause = float(
-        RebalanceCostModel().pause_cache_miss if pause_seconds is None
-        else pause_seconds
-    )
-
-    def decide(lam_hat, mu_hat, drop_hat, lam0_hat, k_current):
+    def decide(st, lam_hat, mu_hat, drop_hat, lam0_hat, k_current):
+        routing0 = st["routing0"]
+        adj = routing0 > 0
+        group = st["group"]
+        alpha = st["alpha"]
+        active = st["active"]
+        speed = st["speed"]
+        src_mask = st["src"]
+        k_max = st["k_max"]
+        min_improvement = st["min_improvement"]
+        horizon = st["horizon"]
+        b = lam_hat.shape[0]
         dtype = lam_hat.dtype
         mu_eff = mu_hat * speed
         k_cur = k_current.astype(jnp.int32)
@@ -889,7 +965,175 @@ def make_decide_jax(
         k_next = jnp.where(apply_mask[:, None], k4, k_cur)
         return code, k_next, et_cur, jnp.where(feasible4, et4, jnp.inf), apply_mask
 
+    return decide
+
+
+def make_decide_jax(
+    static: ControllerStatic,
+    params: ControllerParams,
+    *,
+    k_hi: int | None = None,
+    pause_seconds: float | None = None,
+    interpret: bool = False,
+    force_kernel: bool = False,
+    mesh=None,
+):
+    """Compile the batched decide into one jit program.
+
+    Returns ``decide(lam_hat, mu_hat, drop_hat, lam0_hat, k_current) ->
+    (action_code [B], k_next [B, N], et_cur [B], et_target [B],
+    applied [B])`` — the
+    complete non-negotiated decision flow: overload masks, offered-load
+    clamping, batched Jackson solve, one Erlang table pass
+    (``kernels/erlang_c``), Program-4 top-R selection
+    (``kernels/gain_topr``), and the vectorized improvement + cost gates.
+    Negotiator-owned branches (scale_out / scale_in) need the Python
+    lease hook and are deliberately absent: ``params.k_max`` is the
+    static per-scenario budget.  Dtype follows JAX's active precision.
+
+    ``mesh`` (a 1-D :class:`jax.sharding.Mesh`) shards the batch axis
+    across devices with ``shard_map`` (DESIGN.md §16): every statics
+    array and measurement input is partitioned on its leading ``B`` dim,
+    each device decides its own lane shard, and — because every op in
+    the flow is per-lane — the sharded outputs are bit-identical to the
+    unsharded ones.  ``B`` need not divide the device count: lanes are
+    padded with inert scenarios (:func:`pad_static`, which provably
+    decide ``"none"``) and outputs are sliced back to the real ``B``.
+
+    Semantics mirror the numpy twin with two documented deviations
+    (DESIGN.md §14): a singular/unstable traffic solve is detected from
+    non-finite or negative solved rates (no eigvalue check inside jit),
+    and Program (6) sizing is skipped (it only feeds negotiator leases).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    b, n = static.batch, static.n
+    k_hi = int(k_hi if k_hi is not None else max(int(params.k_max.max()), 1))
+    pause = float(
+        RebalanceCostModel().pause_cache_miss if pause_seconds is None
+        else pause_seconds
+    )
+    core = _make_decide_core(n, k_hi, pause, interpret, force_kernel)
+
+    if mesh is None:
+        st = {k: jnp.asarray(v) for k, v in _decide_statics(static, params).items()}
+
+        def decide(lam_hat, mu_hat, drop_hat, lam0_hat, k_current):
+            return core(st, lam_hat, mu_hat, drop_hat, lam0_hat, k_current)
+
+        return jax.jit(decide)
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axis, n_shards = _mesh_axis(mesh)
+    b_pad = _padded_batch(b, n_shards)
+    st_np = _decide_statics(pad_static(static, b_pad), pad_params(params, b_pad))
+    st = {k: jnp.asarray(v) for k, v in st_np.items()}
+    st_specs = {
+        k: P(axis, *((None,) * (v.ndim - 1))) for k, v in st_np.items()
+    }
+    row = P(axis, None)
+    lane = P(axis)
+    sharded = shard_map(
+        core,
+        mesh=mesh,
+        in_specs=(st_specs, row, row, row, lane, row),
+        out_specs=(lane, row, lane, lane, lane),
+        check_rep=False,
+    )
+    pad = b_pad - b
+
+    def decide(lam_hat, mu_hat, drop_hat, lam0_hat, k_current):
+        if pad:
+            dtype = lam_hat.dtype
+            lam_hat = jnp.concatenate([lam_hat, jnp.zeros((pad, n), dtype)])
+            mu_hat = jnp.concatenate([mu_hat, jnp.ones((pad, n), dtype)])
+            drop_hat = jnp.concatenate([drop_hat, jnp.zeros((pad, n), dtype)])
+            lam0_hat = jnp.concatenate([lam0_hat, jnp.zeros(pad, dtype)])
+            k_current = jnp.concatenate(
+                [k_current, jnp.zeros((pad, n), k_current.dtype)]
+            )
+        out = sharded(st, lam_hat, mu_hat, drop_hat, lam0_hat, k_current)
+        if pad:
+            out = tuple(o[:b] for o in out)
+        return out
+
     return jax.jit(decide)
+
+
+class ControllerState(NamedTuple):
+    """The fused loop's scan carry as one donated pytree (DESIGN.md §16).
+
+    ``tick`` (int32 scalar) is the index of the *next* control window,
+    which makes the state resumable: :meth:`FusedLoop.run` advances any
+    number of ticks from it, and a checkpoint -> restore -> resume
+    sequence is bit-identical to a straight-through run
+    (tests/test_checkpoint.py).  Under a device mesh the batch extent is
+    the padded ``B`` (a multiple of the device count); ``fstate`` is the
+    flat ForecastState tuple when the loop is proactive, else ``()``.
+    ``acc`` holds the post-warmup run aggregates in BatchQueueSim order:
+    (offered, served, dropped, ext_admitted, ext_offered, q_int, q_max).
+    """
+
+    q: Any  # [B, N] queue backlog
+    served_prev: Any  # [B, N] last-step completions (the routing delay line)
+    k: Any  # [B, N] int32 allocation in force
+    acc: tuple  # post-warmup aggregates (7-tuple, see above)
+    tick: Any  # int32 scalar: next control-window index
+    fstate: tuple = ()  # flat ForecastState when proactive
+
+
+class FusedLoop:
+    """One compiled measure -> model -> rebalance program over the horizon.
+
+    ``loop(k0)`` runs the whole horizon and returns the legacy output
+    dict (the pre-refactor ``run(k0)`` surface).  The chunked surface —
+    ``state = loop.init(k0)`` then ``state, out = loop.run(state,
+    ticks)`` — exposes the same program with the carry as an explicit
+    :class:`ControllerState`.  The state argument is **donated** to XLA
+    on every ``run`` call (``donate_argnums=0``), so long-horizon loops
+    update their ``[B, N]`` buffers in place instead of reallocating;
+    the caller must keep using the returned state, never the one it
+    passed in.  Compiled executables are cached per chunk length.
+    """
+
+    def __init__(self, n_ticks: int, init_fn, build_fn):
+        self.n_ticks = n_ticks
+        self._init_fn = init_fn
+        self._build = build_fn
+        self._compiled: dict = {}
+
+    def init(self, k0) -> ControllerState:
+        """Fresh tick-0 state (k0 is [B, N]; auto-padded under a mesh)."""
+        return self._init_fn(k0)
+
+    def run(self, state: ControllerState, ticks: int | None = None):
+        """Advance ``ticks`` windows (default: to the end of the horizon).
+
+        Returns ``(new_state, out)`` where ``out`` is the output dict for
+        the chunk just run (per-tick stacks cover only this chunk; the
+        run aggregates come from ``new_state.acc`` and therefore cover
+        everything since tick 0).
+        """
+        done = int(state.tick)
+        if ticks is None:
+            ticks = self.n_ticks - done
+        ticks = int(ticks)
+        if not 0 < ticks <= self.n_ticks - done:
+            raise ValueError(
+                f"cannot run {ticks} ticks from tick {done} "
+                f"(horizon {self.n_ticks})"
+            )
+        fn = self._compiled.get(ticks)
+        if fn is None:
+            fn = self._compiled[ticks] = self._build(ticks)
+        return fn(state)
+
+    def __call__(self, k0) -> dict:
+        _, out = self.run(self.init(k0), self.n_ticks)
+        return out
 
 
 def make_fused_loop(
@@ -903,18 +1147,21 @@ def make_fused_loop(
     interpret: bool = False,
     force_kernel: bool = False,
     proactive=None,
+    mesh=None,
 ):
     """Fuse simulate -> measure -> decide -> apply into ONE jit program.
 
     ``arrays`` is the :class:`~repro.streaming.batchsim.BatchArrays`
-    bundle; the returned ``run(k0) -> dict`` lax.scans the whole horizon:
-    each scan step advances one control window through the batch
-    simulator's step function (``streaming.batchsim.window_step_fn`` —
-    the same bounded-queue kernel path the standalone sim uses), derives
-    the window's synthetic measurement (§13 Little's-law surface), runs
-    the compiled decide, and applies the allocation — no Python between
-    ticks.  Outputs per-tick stacked decisions plus the post-warmup
-    whole-run aggregates (the BatchSimResult surface).
+    bundle; the returned :class:`FusedLoop` lax.scans the horizon: each
+    scan step advances one control window through the batch simulator's
+    step function (``streaming.batchsim.window_step_fn`` — the same
+    bounded-queue kernel path the standalone sim uses), derives the
+    window's synthetic measurement (§13 Little's-law surface), runs the
+    compiled decide, and applies the allocation — no Python between
+    ticks.  ``loop(k0)`` yields per-tick stacked decisions plus the
+    post-warmup whole-run aggregates (the BatchSimResult surface);
+    ``loop.init`` / ``loop.run`` expose the donated, resumable
+    :class:`ControllerState` carry.
 
     ``proactive`` (a :class:`~repro.forecast.mpc.MPCConfig`) extends the
     scan carry with the forecast state (DESIGN.md §15): each tick also
@@ -925,42 +1172,70 @@ def make_fused_loop(
     commit step stays inside the one ``lax.scan`` (outputs gain
     ``mpc_used`` / ``confident`` per tick).
 
+    ``mesh`` (a 1-D :class:`jax.sharding.Mesh`, e.g. from
+    :func:`repro.distributed.sharding.fleet_mesh`) shards the batch axis
+    of the WHOLE loop across devices with ``shard_map`` (DESIGN.md §16):
+    arrivals, statics, the carry, and the per-tick outputs are
+    partitioned on ``B``, and each device scans its own lane shard —
+    every op in the tick is per-lane, so the sharded loop is
+    bit-identical to the unsharded one (tests/test_mesh_control.py).
+    ``B`` is auto-padded to a multiple of the device count with inert
+    lanes (:func:`pad_static` / ``BatchArrays.pad_batch``) and all
+    outputs are sliced back to the real ``B``; only the carried
+    ``ControllerState`` keeps the padded extent.
+
     Negotiated scenarios cannot ride in here (leases are Python): callers
     keep those on the numpy twin path.
     """
     import jax
     import jax.numpy as jnp
+    from jax import lax
 
     from ..streaming.batchsim import window_step_fn
 
-    b, n = static.batch, static.n
+    b_real, n = static.batch, static.n
     dt = float(arrays.dt)
     steps = arrays.steps
     n_ticks = steps // steps_per_tick
     k_hi_res = int(k_hi if k_hi is not None else max(int(params.k_max.max()), 1))
-    decide = make_decide_jax(
-        static, params, k_hi=k_hi_res, interpret=interpret,
-        force_kernel=force_kernel,
+
+    if mesh is not None:
+        axis, n_shards = _mesh_axis(mesh)
+        b_pad = _padded_batch(b_real, n_shards)
+        static = pad_static(static, b_pad)
+        params = pad_params(params, b_pad)
+        arrays = arrays.pad_batch(b_pad)
+    b = static.batch
+
+    decide_core = _make_decide_core(
+        n, k_hi_res, float(RebalanceCostModel().pause_cache_miss),
+        interpret, force_kernel,
     )
     window = window_step_fn(interpret=interpret, force_kernel=force_kernel)
-    mu = jnp.asarray(arrays.mu)  # reference-class priors (decide applies speed)
-    mu_eff = jnp.asarray(arrays.mu * static.speed)  # actual machine-class rate
-    group = jnp.asarray(arrays.group)
-    alpha = jnp.asarray(arrays.alpha)
-    cap_queue = jnp.asarray(arrays.cap_queue)
-    routing = jnp.asarray(arrays.routing)
-    speed = jnp.asarray(static.speed)
-    t_max = jnp.asarray(np.nan_to_num(params.t_max, nan=np.inf))
+    # Every [B, ...]-leading array rides in one of two dicts so the mesh
+    # path can pass them as explicit sharded operands (one P(axis, ...)
+    # rule per leaf) instead of full-size replicated closure constants.
+    st = {k_: jnp.asarray(v) for k_, v in _decide_statics(static, params).items()}
+    sim = {
+        "mu": jnp.asarray(arrays.mu),  # reference-class priors
+        "group": jnp.asarray(arrays.group),
+        "alpha": jnp.asarray(arrays.alpha),
+        "cap_queue": jnp.asarray(arrays.cap_queue),
+        "routing": jnp.asarray(arrays.routing),
+        "speed": jnp.asarray(static.speed),
+        "t_max": jnp.asarray(np.nan_to_num(params.t_max, nan=np.inf)),
+    }
     # Pre-sliced per-tick arrival chunks + warmup masks.
-    ext = jnp.asarray(
+    ext_r = jnp.asarray(
         arrays.ext[: n_ticks * steps_per_tick].reshape(
             n_ticks, steps_per_tick, b, n
         )
     )
-    warm = (
-        np.arange(n_ticks * steps_per_tick) >= arrays.warmup_steps
-    ).astype(np.float64).reshape(n_ticks, steps_per_tick)
-    warm = jnp.asarray(warm)
+    warm_r = jnp.asarray(
+        (np.arange(n_ticks * steps_per_tick) >= arrays.warmup_steps)
+        .astype(np.float64)
+        .reshape(n_ticks, steps_per_tick)
+    )
     # A window counts as warm when it *starts* past the warmup boundary,
     # compared in seconds like the twin runner (t0 >= warmup), not in
     # rounded steps — the run-accumulator gating above stays step-based
@@ -968,155 +1243,247 @@ def make_fused_loop(
     warmup_s = (
         arrays.warmup_steps * dt if warmup_seconds is None else float(warmup_seconds)
     )
-    tick_warm = jnp.asarray(
+    tick_warm_r = jnp.asarray(
         (np.arange(n_ticks) * steps_per_tick * dt >= warmup_s).astype(np.float64)
     )
     span = steps_per_tick * dt
+    t_max_real = sim["t_max"][:b_real]
 
-    active = jnp.asarray(static.active)
     if proactive is not None:
         from ..forecast.mpc import forecast_init_state, forecast_step, mpc_plan
         from ..kernels.gain_topr import ops as topr_ops
 
-        src_mask = jnp.asarray(_source_mask(static))
-        group_b = jnp.asarray(static.group)
-        k_max_j = jnp.asarray(params.k_max)
-        fstate0 = forecast_init_state(b, n, proactive, xp=jnp, dtype=mu.dtype)
+        fstate0 = forecast_init_state(b, n, proactive, xp=jnp, dtype=sim["mu"].dtype)
 
         def topr(c, bud):
             return topr_ops.gain_topr(
                 c, bud, interpret=interpret, force_kernel=force_kernel
             )
 
-    def capacity_of(k):
-        kf = jnp.maximum(k.astype(mu.dtype), 0.0)
-        eff = 1.0 / (1.0 + alpha * (kf - 1.0))
-        return jnp.where(group, mu * speed * kf * eff, mu * speed * kf)
+    def capacity_of(sim_d, k):
+        mu_d, alpha_d = sim_d["mu"], sim_d["alpha"]
+        kf = jnp.maximum(k.astype(mu_d.dtype), 0.0)
+        eff = 1.0 / (1.0 + alpha_d * (kf - 1.0))
+        spd = mu_d * sim_d["speed"]
+        return jnp.where(sim_d["group"], spd * kf * eff, spd * kf)
 
-    def tick(carry, xs):
-        if proactive is not None:
-            q, served_prev, k, acc, fstate = carry
-        else:
-            q, served_prev, k, acc = carry
-        ext_chunk, warm_chunk, warm_tick = xs
-        cap_serve_dt = capacity_of(k) * dt
-        out = window(
-            q, served_prev, ext_chunk, warm_chunk, cap_serve_dt, cap_queue, routing
-        )
-        (q1, served_prev1, offered, served_sum, dropped, ext_adm, ext_off,
-         q_int, q_max, w_offered, w_served, w_dropped, w_ext_adm, w_ext_off,
-         w_q_int) = out
-        # Window measurement (ungated): the §13 synthetic snapshot.
-        lam_hat = offered / span
-        drop_hat = dropped / span
-        admitted = jnp.maximum(lam_hat - drop_hat, 0.0)
-        q_mean = q_int / steps_per_tick
-        wait = jnp.where(
-            admitted > 0,
-            jnp.maximum(q_mean / jnp.maximum(admitted, 1e-300) - dt, 0.0),
-            0.0,
-        )
-        cap = capacity_of(k)
-        svc = jnp.where(
-            group,
-            jnp.where(cap > 0, 1.0 / cap, jnp.inf),
-            1.0 / mu_eff,
-        )
-        lam0 = jnp.maximum(ext_adm / span, 0.0)
-        contrib = jnp.where(admitted > 0, admitted * (wait + svc), 0.0)
-        sojourn = jnp.where(
-            lam0 > 0, contrib.sum(axis=-1) / jnp.maximum(lam0, 1e-300), jnp.nan
-        )
-        code, k_next, et_cur, et_target, applied = decide(
-            lam_hat, mu, drop_hat, lam0, k
-        )
-        if proactive is not None:
-            # Forecast plane: advance the predictors on this window's
-            # measured rates, plan over the horizon from the live
-            # backlog, and commit where the gate is open and the §11
-            # trigger is quiet (the trigger always outranks the plan).
-            fstate, lam_pred, conf = forecast_step(
-                fstate, lam_hat, active, proactive, xp=jnp
+    def chunk(ticks, st_d, sim_d, ext_d, warm_d, state):
+        """Advance ``ticks`` windows from ``state`` — one lax.scan over
+        tick indices (gathered from the pre-sliced arrival chunks, so a
+        resumed chunk reads exactly the windows a straight-through run
+        would).  Runs on whatever batch extent its operands carry: the
+        full ``B`` under plain jit, or one device's shard under
+        ``shard_map``."""
+        mu = sim_d["mu"]
+        mu_eff = sim_d["mu"] * sim_d["speed"]
+        active = st_d["active"]
+        t_max = sim_d["t_max"]
+        alpha = sim_d["alpha"]
+        group = sim_d["group"]
+
+        def tick_fn(carry, t_idx):
+            if proactive is not None:
+                q, served_prev, k, acc, fstate = carry
+            else:
+                q, served_prev, k, acc = carry
+            ext_chunk = lax.dynamic_index_in_dim(ext_d, t_idx, 0, keepdims=False)
+            warm_chunk = lax.dynamic_index_in_dim(warm_d, t_idx, 0, keepdims=False)
+            cap_serve_dt = capacity_of(sim_d, k) * dt
+            out = window(
+                q, served_prev, ext_chunk, warm_chunk, cap_serve_dt,
+                sim_d["cap_queue"], sim_d["routing"],
             )
-            k_plan, any_ok, et_hold, et_plan, _need = mpc_plan(
-                lam_pred, q1, k, mu=mu, group=group_b, alpha=alpha,
-                speed=speed, active=active, src_mask=src_mask,
-                cap_queue=cap_queue, t_max=t_max, k_max=k_max_j,
-                span=span, cfg=proactive, k_hi=k_hi_res, xp=jnp, topr=topr,
+            (q1, served_prev1, offered, served_sum, dropped, ext_adm, ext_off,
+             q_int, q_max, w_offered, w_served, w_dropped, w_ext_adm, w_ext_off,
+             w_q_int) = out
+            # Window measurement (ungated): the §13 synthetic snapshot.
+            lam_hat = offered / span
+            drop_hat = dropped / span
+            admitted = jnp.maximum(lam_hat - drop_hat, 0.0)
+            q_mean = q_int / steps_per_tick
+            wait = jnp.where(
+                admitted > 0,
+                jnp.maximum(q_mean / jnp.maximum(admitted, 1e-300) - dt, 0.0),
+                0.0,
             )
-            # Inline recompute of the trigger + completeness (decide owns
-            # them internally; same formulas as the twin's gating).
-            k_floor = jnp.maximum(k.astype(jnp.int32), 1).astype(lam_hat.dtype)
-            eff_t = 1.0 / (1.0 + alpha * (k_floor - 1.0))
-            capacity = jnp.where(
-                group, mu_eff * k_floor * eff_t, mu_eff * k_floor
+            cap = capacity_of(sim_d, k)
+            svc = jnp.where(
+                group,
+                jnp.where(cap > 0, 1.0 / cap, jnp.inf),
+                1.0 / mu_eff,
             )
-            valid = jnp.isfinite(lam_hat) & jnp.isfinite(mu_eff) & (mu_eff > 0)
-            drops_t = jnp.nan_to_num(drop_hat, nan=0.0)
-            hot = (
-                valid & active & (
-                    (lam_hat >= capacity * (1.0 - 1e-9))
-                    | (drops_t > DROP_TRIGGER_FRACTION * capacity)
+            lam0 = jnp.maximum(ext_adm / span, 0.0)
+            contrib = jnp.where(admitted > 0, admitted * (wait + svc), 0.0)
+            sojourn = jnp.where(
+                lam0 > 0, contrib.sum(axis=-1) / jnp.maximum(lam0, 1e-300), jnp.nan
+            )
+            code, k_next, et_cur, et_target, applied = decide_core(
+                st_d, lam_hat, mu, drop_hat, lam0, k
+            )
+            if proactive is not None:
+                # Forecast plane: advance the predictors on this window's
+                # measured rates, plan over the horizon from the live
+                # backlog, and commit where the gate is open and the §11
+                # trigger is quiet (the trigger always outranks the plan).
+                fstate, lam_pred, conf = forecast_step(
+                    fstate, lam_hat, active, proactive, xp=jnp
                 )
-            ).any(axis=-1)
-            complete = (
-                jnp.where(active, jnp.isfinite(lam_hat) & jnp.isfinite(mu), True)
-                .all(axis=-1)
-                & jnp.isfinite(lam0)
-            )
-            use = conf & any_ok & complete & ~hot & jnp.isfinite(t_max)
-            changed = use & (
-                (k_plan.astype(jnp.int32) != k) & active
-            ).any(axis=-1)
-            k_next = jnp.where(
-                use[:, None],
-                jnp.where(active, k_plan.astype(jnp.int32), k),
-                k_next,
-            )
-            code = jnp.where(
-                use,
-                jnp.where(changed, _CODE["proactive"], _CODE["none"]),
-                code,
-            )
-            applied = jnp.where(use, changed, applied)
-            et_cur = jnp.where(use, et_hold, et_cur)
-            et_target = jnp.where(use, et_plan, et_target)
-        new_acc = tuple(
-            a + w for a, w in zip(
-                acc[:6],
-                (w_offered, w_served, w_dropped, w_ext_adm, w_ext_off, w_q_int),
-            )
-        ) + (jnp.maximum(acc[6], q_max),)
-        ys = (code, k_next, sojourn, et_cur, et_target, applied, warm_tick)
-        if proactive is not None:
-            ys = ys + (use, conf)
-            return (q1, served_prev1, k_next, new_acc, fstate), ys
-        return (q1, served_prev1, k_next, new_acc), ys
+                k_plan, any_ok, et_hold, et_plan, _need = mpc_plan(
+                    lam_pred, q1, k, mu=mu, group=st_d["group"], alpha=alpha,
+                    speed=sim_d["speed"], active=active, src_mask=st_d["src"],
+                    cap_queue=sim_d["cap_queue"], t_max=t_max,
+                    k_max=st_d["k_max"],
+                    span=span, cfg=proactive, k_hi=k_hi_res, xp=jnp, topr=topr,
+                )
+                # Inline recompute of the trigger + completeness (decide
+                # owns them internally; same formulas as the twin's gating).
+                k_floor = jnp.maximum(k.astype(jnp.int32), 1).astype(lam_hat.dtype)
+                eff_t = 1.0 / (1.0 + alpha * (k_floor - 1.0))
+                capacity = jnp.where(
+                    group, mu_eff * k_floor * eff_t, mu_eff * k_floor
+                )
+                valid = jnp.isfinite(lam_hat) & jnp.isfinite(mu_eff) & (mu_eff > 0)
+                drops_t = jnp.nan_to_num(drop_hat, nan=0.0)
+                hot = (
+                    valid & active & (
+                        (lam_hat >= capacity * (1.0 - 1e-9))
+                        | (drops_t > DROP_TRIGGER_FRACTION * capacity)
+                    )
+                ).any(axis=-1)
+                complete = (
+                    jnp.where(active, jnp.isfinite(lam_hat) & jnp.isfinite(mu), True)
+                    .all(axis=-1)
+                    & jnp.isfinite(lam0)
+                )
+                use = conf & any_ok & complete & ~hot & jnp.isfinite(t_max)
+                changed = use & (
+                    (k_plan.astype(jnp.int32) != k) & active
+                ).any(axis=-1)
+                k_next = jnp.where(
+                    use[:, None],
+                    jnp.where(active, k_plan.astype(jnp.int32), k),
+                    k_next,
+                )
+                code = jnp.where(
+                    use,
+                    jnp.where(changed, _CODE["proactive"], _CODE["none"]),
+                    code,
+                )
+                applied = jnp.where(use, changed, applied)
+                et_cur = jnp.where(use, et_hold, et_cur)
+                et_target = jnp.where(use, et_plan, et_target)
+            new_acc = tuple(
+                a + w for a, w in zip(
+                    acc[:6],
+                    (w_offered, w_served, w_dropped, w_ext_adm, w_ext_off,
+                     w_q_int),
+                )
+            ) + (jnp.maximum(acc[6], q_max),)
+            ys = (code, k_next, sojourn, et_cur, et_target, applied)
+            if proactive is not None:
+                ys = ys + (use, conf)
+                return (q1, served_prev1, k_next, new_acc, fstate), ys
+            return (q1, served_prev1, k_next, new_acc), ys
 
-    def run(k0):
-        zeros = jnp.zeros((b, n))
-        acc0 = (zeros, zeros, zeros, jnp.zeros(b), jnp.zeros(b), zeros, zeros)
-        init = (zeros, zeros, jnp.asarray(k0, dtype=jnp.int32), acc0)
+        carry0 = (state.q, state.served_prev, state.k, state.acc)
         if proactive is not None:
-            init = init + (fstate0,)
-        final, ys = jax.lax.scan(tick, init, (ext, warm, tick_warm))
-        q, served_prev, k, acc = final[:4]
-        codes, k_hist, sojourns, et_cur, et_target, applied, warm_flags = ys[:7]
-        miss = (
-            (sojourns > t_max[None, :]) & (warm_flags[:, None] > 0)
-        ).sum(axis=0)
-        out = {
-            "codes": codes, "k": k_hist, "sojourn": sojourns,
-            "et_cur": et_cur, "et_target": et_target, "applied": applied,
-            "miss": miss, "warm_windows": (warm_flags > 0).sum(),
-            "k_final": k, "q_final": q,
-            "offered": acc[0], "served": acc[1], "dropped": acc[2],
-            "ext_admitted": acc[3], "ext_offered": acc[4],
-            "q_int": acc[5], "q_max": acc[6],
-        }
-        if proactive is not None:
-            out["mpc_used"] = ys[7]
-            out["confident"] = ys[8]
-        return out
+            carry0 = carry0 + (state.fstate,)
+        xs = state.tick + jnp.arange(ticks, dtype=state.tick.dtype)
+        final, ys = lax.scan(tick_fn, carry0, xs)
+        new_state = ControllerState(
+            q=final[0], served_prev=final[1], k=final[2], acc=final[3],
+            tick=state.tick + ticks,
+            fstate=final[4] if proactive is not None else (),
+        )
+        return new_state, ys
 
-    return jax.jit(run), n_ticks
+    def init_fn(k0) -> ControllerState:
+        k0 = np.asarray(k0)
+        if k0.shape[0] < b:  # mesh padding: inert lanes hold 0 processors
+            k0 = np.concatenate(
+                [k0, np.zeros((b - k0.shape[0], n), dtype=k0.dtype)]
+            )
+        # Each leaf gets its OWN buffer: the run step donates the whole
+        # state, and XLA rejects the same buffer donated twice.
+        def zeros2():
+            return jnp.zeros((b, n))
+
+        acc0 = (zeros2(), zeros2(), zeros2(), jnp.zeros(b), jnp.zeros(b),
+                zeros2(), zeros2())
+        fstate = ()
+        if proactive is not None:
+            fstate = tuple(jnp.array(x) for x in fstate0)  # copies: see above
+        return ControllerState(
+            q=zeros2(), served_prev=zeros2(),
+            k=jnp.asarray(k0, dtype=jnp.int32),
+            acc=acc0, tick=jnp.asarray(0, dtype=jnp.int32),
+            fstate=fstate,
+        )
+
+    if mesh is not None:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        def _lane_spec(v):
+            nd = getattr(v, "ndim", 0)
+            return P(axis, *((None,) * (nd - 1))) if nd >= 1 else P()
+
+        st_specs = {k_: _lane_spec(v) for k_, v in st.items()}
+        sim_specs = {k_: _lane_spec(v) for k_, v in sim.items()}
+        state_specs = jax.tree.map(
+            _lane_spec, init_fn(np.zeros((b_real, n), dtype=np.int64))
+        )
+        ys_lane, ys_row = P(None, axis), P(None, axis, None)
+        ys_specs = (ys_lane, ys_row, ys_lane, ys_lane, ys_lane, ys_lane)
+        if proactive is not None:
+            ys_specs = ys_specs + (ys_lane, ys_lane)
+        data_specs = (P(None, None, axis, None), P(None, None))
+
+    def build(ticks: int):
+        if mesh is None:
+            def stepped(state):
+                return chunk(ticks, st, sim, ext_r, warm_r, state)
+        else:
+            sharded = shard_map(
+                lambda st_, sim_, ext_, warm_, state_: chunk(
+                    ticks, st_, sim_, ext_, warm_, state_
+                ),
+                mesh=mesh,
+                in_specs=(st_specs, sim_specs) + data_specs + (state_specs,),
+                out_specs=(state_specs, ys_specs),
+                check_rep=False,
+            )
+
+            def stepped(state):
+                return sharded(st, sim, ext_r, warm_r, state)
+
+        def run(state):
+            tick0 = state.tick
+            new_state, ys = stepped(state)
+            per_tick = tuple(y[:, :b_real] for y in ys)
+            codes, k_hist, sojourns, et_cur, et_target, applied = per_tick[:6]
+            # Warm flags + miss counting stay OUTSIDE shard_map: they are
+            # per-tick scalars / cross-chunk reductions, not per-lane work.
+            warm_flags = lax.dynamic_slice_in_dim(tick_warm_r, tick0, ticks)
+            miss = (
+                (sojourns > t_max_real[None, :]) & (warm_flags[:, None] > 0)
+            ).sum(axis=0)
+            acc = new_state.acc
+            out = {
+                "codes": codes, "k": k_hist, "sojourn": sojourns,
+                "et_cur": et_cur, "et_target": et_target, "applied": applied,
+                "miss": miss, "warm_windows": (warm_flags > 0).sum(),
+                "k_final": new_state.k[:b_real], "q_final": new_state.q[:b_real],
+                "offered": acc[0][:b_real], "served": acc[1][:b_real],
+                "dropped": acc[2][:b_real],
+                "ext_admitted": acc[3][:b_real], "ext_offered": acc[4][:b_real],
+                "q_int": acc[5][:b_real], "q_max": acc[6][:b_real],
+            }
+            if proactive is not None:
+                out["mpc_used"] = per_tick[6]
+                out["confident"] = per_tick[7]
+            return new_state, out
+
+        return jax.jit(run, donate_argnums=0)
+
+    return FusedLoop(n_ticks, init_fn, build), n_ticks

@@ -162,6 +162,59 @@ class FleetPlanner:
         Raises :class:`InsufficientResourcesError` when even the stability
         minima don't fit the pool (no finite-E[T] allocation exists).
         """
+        resolved, ctx = self._floors(topologies, k_max)
+        take = np.zeros(sum(top.n for _, top in resolved), dtype=np.int64)
+        if ctx["budget"] > 0:
+            rows, k_start, evals = self._gain_rows(
+                resolved, ctx["starts"], ctx["budget"]
+            )
+            ctx["evals"] += evals
+            take = greedy_increments(rows, k_start, ctx["budget"])
+        return self._assemble(resolved, take, ctx)
+
+    def plan_batched(
+        self,
+        topologies: dict[str, Topology] | None = None,
+        *,
+        k_max: int | None = None,
+        mesh=None,
+    ) -> FleetPlan:
+        """:meth:`plan` with the merged greedy as ONE batched top-R
+        selection (``kernels/gain_topr``) over the stacked tenant rows —
+        the jit fleet solve of DESIGN.md §16.
+
+        The Program-(6) floors and the gain tables are built by the same
+        float64 numpy code as :meth:`plan`, and ``gain_topr`` implements
+        exactly ``greedy_increments``'s threshold + row-major tie rule,
+        so under ``jax.config.enable_x64`` the plan is bit-identical to
+        the scalar path (tests/test_planner.py asserts equality; without
+        x64 the float32 cast can resolve near-ties differently).
+
+        ``mesh`` (1-D) runs the selection as a cross-device fleet
+        reduction: the stacked rows are sharded over devices, each shard
+        ``all_gather``s the merged gain table, solves the SAME global
+        top-R (replicated, so every device agrees bitwise), and keeps its
+        own rows' take — Programs (4)/(6) over the merged gain tables of
+        a sharded tenant stack.
+        """
+        resolved, ctx = self._floors(topologies, k_max)
+        take = np.zeros(sum(top.n for _, top in resolved), dtype=np.int64)
+        if ctx["budget"] > 0:
+            rows, k_start, evals = self._gain_rows(
+                resolved, ctx["starts"], ctx["budget"]
+            )
+            ctx["evals"] += evals
+            take = _merged_topr(rows, k_start, ctx["budget"], mesh=mesh)
+        return self._assemble(resolved, take, ctx)
+
+    # ------------------------------------------------------------------ #
+    # Shared plan stages (scalar + batched solvers)
+    # ------------------------------------------------------------------ #
+    def _floors(
+        self, topologies: dict[str, Topology] | None, k_max: int | None
+    ) -> tuple[list, dict]:
+        """Resolve tenants, compute Program-(6) floors, classify overload,
+        and derive the residual budget — everything before the greedy."""
         k_max = self.k_max if k_max is None else k_max
         tops = topologies or {}
         resolved = [(t, t.resolve(tops.get(t.name))) for t in self.tenants]
@@ -193,32 +246,43 @@ class FleetPlanner:
         overloaded = needed_total > k_max
         starts = k_min if overloaded else floors  # best-effort vs floors-granted
         granted = int(sum(int(s.sum()) for s in starts))
-        budget = k_max - granted
+        return resolved, {
+            "k_max": k_max,
+            "needed_total": needed_total,
+            "overloaded": overloaded,
+            "unreachable": unreachable,
+            "starts": starts,
+            "budget": k_max - granted,
+            "evals": evals,
+        }
 
-        # --- Merged weighted greedy over the remaining budget ----------- #
-        sizes = [top.n for _, top in resolved]
-        take = np.zeros(sum(sizes), dtype=np.int64)
-        if budget > 0:
-            k_start = np.concatenate([s.astype(np.int64) for s in starts])
-            width = int(max(int(s.max()) for s in starts)) + budget
-            rows = []
-            for (tenant, top), s in zip(resolved, starts):
-                k_hi = int(s.max()) + budget
-                T, G = gain_table(top, k_hi)
-                evals += T.size
-                w = self.weight(tenant, top)
-                Gw = np.full((top.n, width), -np.inf)
-                Gw[:, :k_hi] = w * G
-                rows.append(Gw)
-            take = greedy_increments(np.vstack(rows), k_start, budget)
+    def _gain_rows(
+        self, resolved: list, starts: list, budget: int
+    ) -> tuple[np.ndarray, np.ndarray, int]:
+        """Stacked weighted gain rows ``[sum_m N_m, width]`` + start
+        columns — the merged table both solvers select from."""
+        evals = 0
+        k_start = np.concatenate([s.astype(np.int64) for s in starts])
+        width = int(max(int(s.max()) for s in starts)) + budget
+        rows = []
+        for (tenant, top), s in zip(resolved, starts):
+            k_hi = int(s.max()) + budget
+            T, G = gain_table(top, k_hi)
+            evals += T.size
+            w = self.weight(tenant, top)
+            Gw = np.full((top.n, width), -np.inf)
+            Gw[:, :k_hi] = w * G
+            rows.append(Gw)
+        return np.vstack(rows), k_start, evals
 
-        # --- Assemble ---------------------------------------------------- #
+    def _assemble(self, resolved: list, take: np.ndarray, ctx: dict) -> FleetPlan:
         k_out: dict[str, np.ndarray] = {}
         per_tenant: dict[str, AllocationResult] = {}
         unmet: list[str] = []
         objective = 0.0
         off = 0
-        for (tenant, top), s, n in zip(resolved, starts, sizes):
+        for (tenant, top), s in zip(resolved, ctx["starts"]):
+            n = top.n
             k = np.asarray(s, dtype=np.int64) + take[off : off + n]
             off += n
             et = top.expected_sojourn(k)
@@ -232,11 +296,69 @@ class FleetPlanner:
             k=k_out,
             per_tenant=per_tenant,
             total=int(sum(int(k.sum()) for k in k_out.values())),
-            k_max=k_max,
-            needed_total=needed_total,
-            overloaded=overloaded,
+            k_max=ctx["k_max"],
+            needed_total=ctx["needed_total"],
+            overloaded=ctx["overloaded"],
             unmet=tuple(unmet),
-            unreachable=tuple(unreachable),
+            unreachable=tuple(ctx["unreachable"]),
             objective=objective,
-            evaluations=evals,
+            evaluations=ctx["evals"],
         )
+
+
+def _merged_topr(
+    G: np.ndarray, k_start: np.ndarray, budget: int, *, mesh=None
+) -> np.ndarray:
+    """``greedy_increments``'s selection as one batched ``gain_topr`` call
+    over the merged fleet rows (optionally as a cross-device reduction).
+
+    Gathers the same ``[R, budget]`` candidate window the scalar greedy
+    walks (rows start at each operator's floor; entries are finite there
+    because floors sit at/above every stability minimum), then hands the
+    whole fleet's budget to the globally largest positive gains in one
+    top-R selection.  With ``mesh``, rows are sharded across devices and
+    each shard ``all_gather``s the full table before solving — every
+    device computes the identical global selection, then keeps its own
+    rows (DESIGN.md §16 fleet reduction).
+    """
+    import jax.numpy as jnp
+
+    from ..kernels.gain_topr import ops as topr_ops
+
+    r = G.shape[0]
+    if budget <= 0:
+        return np.zeros(r, dtype=np.int64)
+    idx = k_start[:, None] + np.arange(budget)[None, :]
+    if idx.max() >= G.shape[1]:
+        raise ValueError(
+            f"gain table too narrow: need column {int(idx.max())}, have {G.shape[1]}"
+        )
+    cand = G[np.arange(r)[:, None], idx]  # [R, budget]
+    budget_arr = jnp.asarray([budget], dtype=jnp.int32)
+    if mesh is None:
+        take = topr_ops.gain_topr(jnp.asarray(cand[None]), budget_arr)[0]
+        return np.asarray(take, dtype=np.int64)
+
+    from jax import lax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    if len(mesh.axis_names) != 1:
+        raise ValueError(f"fleet mesh must be 1-D; got axes {mesh.axis_names}")
+    axis = mesh.axis_names[0]
+    d = int(mesh.size)
+    r_pad = -(-r // d) * d
+    if r_pad > r:  # zero-gain rows are never selected
+        cand = np.concatenate([cand, np.zeros((r_pad - r, budget))])
+
+    def solve(local_rows):
+        merged = lax.all_gather(local_rows, axis, axis=0, tiled=True)
+        take_all = topr_ops.gain_topr(merged[None], budget_arr)[0]
+        i0 = lax.axis_index(axis) * local_rows.shape[0]
+        return lax.dynamic_slice_in_dim(take_all, i0, local_rows.shape[0])
+
+    take = shard_map(
+        solve, mesh=mesh, in_specs=P(axis, None), out_specs=P(axis),
+        check_rep=False,
+    )(jnp.asarray(cand))
+    return np.asarray(take[:r], dtype=np.int64)

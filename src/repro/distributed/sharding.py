@@ -26,6 +26,7 @@ from __future__ import annotations
 from typing import Any
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -37,7 +38,28 @@ __all__ = [
     "safe_spec",
     "tree_shardings",
     "batch_spec",
+    "fleet_mesh",
 ]
+
+
+def fleet_mesh(n_devices: int | None = None, *, axis: str = "fleet") -> Mesh:
+    """1-D mesh over the scenario/tenant batch axis (DESIGN.md §16).
+
+    The control plane is data-parallel over B, so its mesh is a single
+    axis — unlike the (pod, data, model) model meshes above.  Defaults to
+    every visible device; pass ``n_devices=1`` for the pinned-to-one-
+    device baseline the bench compares against.  On CPU hosts set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` *before* jax
+    imports to emulate a multi-device mesh (the CI lane does this).
+    """
+    devices = jax.devices()
+    if n_devices is not None:
+        if n_devices > len(devices):
+            raise ValueError(
+                f"requested {n_devices} devices, only {len(devices)} visible"
+            )
+        devices = devices[:n_devices]
+    return Mesh(np.asarray(devices), (axis,))
 
 TRAIN_RULES: dict[str, Any] = {
     "batch": ("pod", "data"),

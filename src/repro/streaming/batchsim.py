@@ -144,6 +144,32 @@ class BatchArrays:
     def n(self) -> int:
         return self.ext.shape[2]
 
+    def pad_batch(self, b_total: int) -> "BatchArrays":
+        """Append ``b_total - B`` inert batch lanes (device-mesh padding,
+        DESIGN.md §16): zero arrivals/routing, unit service rate, inactive.
+        Such lanes stay identically zero through the recurrence and the
+        controller provably decides ``"none"`` on them, so padding never
+        influences real scenarios."""
+        t, b, n = self.ext.shape
+        if b_total < b:
+            raise ValueError(f"b_total {b_total} < batch {b}")
+        if b_total == b:
+            return self
+        pad = b_total - b
+        return BatchArrays(
+            ext=np.concatenate([self.ext, np.zeros((t, pad, n))], axis=1),
+            routing=np.concatenate([self.routing, np.zeros((pad, n, n))]),
+            mu=np.concatenate([self.mu, np.ones((pad, n))]),
+            group=np.concatenate([self.group, np.zeros((pad, n), dtype=bool)]),
+            alpha=np.concatenate([self.alpha, np.zeros((pad, n))]),
+            cap_queue=np.concatenate([self.cap_queue, np.full((pad, n), np.inf)]),
+            dt=self.dt,
+            warmup_steps=self.warmup_steps,
+            active=np.concatenate([self.active, np.zeros((pad, n), dtype=bool)]),
+            speed=None if self.speed is None
+            else np.concatenate([self.speed, np.ones((pad, n))]),
+        )
+
 
 @dataclass
 class BatchSimResult:

@@ -460,11 +460,21 @@ class Scenario:
 # --------------------------------------------------------------------------- #
 # Packing: scenarios -> BatchArrays
 # --------------------------------------------------------------------------- #
-def pack_scenarios(scenarios: Sequence[Scenario]) -> BatchArrays:
+def pack_scenarios(
+    scenarios: Sequence[Scenario], *, pad_to: int | None = None
+) -> BatchArrays:
     """Pack B scenarios (shared dt/horizon/warmup) into one batch.
 
     Scenarios with fewer operators than the batch maximum are padded with
     inactive zero-traffic lanes (mu = 1, no routing) that never see mass.
+
+    ``pad_to`` additionally pads the *batch* axis to that extent with
+    fully inert scenario lanes (``active`` all-False, zero arrivals) —
+    the device-mesh case where B must be a multiple of the device count
+    (DESIGN.md §16).  Masked lanes provably decide ``"none"`` in both
+    the numpy twin and the jit decide (tests/test_mesh_control.py
+    asserts this bit-for-bit); mixed-width stacks no longer assume the
+    packed B is exact.
     """
     if not scenarios:
         raise ValueError("need at least one scenario")
@@ -504,7 +514,7 @@ def pack_scenarios(scenarios: Sequence[Scenario]) -> BatchArrays:
         if sv is not None:
             speed[bi, :ni] = sv
             heterogeneous = True
-    return BatchArrays(
+    arrays = BatchArrays(
         ext=ext,
         routing=routing,
         mu=mu,
@@ -516,6 +526,9 @@ def pack_scenarios(scenarios: Sequence[Scenario]) -> BatchArrays:
         active=active,
         speed=speed if heterogeneous else None,
     )
+    if pad_to is not None:
+        arrays = arrays.pad_batch(int(pad_to))
+    return arrays
 
 
 def pack_allocations(scenarios: Sequence[Scenario], ks) -> np.ndarray:

@@ -85,3 +85,110 @@ def test_atomic_overwrite(tmp_path):
     out, _ = st.restore(tree(), step=1)
     np.testing.assert_array_equal(out["params"]["w"], tree(seed=1)["params"]["w"])
     assert not list(tmp_path.glob("*.tmp"))
+
+# --------------------------------------------------------------------------- #
+# The fused control plane's donated carry (DESIGN.md §16): checkpoint ->
+# restore -> resume must be bit-identical to the straight-through run.
+# --------------------------------------------------------------------------- #
+def _control_loop(proactive=None):
+    import repro.core.controller as ctl
+    from repro.api.session import ScenarioRunner
+    from repro.streaming.scenarios import scenario_matrix
+
+    scens = [
+        s.with_(negotiated=False)
+        for s in scenario_matrix(4, seed=19, horizon=20.0, warmup=5.0, dt=0.05)
+    ]
+    r = ScenarioRunner(scens, tick_interval=5.0, backend="jax",
+                       proactive=proactive)
+    loop, n_ticks = ctl.make_fused_loop(
+        r.arrays, r.static, r._params(),
+        steps_per_tick=r._steps_per_tick, warmup_seconds=scens[0].warmup,
+        proactive=r.proactive_cfg,
+    )
+    return r, loop, n_ticks
+
+
+@pytest.mark.parametrize("proactive", [False, True],
+                         ids=["reactive", "proactive"])
+def test_controller_state_checkpoint_resume_bit_identical(tmp_path, proactive):
+    """Save the ControllerState mid-horizon, restore into a fresh loop,
+    run the rest: outputs match a straight-through run bit for bit
+    (including the ForecastState leaves on the proactive path)."""
+    cfg = None
+    if proactive:
+        from repro.forecast.mpc import MPCConfig, PredictorParams
+
+        cfg = MPCConfig(horizon=3, window=12, min_scored=2,
+                        predictor=PredictorParams(kind="holt", alpha=0.6,
+                                                  beta=0.4))
+    r, loop, n_ticks = _control_loop(cfg)
+    ref = {k: np.asarray(v) for k, v in loop(r.k).items()}
+
+    r2, loop2, _ = _control_loop(cfg)
+    state = loop2.init(r2.k)
+    state, _ = loop2.run(state, 2)
+    st = CheckpointStore(tmp_path)
+    st.save(2, state)
+
+    # Fresh loop (new compiled executables), restore into a template built
+    # from init() — the shapes/dtypes of a tick-0 carry.
+    r3, loop3, _ = _control_loop(cfg)
+    template = loop3.init(r3.k)
+    restored, _extra = st.restore(template, step=2)
+    import repro.core.controller as ctl
+
+    restored = ctl.ControllerState(*restored)
+    assert int(restored.tick) == 2
+    if proactive:
+        assert len(restored.fstate) > 0
+    state3, out = loop3.run(restored)  # the remaining n_ticks - 2 windows
+    for key in ("codes", "k", "applied"):
+        np.testing.assert_array_equal(
+            np.asarray(out[key]), ref[key][2:], err_msg=key
+        )
+    for key in ("k_final", "q_final", "offered", "served", "dropped",
+                "ext_admitted", "ext_offered", "q_int", "q_max"):
+        np.testing.assert_array_equal(np.asarray(out[key]), ref[key],
+                                      err_msg=key)
+    if proactive:
+        np.testing.assert_array_equal(np.asarray(out["mpc_used"]),
+                                      ref["mpc_used"][2:])
+
+
+def test_controller_state_checkpoint_is_layout_independent(tmp_path):
+    """The carry saved from an unsharded run restores onto a mesh-sharded
+    loop (and vice versa is covered by shape identity): the store keys by
+    pytree path, not device layout."""
+    import jax as _jax
+
+    r, loop, n_ticks = _control_loop()
+    state = loop.init(r.k)
+    state, _ = loop.run(state, 1)
+    st = CheckpointStore(tmp_path)
+    st.save(1, state)
+    if len(_jax.devices()) < 2:
+        pytest.skip("mesh restore leg needs >= 2 devices")
+    import repro.core.controller as ctl
+    from repro.api.session import ScenarioRunner
+    from repro.distributed.sharding import fleet_mesh
+    from repro.streaming.scenarios import scenario_matrix
+
+    scens = [
+        s.with_(negotiated=False)
+        for s in scenario_matrix(4, seed=19, horizon=20.0, warmup=5.0, dt=0.05)
+    ]
+    rm = ScenarioRunner(scens, tick_interval=5.0, backend="jax",
+                        mesh=fleet_mesh(2))
+    loop_m, _ = ctl.make_fused_loop(
+        rm.arrays, rm.static, rm._params(),
+        steps_per_tick=rm._steps_per_tick, warmup_seconds=scens[0].warmup,
+        mesh=fleet_mesh(2),
+    )
+    template = loop_m.init(rm.k)
+    restored, _ = st.restore(template, step=1)
+    restored = ctl.ControllerState(*restored)
+    _, out = loop_m.run(restored)
+    ref = {k: np.asarray(v) for k, v in loop(r.k).items()}
+    np.testing.assert_array_equal(np.asarray(out["codes"]), ref["codes"][1:])
+    np.testing.assert_array_equal(np.asarray(out["k_final"]), ref["k_final"])

@@ -147,6 +147,56 @@ def test_tenant_validation():
 
 
 # ------------------------------------------------------------------ #
+# plan_batched: the kernel/sharded top-R solve vs the scalar greedy
+# ------------------------------------------------------------------ #
+def _plans_equal(a, b):
+    assert set(a.k) == set(b.k)
+    for name in a.k:
+        np.testing.assert_array_equal(a.k[name], b.k[name], err_msg=name)
+    assert a.total == b.total and a.overloaded == b.overloaded
+    assert a.unmet == b.unmet and a.unreachable == b.unreachable
+
+
+@pytest.mark.parametrize("objective", ["fair", "throughput"])
+def test_plan_batched_matches_scalar_greedy(objective):
+    planner = FleetPlanner(ten_tenant_fleet(), k_max=220, objective=objective)
+    _plans_equal(planner.plan(), planner.plan_batched())
+
+
+def test_plan_batched_matches_when_overloaded():
+    tenants = [
+        Tenant(f"o{i}", graph=AppGraph.chain([(f"u{i}", 2.0)], lam0=10.0), t_max=0.51)
+        for i in range(4)
+    ]
+    planner = FleetPlanner(tenants, 26)
+    _plans_equal(planner.plan(), planner.plan_batched())
+
+
+def test_plan_batched_matches_tight_pool():
+    """Pool between the floors and the T_max-satisfying total: the greedy
+    spends a small budget where gains are steepest — the batched top-R
+    must pick the identical increments."""
+    planner = FleetPlanner(ten_tenant_fleet(), k_max=205)
+    _plans_equal(planner.plan(), planner.plan_batched())
+
+
+def test_plan_batched_on_fleet_mesh_matches():
+    """The cross-device fleet reduction (all-gather of per-shard gain
+    tables, DESIGN.md §16) solves the same Program (4)."""
+    import jax
+
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices")
+    from repro.distributed.sharding import fleet_mesh
+
+    planner = FleetPlanner(ten_tenant_fleet(), k_max=220)
+    _plans_equal(planner.plan(), planner.plan_batched(mesh=fleet_mesh(2)))
+    # R=10 tenants... rows; 4-way mesh exercises row padding
+    if len(jax.devices()) >= 4:
+        _plans_equal(planner.plan(), planner.plan_batched(mesh=fleet_mesh(4)))
+
+
+# ------------------------------------------------------------------ #
 # FleetSession (model-only + negotiator-driven)
 # ------------------------------------------------------------------ #
 def chain_graph_2(i, lam0, mus=(2.0, 6.0)):
