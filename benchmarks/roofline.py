@@ -79,6 +79,41 @@ def table(recs: list[dict]) -> str:
     return "\n".join(lines)
 
 
+def kernel_intensity_rows() -> list[tuple[str, float, float, str]]:
+    """Analytic (name, flops, hbm_bytes, note) rows for hand-written
+    kernels whose intensity comes from the BlockSpec tiling, not a
+    dry-run record.  Today: the fused batch-decide pass (DESIGN.md §12).
+    """
+    b, n, k, j_cap = 16, 8, 512, 48
+    # Per (lane, k) cell: Erlang-B step (3 flops: mul, fma, div), B->C
+    # conversion (~6), t_rep + mask (~5), gain row (~3).  Selection adds
+    # the 31-step threshold bisection (one masked count-reduce over the
+    # j_cap window each) and two final count/tie passes.
+    flops = b * n * (k * 17 + (31 + 2) * 2 * j_cap + 4 * 2)
+    # HBM: read 5 f32 + 2 i32 per lane + 1 i32 budget per scenario,
+    # write 4 f32 per lane.  T [B,N,K+1] and G [B,N,K] never leave VMEM
+    # — the two-pass path round-trips both (the fusion's whole point).
+    hbm = 4 * (7 * b * n + b) + 4 * 4 * b * n
+    saved = 2 * 4 * (b * n * (k + 1) + b * n * k)
+    note = (
+        f"B={b} N={n} K={k} j_cap={j_cap}; keeps T+G VMEM-resident "
+        f"(saves {saved / 2**20:.2f} MiB/decide vs two-pass)"
+    )
+    return [("decide_fused", float(flops), float(hbm), note)]
+
+
+def kernel_intensity_table() -> str:
+    lines = [
+        "| kernel | flops | HBM bytes | flop/byte | note |",
+        "|---|---|---|---|---|",
+    ]
+    for name, flops, hbm, note in kernel_intensity_rows():
+        lines.append(
+            f"| {name} | {flops:.3g} | {hbm:.3g} | {flops / hbm:.0f} | {note} |"
+        )
+    return "\n".join(lines)
+
+
 def roofline_fraction(rec: dict) -> float:
     """compute_s / bound_s: how close the cell is to its compute roofline."""
     r = rec["roofline"]
@@ -105,6 +140,8 @@ def main() -> None:
             )
         return
     print(table(recs))
+    print("\n### Kernel arithmetic intensity (analytic)\n")
+    print(kernel_intensity_table())
     ok = [r for r in recs if r.get("status") == "ok"]
     if ok:
         worst = min(ok, key=roofline_fraction)

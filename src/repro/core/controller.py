@@ -180,10 +180,17 @@ class ControllerParams:
     min_improvement: np.ndarray  # [B]
     horizon_seconds: np.ndarray  # [B]
     allocator: tuple  # [B] "table" | "heap"
+    fused_decide: bool = False  # dispatch the decide to kernels/decide_fused
 
     @classmethod
     def stack(cls, configs: Sequence, k_max: Sequence[int]) -> "ControllerParams":
         """From B SchedulerConfig-likes + resolved per-scenario budgets."""
+        flags = {bool(getattr(c, "fused_decide", False)) for c in configs}
+        if len(flags) > 1:
+            raise ValueError(
+                "fused_decide must agree across a stacked batch (one jit "
+                "program serves every scenario lane)"
+            )
         return cls(
             t_max=np.array(
                 [np.nan if c.t_max is None else float(c.t_max) for c in configs]
@@ -194,6 +201,7 @@ class ControllerParams:
             min_improvement=np.array([c.min_improvement for c in configs]),
             horizon_seconds=np.array([c.horizon_seconds for c in configs]),
             allocator=tuple(c.allocator for c in configs),
+            fused_decide=flags.pop() if flags else False,
         )
 
 
@@ -245,6 +253,7 @@ def pad_params(params: ControllerParams, b_total: int) -> ControllerParams:
         min_improvement=np.concatenate([params.min_improvement, np.full(pad, np.inf)]),
         horizon_seconds=np.concatenate([params.horizon_seconds, np.zeros(pad)]),
         allocator=params.allocator + ("table",) * pad,
+        fused_decide=params.fused_decide,
     )
 
 
@@ -784,6 +793,26 @@ def tick_batch(
 # --------------------------------------------------------------------------- #
 # jit path: the whole decide (and the fused simulate->decide loop) in JAX
 # --------------------------------------------------------------------------- #
+def _topr_ops():
+    """The ``kernels/gain_topr`` dispatch module, imported lazily ONCE.
+
+    Every decide path (reactive core, proactive MPC closure, fleet
+    planner) shares this accessor instead of repeating the lazy-import
+    block — importing here keeps ``import repro.core.controller`` free
+    of a hard jax dependency (numpy-twin-only callers never pay it).
+    """
+    from ..kernels.gain_topr import ops as topr_ops
+
+    return topr_ops
+
+
+def _decide_fused_ops():
+    """The ``kernels/decide_fused`` dispatch module (same lazy idiom)."""
+    from ..kernels.decide_fused import ops as fused_ops
+
+    return fused_ops
+
+
 def _decide_statics(static: ControllerStatic, params: ControllerParams) -> dict:
     """The decide's per-lane array inputs as one ``[B, ...]``-leading dict.
 
@@ -806,7 +835,13 @@ def _decide_statics(static: ControllerStatic, params: ControllerParams) -> dict:
 
 
 def _make_decide_core(
-    n: int, k_hi: int, pause: float, interpret: bool, force_kernel: bool
+    n: int,
+    k_hi: int,
+    pause: float,
+    interpret: bool,
+    force_kernel: bool,
+    fused: bool = False,
+    j_cap: int | None = None,
 ):
     """The decide body as a pure function of (statics dict, measurements).
 
@@ -814,11 +849,21 @@ def _make_decide_core(
     on whatever batch extent its inputs carry — the full ``B`` under plain
     jit, or one device's ``B/D`` shard under ``shard_map`` (every op is
     per-lane, so shard results are bit-identical to the unsharded run).
+
+    ``fused=True`` dispatches the model chain (sojourn table ->
+    Algorithm-1 gains -> Program-4 top-R -> E[T] gathers) to
+    ``kernels/decide_fused`` as ONE pass: the Pallas kernel on TPU /
+    ``force_kernel``, otherwise its jnp oracle — which is composed from
+    the identical expressions this two-pass body runs, so CPU decisions
+    are bit-for-bit the same either way (tier-1 enforced).  ``j_cap``
+    truncates the per-lane candidate window (exact while the budget
+    stays <= ``j_cap``; callers pass the fleet-wide max budget).
     """
     import jax
     import jax.numpy as jnp
 
-    from ..kernels.gain_topr import ops as topr_ops
+    topr_ops = _topr_ops()
+    fused_ops = _decide_fused_ops() if fused else None
     from .batched import sojourn_table_jax, solve_traffic_batch_jax
 
     def decide(st, lam_hat, mu_hat, drop_hat, lam0_hat, k_current):
@@ -878,46 +923,65 @@ def _make_decide_core(
         lam = jnp.where(jnp.isfinite(lam) & (lam >= 0), lam, 0.0)
         lam0_total = lam0.sum(axis=-1)
 
-        # --- one table pass: E[T_i](k) and Algorithm-1 gains ------------ #
-        T = sojourn_table_jax(
-            lam.reshape(-1), mu_eff.reshape(-1), k_hi=k_hi,
-            group=group.reshape(-1), alpha=alpha.reshape(-1),
-            min_k=jnp.ones(b * n, dtype=jnp.int32),
-            interpret=interpret, force_kernel=force_kernel,
-        ).reshape(b, n, k_hi + 1)
-        G = lam[..., None] * (T[..., :-1] - T[..., 1:])
-        G = jnp.where(jnp.isfinite(T[..., :-1]), G, jnp.inf)
-
-        # Minimal feasible allocation = first finite table column.
-        finite = jnp.isfinite(T)
-        has_finite = finite.any(axis=-1)
-        first = jnp.argmax(finite, axis=-1).astype(jnp.int32)
-        k_start = jnp.where(active, jnp.where(has_finite, first, k_hi + 1), 0)
-        floor_total = k_start.sum(axis=-1)
-        infeasible = solve_bad | (floor_total > k_max)
-
-        # --- Program (4): masked top-R over the gain table -------------- #
-        budget = jnp.clip(k_max - floor_total, 0, None).astype(jnp.int32)
-        j = jnp.arange(k_hi, dtype=jnp.int32)
-        idx = k_start[..., None] + j[None, None, :]
-        cand = jnp.take_along_axis(G, jnp.clip(idx, 0, k_hi - 1), axis=-1)
-        cand = jnp.where(
-            (idx < k_hi) & active[..., None] & jnp.isfinite(cand), cand, 0.0
-        )
-        take = topr_ops.gain_topr(
-            cand, budget, interpret=interpret, force_kernel=force_kernel
-        )
-        k4 = k_start + take
-
-        def _et(k_vec):
-            per_op = jnp.take_along_axis(
-                T, jnp.clip(k_vec, 0, k_hi).astype(jnp.int32)[..., None], axis=-1
-            )[..., 0]
+        def _et_of(per_op):
+            # Shared pricing tail: both decide paths produce raw per-op
+            # T gathers and normalise them HERE with the same expressions,
+            # so fused-on/off E[T] parity reduces to the gathers.
             contrib = jnp.where(lam > 0, lam * per_op, 0.0)
             return contrib.sum(axis=-1) / jnp.maximum(lam0_total, 1e-300)
 
-        et_cur = _et(k_cur)
-        et4 = _et(k4)
+        if fused:
+            # --- ONE fused pass: table -> gains -> Program (4) -> E[T] -- #
+            k4, k_start, t_cur_op, t4_op = fused_ops.batch_decide(
+                lam, mu_eff, group=group, alpha=alpha, active=active,
+                k_cur=k_cur, k_max=k_max, k_hi=k_hi, j_cap=j_cap,
+                interpret=interpret, force_kernel=force_kernel,
+            )
+            floor_total = k_start.sum(axis=-1)
+            infeasible = solve_bad | (floor_total > k_max)
+        else:
+            # --- one table pass: E[T_i](k) and Algorithm-1 gains -------- #
+            T = sojourn_table_jax(
+                lam.reshape(-1), mu_eff.reshape(-1), k_hi=k_hi,
+                group=group.reshape(-1), alpha=alpha.reshape(-1),
+                min_k=jnp.ones(b * n, dtype=jnp.int32),
+                interpret=interpret, force_kernel=force_kernel,
+            ).reshape(b, n, k_hi + 1)
+            G = lam[..., None] * (T[..., :-1] - T[..., 1:])
+            G = jnp.where(jnp.isfinite(T[..., :-1]), G, jnp.inf)
+
+            # Minimal feasible allocation = first finite table column.
+            finite = jnp.isfinite(T)
+            has_finite = finite.any(axis=-1)
+            first = jnp.argmax(finite, axis=-1).astype(jnp.int32)
+            k_start = jnp.where(active, jnp.where(has_finite, first, k_hi + 1), 0)
+            floor_total = k_start.sum(axis=-1)
+            infeasible = solve_bad | (floor_total > k_max)
+
+            # --- Program (4): masked top-R over the gain table ---------- #
+            budget = jnp.clip(k_max - floor_total, 0, None).astype(jnp.int32)
+            j = jnp.arange(k_hi, dtype=jnp.int32)
+            idx = k_start[..., None] + j[None, None, :]
+            cand = jnp.take_along_axis(G, jnp.clip(idx, 0, k_hi - 1), axis=-1)
+            cand = jnp.where(
+                (idx < k_hi) & active[..., None] & jnp.isfinite(cand), cand, 0.0
+            )
+            take = topr_ops.gain_topr(
+                cand, budget, interpret=interpret, force_kernel=force_kernel
+            )
+            k4 = k_start + take
+
+            def _gather(k_vec):
+                return jnp.take_along_axis(
+                    T, jnp.clip(k_vec, 0, k_hi).astype(jnp.int32)[..., None],
+                    axis=-1,
+                )[..., 0]
+
+            t_cur_op = _gather(k_cur)
+            t4_op = _gather(k4)
+
+        et_cur = _et_of(t_cur_op)
+        et4 = _et_of(t4_op)
 
         # --- gates (vectorized improvement + cost/benefit) -------------- #
         unchanged = jnp.where(active, k4 == k_cur, True).all(axis=-1)
@@ -976,6 +1040,7 @@ def make_decide_jax(
     pause_seconds: float | None = None,
     interpret: bool = False,
     force_kernel: bool = False,
+    fused: bool | None = None,
     mesh=None,
 ):
     """Compile the batched decide into one jit program.
@@ -1004,6 +1069,12 @@ def make_decide_jax(
     (DESIGN.md §14): a singular/unstable traffic solve is detected from
     non-finite or negative solved rates (no eigvalue check inside jit),
     and Program (6) sizing is skipped (it only feeds negotiator leases).
+
+    ``fused`` routes the model chain through ``kernels/decide_fused``
+    (one pass, DESIGN.md §12); ``None`` reads ``params.fused_decide``
+    (the SchedulerConfig knob, default off).  On CPU the fused oracle is
+    bit-exact with the two-pass path, so flipping the knob never changes
+    a decision — only the dispatch.
     """
     import jax
     import jax.numpy as jnp
@@ -1014,7 +1085,15 @@ def make_decide_jax(
         RebalanceCostModel().pause_cache_miss if pause_seconds is None
         else pause_seconds
     )
-    core = _make_decide_core(n, k_hi, pause, interpret, force_kernel)
+    if fused is None:
+        fused = bool(getattr(params, "fused_decide", False))
+    # Exactness bound for the fused path's candidate-window truncation:
+    # every scenario's Program-4 budget is <= its k_max, so the fleet max
+    # caps the window (ref.py proof) — static because params is static.
+    j_cap = min(k_hi, max(int(params.k_max.max()), 1))
+    core = _make_decide_core(
+        n, k_hi, pause, interpret, force_kernel, fused=fused, j_cap=j_cap
+    )
 
     if mesh is None:
         st = {k: jnp.asarray(v) for k, v in _decide_statics(static, params).items()}
@@ -1146,6 +1225,7 @@ def make_fused_loop(
     warmup_seconds: float | None = None,
     interpret: bool = False,
     force_kernel: bool = False,
+    fused: bool | None = None,
     proactive=None,
     mesh=None,
 ):
@@ -1198,6 +1278,9 @@ def make_fused_loop(
     steps = arrays.steps
     n_ticks = steps // steps_per_tick
     k_hi_res = int(k_hi if k_hi is not None else max(int(params.k_max.max()), 1))
+    if fused is None:
+        fused = bool(getattr(params, "fused_decide", False))
+    j_cap = min(k_hi_res, max(int(params.k_max.max()), 1))
 
     if mesh is not None:
         axis, n_shards = _mesh_axis(mesh)
@@ -1209,7 +1292,7 @@ def make_fused_loop(
 
     decide_core = _make_decide_core(
         n, k_hi_res, float(RebalanceCostModel().pause_cache_miss),
-        interpret, force_kernel,
+        interpret, force_kernel, fused=fused, j_cap=j_cap,
     )
     window = window_step_fn(interpret=interpret, force_kernel=force_kernel)
     # Every [B, ...]-leading array rides in one of two dicts so the mesh
@@ -1251,8 +1334,8 @@ def make_fused_loop(
 
     if proactive is not None:
         from ..forecast.mpc import forecast_init_state, forecast_step, mpc_plan
-        from ..kernels.gain_topr import ops as topr_ops
 
+        topr_ops = _topr_ops()
         fstate0 = forecast_init_state(b, n, proactive, xp=jnp, dtype=sim["mu"].dtype)
 
         def topr(c, bud):
@@ -1280,6 +1363,35 @@ def make_fused_loop(
         t_max = sim_d["t_max"]
         alpha = sim_d["alpha"]
         group = sim_d["group"]
+
+        if proactive is not None and fused:
+            # MPC candidate allocator through the SAME fused dispatch:
+            # the planner hands us the candidate budgets as absolute
+            # totals (already clipped to [floor_total, k_max]), so the
+            # fused pass's internal budget = clip(k_max - floor, 0)
+            # equals the planner's `extra` exactly — the tables agree
+            # bitwise (sojourn_table_arrays mirrors sojourn_table_jax),
+            # hence so do k_start and the selected increments.
+            def mpc_alloc(lam_m, budgets_m):
+                bb = active.shape[0]  # this chunk's batch extent
+                m = lam_m.shape[0]
+                r = m // bb
+
+                def rep(x):
+                    return jnp.broadcast_to(
+                        x[:, None, :], (bb, r, x.shape[-1])
+                    ).reshape(m, x.shape[-1])
+
+                k4_m, _, _, _ = _decide_fused_ops().batch_decide(
+                    lam_m, rep(mu_eff), group=rep(group), alpha=rep(alpha),
+                    active=rep(active),
+                    k_cur=jnp.zeros(lam_m.shape, dtype=jnp.int32),
+                    k_max=budgets_m, k_hi=k_hi_res, j_cap=j_cap,
+                    interpret=interpret, force_kernel=force_kernel,
+                )
+                return k4_m
+        else:
+            mpc_alloc = None
 
         def tick_fn(carry, t_idx):
             if proactive is not None:
@@ -1334,6 +1446,7 @@ def make_fused_loop(
                     cap_queue=sim_d["cap_queue"], t_max=t_max,
                     k_max=st_d["k_max"],
                     span=span, cfg=proactive, k_hi=k_hi_res, xp=jnp, topr=topr,
+                    alloc=mpc_alloc,
                 )
                 # Inline recompute of the trigger + completeness (decide
                 # owns them internally; same formulas as the twin's gating).

@@ -323,8 +323,9 @@ def _merged_topr(
     """
     import jax.numpy as jnp
 
-    from ..kernels.gain_topr import ops as topr_ops
+    from .controller import _topr_ops
 
+    topr_ops = _topr_ops()
     r = G.shape[0]
     if budget <= 0:
         return np.zeros(r, dtype=np.int64)

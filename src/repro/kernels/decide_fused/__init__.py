@@ -1,0 +1,22 @@
+"""Fused batch-decide: offered load -> Program-4 allocation in one pass.
+
+The reactive jit decide (core/controller.py) historically ran the model
+chain as two kernel dispatches with the full ``[B, N, K]`` Erlang/
+sojourn/gain tables materialised between them: ``kernels/erlang_c``
+(recurrence) -> jnp table/gain construction -> ``kernels/gain_topr``
+(Program-4 top-R selection).  This package fuses the whole chain —
+Erlang-B/C recurrence, the ``E[T_i](k)`` sojourn table, Algorithm-1
+marginal gains, the budget-th-largest bisection, and the final
+``E[T]``-at-allocation gathers — into one VMEM-resident Pallas pass
+(`kernel.py`), so the gain table never leaves the core.
+
+Layout mirrors the repo kernel idiom:
+
+* ``kernel.py`` — the Pallas TPU kernel (float32, one grid step per
+  scenario);
+* ``ref.py``    — the jnp oracle, composed from the *identical* ops the
+  two-pass decide runs (so knob-on CPU decisions are bit-for-bit equal
+  to knob-off), plus a float64 numpy twin;
+* ``ops.py``    — dispatch (kernel on TPU / ``force_kernel``, oracle
+  elsewhere) and the scan-unroll autotune hook the bench persists.
+"""

@@ -1,0 +1,83 @@
+"""Dispatch wrapper: Pallas fused kernel on TPU, jnp oracle elsewhere.
+
+Also hosts the block-shape tuning hooks the compiled bench tier
+persists: ``DEFAULT_UNROLL`` (the Erlang scan unroll the CPU oracle
+runs with — unroll is bitwise-safe, so the tuned value is purely a perf
+knob) and ``autotune_unroll`` (a small sweep the bench records into
+``BENCH_kernels.json`` so a host's best factor is reproducible).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from . import kernel as _kernel, ref as _ref
+
+__all__ = ["batch_decide", "autotune_unroll", "DEFAULT_UNROLL", "UNROLL_SWEEP"]
+
+# Measured on the reference CPU host: unroll=4 is ~1.5x over unroll=1 on
+# the [112, 512] Erlang scan and the table is bitwise identical (tested).
+DEFAULT_UNROLL = 4
+UNROLL_SWEEP = (1, 2, 4, 8)
+
+
+def batch_decide(
+    lam,
+    mu_eff,
+    *,
+    group,
+    alpha,
+    active,
+    k_cur,
+    k_max,
+    k_hi: int,
+    j_cap: int | None = None,
+    unroll: int | None = None,
+    interpret: bool = False,
+    force_kernel: bool = False,
+    n_pad: int = _kernel._LANE,
+):
+    """``[B, N]`` solved rates -> ``(k4, k_start, t_cur, t4)``.
+
+    Kernel dispatch follows the repo idiom (``force_kernel`` or a real
+    TPU backend -> Pallas, else the jnp oracle; ``interpret`` alone does
+    not switch).  The oracle keeps the caller's dtype and is bit-exact
+    with the two-pass decide; the kernel is float32 end to end.
+    """
+    if force_kernel or jax.default_backend() == "tpu":
+        return _kernel.batch_decide_pallas(
+            lam, mu_eff, group, alpha, active, k_cur, k_max,
+            k_hi=k_hi, j_cap=j_cap, interpret=interpret, n_pad=n_pad,
+        )
+    return _ref.batch_decide(
+        lam, mu_eff, group=group, alpha=alpha, active=active,
+        k_cur=k_cur, k_max=k_max, k_hi=k_hi, j_cap=j_cap,
+        unroll=DEFAULT_UNROLL if unroll is None else unroll,
+        interpret=interpret, force_kernel=force_kernel,
+    )
+
+
+def autotune_unroll(a, *, k_hi: int, sweep=UNROLL_SWEEP, reps: int = 5):
+    """Time the Erlang-B reference scan per unroll factor.
+
+    Returns ``(best_unroll, {unroll: seconds})``.  Because unroll is
+    bitwise-safe the result only affects speed; the bench persists the
+    sweep so the chosen ``DEFAULT_UNROLL`` stays auditable per host.
+    """
+    import jax.numpy as jnp
+
+    from ..erlang_c import ref as _eref
+
+    a = jnp.asarray(a)
+    timings: dict[int, float] = {}
+    for u in sweep:
+        fn = jax.jit(lambda x, u=u: _eref.erlang_b_table(x, k_hi=k_hi, unroll=u))
+        fn(a).block_until_ready()  # compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            fn(a).block_until_ready()
+        timings[u] = (time.perf_counter() - t0) / reps
+    best = min(timings, key=timings.get)
+    return best, timings

@@ -1,0 +1,161 @@
+"""Pure-jnp oracle for the fused batch-decide pass, plus a numpy twin.
+
+``batch_decide`` runs the decide hot path's model chain — sojourn table,
+Algorithm-1 gains, minimal feasible allocation, Program-4 budget-th-
+largest selection, and the ``E[T]``-at-allocation gathers — as ONE
+function of the solved per-lane rates.  It is composed from the
+*identical* expressions the two-pass decide in ``core/controller.py``
+executes (same ``sojourn_table_jax`` call, same gain/window/tie-break
+construction, same ``kernels/gain_topr`` reference selection), so with
+the fused knob on the CPU decide produces bit-for-bit the decisions the
+two-pass path produces — that path stays the bit-exactness oracle.
+
+Two perf levers, both exactness-preserving:
+
+* ``unroll`` — the Erlang-B recurrence's ``lax.scan`` unroll factor.
+  Unrolling only restructures the loop; every lane still runs the same
+  float ops in the same order, so the table is bitwise identical for
+  any value (asserted in tests/test_kernels_all.py).
+* ``j_cap`` — truncates the per-operator candidate window to the first
+  ``j_cap`` gains past ``k_start``.  Per-lane gains are non-increasing
+  (paper Ineq. 5 — the same convexity the threshold-equals-greedy
+  argument already rests on), so positives form a prefix and no row can
+  receive more than ``budget <= j_cap`` increments: the selected set,
+  including row-major tie distribution, is provably unchanged (see
+  tests), while the threshold search shrinks from ``[B, N, K]`` to
+  ``[B, N, j_cap]``.  Callers must guarantee ``budget <= j_cap`` (the
+  controller passes the static fleet-wide ``max(k_max)``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["batch_decide", "batch_decide_np"]
+
+
+def batch_decide(
+    lam,
+    mu_eff,
+    *,
+    group,
+    alpha,
+    active,
+    k_cur,
+    k_max,
+    k_hi: int,
+    j_cap: int | None = None,
+    unroll: int = 1,
+    interpret: bool = False,
+    force_kernel: bool = False,
+):
+    """``[B, N]`` solved rates -> ``(k4, k_start, t_cur, t4)``.
+
+    ``lam`` are the solved (active-masked, clamped) per-operator arrival
+    rates, ``mu_eff`` the speed-scaled service rates, ``k_cur`` the
+    int32 allocation in force and ``k_max [B]`` the budgets.  Returns
+    the Program-4 allocation ``k4 [B, N]`` int32, the minimal feasible
+    allocation ``k_start [B, N]`` int32 (``k_hi + 1`` = infeasible lane),
+    and the per-operator sojourn values ``T[k_cur]`` / ``T[k4]`` —
+    multiplying by ``lam`` and normalising happens in the caller with
+    the same expressions both decide paths share, so ``E[T]`` parity
+    reduces to these gathers being exact.
+    """
+    import jax.numpy as jnp
+
+    from ...core.batched import sojourn_table_jax
+    from ..gain_topr import ref as topr_ref
+
+    lam = jnp.asarray(lam)
+    b, n = lam.shape
+    T = sojourn_table_jax(
+        lam.reshape(-1), jnp.asarray(mu_eff).reshape(-1), k_hi=k_hi,
+        group=jnp.asarray(group).reshape(-1), alpha=jnp.asarray(alpha).reshape(-1),
+        min_k=jnp.ones(b * n, dtype=jnp.int32),
+        interpret=interpret, force_kernel=force_kernel, unroll=unroll,
+    ).reshape(b, n, k_hi + 1)
+    G = lam[..., None] * (T[..., :-1] - T[..., 1:])
+    G = jnp.where(jnp.isfinite(T[..., :-1]), G, jnp.inf)
+
+    finite = jnp.isfinite(T)
+    has_finite = finite.any(axis=-1)
+    first = jnp.argmax(finite, axis=-1).astype(jnp.int32)
+    k_start = jnp.where(active, jnp.where(has_finite, first, k_hi + 1), 0)
+    floor_total = k_start.sum(axis=-1)
+
+    budget = jnp.clip(k_max - floor_total, 0, None).astype(jnp.int32)
+    jc = k_hi if j_cap is None else max(min(int(j_cap), k_hi), 1)
+    j = jnp.arange(jc, dtype=jnp.int32)
+    idx = k_start[..., None] + j[None, None, :]
+    cand = jnp.take_along_axis(G, jnp.clip(idx, 0, k_hi - 1), axis=-1)
+    cand = jnp.where(
+        (idx < k_hi) & active[..., None] & jnp.isfinite(cand), cand, 0.0
+    )
+    take = topr_ref.gain_topr(cand, budget)
+    k4 = k_start + take
+
+    def _gather(k_vec):
+        return jnp.take_along_axis(
+            T, jnp.clip(k_vec, 0, k_hi).astype(jnp.int32)[..., None], axis=-1
+        )[..., 0]
+
+    return k4, k_start, _gather(k_cur), _gather(k4)
+
+
+def batch_decide_np(
+    lam,
+    mu_eff,
+    *,
+    group,
+    alpha,
+    active,
+    k_cur,
+    k_max,
+    k_hi: int,
+    j_cap: int | None = None,
+):
+    """Float64 numpy twin of :func:`batch_decide` (same outputs).
+
+    Mirrors the oracle with the forecast plane's xp-generic table and
+    the numpy top-R twin — the debugging surface for the fused pass,
+    exact against the jnp oracle under enable_x64.
+    """
+    from ...forecast.mpc import gain_topr_np, sojourn_table_arrays
+
+    lam = np.asarray(lam, dtype=np.float64)
+    mu_eff = np.asarray(mu_eff, dtype=np.float64)
+    group = np.asarray(group, dtype=bool)
+    alpha = np.asarray(alpha, dtype=np.float64)
+    active = np.asarray(active, dtype=bool)
+    k_cur = np.asarray(k_cur)
+    k_max = np.asarray(k_max)
+    T = sojourn_table_arrays(lam, mu_eff, group, alpha, k_hi, xp=np)
+    with np.errstate(invalid="ignore"):  # inf - inf in masked (infeasible) cells
+        G = lam[..., None] * (T[..., :-1] - T[..., 1:])
+    G = np.where(np.isfinite(T[..., :-1]), G, np.inf)
+
+    finite = np.isfinite(T)
+    has_finite = finite.any(axis=-1)
+    first = np.argmax(finite, axis=-1).astype(np.int32)
+    k_start = np.where(active, np.where(has_finite, first, k_hi + 1), 0).astype(
+        np.int32
+    )
+    floor_total = k_start.sum(axis=-1)
+
+    budget = np.clip(k_max - floor_total, 0, None).astype(np.int64)
+    jc = k_hi if j_cap is None else max(min(int(j_cap), k_hi), 1)
+    j = np.arange(jc, dtype=np.int32)
+    idx = k_start[..., None] + j[None, None, :]
+    cand = np.take_along_axis(G, np.clip(idx, 0, k_hi - 1), axis=-1)
+    cand = np.where(
+        (idx < k_hi) & active[..., None] & np.isfinite(cand), cand, 0.0
+    )
+    take = gain_topr_np(cand, budget)
+    k4 = (k_start + take).astype(np.int32)
+
+    def _gather(k_vec):
+        return np.take_along_axis(
+            T, np.clip(k_vec, 0, k_hi).astype(np.int32)[..., None], axis=-1
+        )[..., 0]
+
+    return k4, k_start, _gather(k_cur), _gather(k4)

@@ -29,6 +29,18 @@ __all__ = ["gain_topr_pallas"]
 _LANE = 128
 
 
+@functools.lru_cache(maxsize=None)
+def _pad_shapes(n: int, j: int) -> tuple[int, int]:
+    """(lane-padded N, sublane-padded J) for the float32 tile.
+
+    Hoisted out of the traced wrapper body and cached per shape, so
+    retracing a new (B, N, J) never recomputes the pad arithmetic; the
+    padded entries ride through as zero gains, which the positivity mask
+    discards — asserted exactly in tests/test_kernels_all.py.
+    """
+    return n + ((-n) % _LANE), j + ((-j) % 8)
+
+
 def _gain_topr_kernel(cand_ref, budget_ref, take_ref):
     x = cand_ref[0]  # (Jp, Np) float32; masked/padding entries are 0
     budget = budget_ref[0, 0]  # int32
@@ -77,10 +89,9 @@ def gain_topr_pallas(cand, budget, *, interpret: bool = False):
     if cand.ndim != 3:
         raise ValueError(f"cand must be [B, N, J], got shape {cand.shape}")
     b, n, j = cand.shape
-    n_pad = (-n) % _LANE
-    j_pad = (-j) % 8
+    npad, jpad = _pad_shapes(n, j)
     x = jnp.pad(
-        jnp.asarray(cand, dtype=jnp.float32), ((0, 0), (0, n_pad), (0, j_pad))
+        jnp.asarray(cand, dtype=jnp.float32), ((0, 0), (0, npad - n), (0, jpad - j))
     )
     x = jnp.swapaxes(x, 1, 2)  # (B, Jp, Np): gains on sublanes, ops on lanes
     bud = jnp.asarray(budget, dtype=jnp.int32).reshape(b, 1)
@@ -88,11 +99,11 @@ def gain_topr_pallas(cand, budget, *, interpret: bool = False):
         _gain_topr_kernel,
         grid=(b,),
         in_specs=[
-            pl.BlockSpec((1, j + j_pad, n + n_pad), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, jpad, npad), lambda i: (i, 0, 0)),
             pl.BlockSpec((1, 1), lambda i: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((1, n + n_pad), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, n + n_pad), jnp.float32),
+        out_specs=pl.BlockSpec((1, npad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, npad), jnp.float32),
         interpret=interpret,
     )(x, bud)
     return take[:, :n].astype(jnp.int32)

@@ -605,6 +605,9 @@ def control_trace(
     *,
     tick_interval: float = 10.0,
     proactive=None,
+    backend: str = "numpy",
+    interpret: bool = False,
+    fused_decide: bool = False,
 ) -> dict:
     """JSON-able decision trace of the full control loop over ``scenarios``
     (the golden-trace surface, DESIGN.md §13).
@@ -619,14 +622,31 @@ def control_trace(
     plane, which is just as deterministic — the proactive golden fixture
     proves predictor + planner replayability.  Regenerate the committed
     fixtures with ``PYTHONPATH=src python tests/golden/regen.py``.
+
+    ``backend="jax"`` replays the same trace through the fused jit loop
+    under enable_x64 (bit-identical to the twin for non-negotiated
+    scenarios); ``fused_decide`` flips the one-pass
+    ``kernels/decide_fused`` dispatch inside it, and ``interpret`` runs
+    any Pallas dispatch in interpret mode — together the golden replay
+    surface for the fused-decide knob (tests/test_golden_traces.py).
     """
     from ..api.session import ScenarioRunner
 
-    runner = ScenarioRunner(
-        scenarios, tick_interval=tick_interval, backend="numpy",
-        proactive=proactive,
-    )
-    reports = runner.run()
+    def _run():
+        runner = ScenarioRunner(
+            scenarios, tick_interval=tick_interval, backend=backend,
+            proactive=proactive, interpret=interpret,
+            fused_decide=fused_decide,
+        )
+        return runner.run()
+
+    if backend == "numpy":
+        reports = _run()
+    else:
+        import jax
+
+        with jax.experimental.enable_x64():
+            reports = _run()
 
     def _traj(tr):
         if tr is None:

@@ -59,6 +59,12 @@ def entries():
         ("vld", vld_scenario(), None),
         ("fpd", fpd_scenario(), None),
         ("vld_proactive", flash_vld, mpc),
+        # Static-budget VLD: jit-eligible (no negotiator), so this one
+        # fixture is ALSO replayed through the fused jax loop with the
+        # kernels/decide_fused knob on (tests/test_golden_traces.py) —
+        # the knob-on decision surface must match this twin-generated
+        # trace bit-for-bit.
+        ("vld_fused", vld_scenario(name="vld_fused", negotiated=False), None),
     ]
 
 

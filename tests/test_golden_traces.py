@@ -42,7 +42,7 @@ def _replay(name):
     return want["scenarios"][name], got["scenarios"][name]
 
 
-@pytest.mark.parametrize("name", ["vld", "fpd", "vld_proactive"])
+@pytest.mark.parametrize("name", ["vld", "fpd", "vld_proactive", "vld_fused"])
 def test_golden_trace_replays(name):
     want, got = _replay(name)
     assert got["actions"] == want["actions"], (
@@ -59,6 +59,31 @@ def test_golden_trace_replays(name):
         f"{name} per-tick trajectory (k/miss/mpc_used) drifted; if "
         "intentional, regenerate the goldens"
     )
+    for metric in ("drop_rate", "mean_sojourn", "deadline_miss_rate"):
+        assert got[metric] == pytest.approx(want[metric], rel=1e-6, abs=1e-9), metric
+
+
+@pytest.mark.parametrize("fused_decide", [True, False])
+def test_golden_trace_replays_through_fused_jit_loop(fused_decide):
+    """The jit-eligible golden fixture replays bit-for-bit through the
+    fused jax loop — with the ``kernels/decide_fused`` knob ON (interpret
+    mode) and off.  The fixture itself is twin-generated, so this pins
+    twin == jit two-pass == jit fused on the decision surface."""
+    path = GOLDEN / "vld_fused_control_trace.json"
+    want = json.loads(path.read_text())["scenarios"]["vld_fused"]
+    scenario, proactive = ENTRIES["vld_fused"]
+    got = control_trace(
+        [scenario], tick_interval=10.0, proactive=proactive,
+        backend="jax", interpret=True, fused_decide=fused_decide,
+    )["scenarios"]["vld_fused"]
+    assert got["actions"] == want["actions"], (
+        "fused-knob replay drifted from the committed golden decision "
+        "sequence — the fused dispatch must be bit-exact on CPU"
+    )
+    assert got["allocations"] == want["allocations"]
+    assert got["provisioned_total"] == want["provisioned_total"]
+    for key in ("k_total", "miss", "warm"):
+        assert got["trajectory"][key] == want["trajectory"][key], key
     for metric in ("drop_rate", "mean_sojourn", "deadline_miss_rate"):
         assert got[metric] == pytest.approx(want[metric], rel=1e-6, abs=1e-9), metric
 
