@@ -1,5 +1,5 @@
 """Scenario-matrix benchmark: batch simulator throughput vs sequential DES
-(DESIGN.md §13).
+(DESIGN.md §13/§17).
 
 The claim: the vectorized discrete-time batch simulator
 (`streaming/batchsim.py`) turns the (topology x arrival-pattern x
@@ -14,9 +14,13 @@ points into hundreds of seeded scenarios per CI run.  Rows:
 * ``speedup_batch_vs_des_B64`` — the acceptance gate: the B=64 sweep must
   run >= 20x faster through the batch simulator than through B sequential
   DES runs (best backend counted);
-* ``conformance_mean_rel_err`` — mean |batch - DES| / DES visit-sum
-  sojourn over the sampled stable scenarios (the §13 divergence bound in
-  action);
+* ``conformance_*`` — the §17 fidelity gate, ASSERTED (not report-only):
+  mean |batch - DES| / DES visit-sum sojourn over a dedicated
+  longer-horizon stable matrix, with the DES side averaged over several
+  seeds (single-seed flash/mmpp runs carry up to ~37% CV, which would
+  make any sub-0.2 gate meaningless).  Per-family breakdown rows persist
+  to ``BENCH_scenarios.json``.  Gates: < 0.2 for the stochastic matrix,
+  < 0.05 for its deterministic (fluid-exact) variant;
 * ``controlled_matrix_*`` — the measure -> model -> rebalance loop swept
   over the matrix by ``ScenarioRunner`` (the CI smoke runs this at B=32).
 """
@@ -24,12 +28,93 @@ points into hundreds of seeded scenarios per CI run.  Rows:
 from __future__ import annotations
 
 import time
+from dataclasses import replace
 
 import numpy as np
 
 from repro.api.session import ScenarioRunner
 from repro.streaming.batchsim import BatchQueueSim
 from repro.streaming.scenarios import pack_allocations, pack_scenarios, scenario_matrix
+
+#: §17 fidelity gates — asserted below, mirrored by the tier-1
+#: ``test_conformance_policy_family_matrix`` test.
+CONFORMANCE_GATE_STABLE = 0.2
+CONFORMANCE_GATE_DETERMINISTIC = 0.05
+
+
+def _conformance(rows: list[tuple[str, float, str]], smoke: bool) -> None:
+    """Dedicated longer-horizon conformance block.
+
+    Separate from the throughput sweep on purpose: the timing matrix
+    runs short horizons (30-60s) where neither simulator has converged,
+    while the fidelity claim is about the converged visit-sum sojourn.
+    The config is identical in smoke and full (h=240, 12 scenarios, DES
+    averaged over 6 seeds, ~20s): fidelity is a correctness gate, not a
+    timing row, and single-seed diurnal runs carry up to ~52% CV — the
+    seed count is what makes the 0.2 gate meaningful, so smoke must not
+    weaken it.
+    """
+    del smoke
+    horizon = 240.0
+    n_scen = 12
+    n_seeds = 6
+    scens = scenario_matrix(n_scen, seed=0, horizon=horizon, warmup=20.0, dt=0.05)
+    det = [
+        replace(s, name=s.name + "-det",
+                arrival_kind="deterministic", service_kind="deterministic")
+        for s in scens
+    ]
+    fam_errs: dict[str, list[float]] = {}
+    variant_means: dict[str, float] = {}
+    for variant, batch in (("stable", scens), ("deterministic", det)):
+        arrays = pack_scenarios(batch)
+        k = pack_allocations(batch, [s.plan_k0() for s in batch])
+        res = BatchQueueSim(arrays, backend="numpy").run(k)
+        soj = res.sojourn(k, arrays.mu, arrays.group, arrays.alpha,
+                          ca2=arrays.ca2, cs2=arrays.cs2)
+        sat = res.saturated(k, arrays.mu, arrays.group, arrays.alpha)
+        errs = []
+        for i, s in enumerate(batch):
+            if sat[i].any():
+                continue  # the §13 divergence bound applies to stable scenarios
+            kd = dict(zip(s.graph.names, map(int, k[i, : s.graph.n])))
+            seeds = (s.seed,) if variant == "deterministic" else tuple(
+                s.seed + 1 + j for j in range(n_seeds)
+            )
+            des_vals = [s.simulator(kd, seed=sd).run().mean_visit_sum for sd in seeds]
+            des = float(np.mean(des_vals))
+            if not (np.isfinite(des) and des > 0):
+                continue
+            err = abs(float(soj[i]) - des) / des
+            errs.append(err)
+            if variant == "stable":
+                fam_errs.setdefault(s.name.rsplit("-", 1)[-1], []).append(err)
+        variant_means[variant] = float(np.mean(errs))
+        rows.append((
+            f"conformance_mean_rel_err_{variant}" if variant != "stable"
+            else "conformance_mean_rel_err",
+            variant_means[variant],
+            f"visit-sum sojourn, {len(errs)} stable scenarios, h={horizon:g}, "
+            f"DES x{len(seeds)} seeds (gate < "
+            f"{CONFORMANCE_GATE_DETERMINISTIC if variant == 'deterministic' else CONFORMANCE_GATE_STABLE})",
+        ))
+    for fam in ("constant", "diurnal", "flash", "mmpp"):
+        if fam in fam_errs:
+            rows.append((
+                f"conformance_rel_err_{fam}",
+                float(np.mean(fam_errs[fam])),
+                f"per-family breakdown, {len(fam_errs[fam])} scenarios",
+            ))
+    # The gate: asserted, so a fidelity regression fails the bench run
+    # (and the CI bench-smoke lane) instead of rotting in a report row.
+    assert variant_means["stable"] < CONFORMANCE_GATE_STABLE, (
+        f"conformance_mean_rel_err={variant_means['stable']:.4f} "
+        f">= {CONFORMANCE_GATE_STABLE} (stable matrix)"
+    )
+    assert variant_means["deterministic"] < CONFORMANCE_GATE_DETERMINISTIC, (
+        f"conformance_mean_rel_err_deterministic={variant_means['deterministic']:.4f} "
+        f">= {CONFORMANCE_GATE_DETERMINISTIC}"
+    )
 
 
 def run(smoke: bool = False) -> list[tuple[str, float, str]]:
@@ -43,7 +128,7 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     rows.append(("matrix_scenarios", float(b), f"scenarios, {arrays.steps} steps, N={arrays.n}"))
 
     t0 = time.perf_counter()
-    res_np = BatchQueueSim(arrays, backend="numpy").run(k)
+    BatchQueueSim(arrays, backend="numpy").run(k)
     t_np = time.perf_counter() - t0
     rows.append((f"batch_np_seconds_B{b}", t_np, "s whole-sweep (float64 twin)"))
 
@@ -53,22 +138,15 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     t_jax = time.perf_counter() - t0
     rows.append((f"batch_jax_seconds_B{b}", t_jax, "s whole-sweep (jit, post-warmup)"))
 
-    # Sequential event DES on a sample of the same scenarios.
+    # Sequential event DES on a sample of the same scenarios (timing only;
+    # fidelity moved to the dedicated asserted block below).
     t_des = 0.0
-    rel_errs = []
     for i in range(des_sample):
         s = scens[i]
         sim = s.simulator(dict(zip(s.graph.names, map(int, k[i, : s.graph.n]))))
         t0 = time.perf_counter()
-        des = sim.run()
+        sim.run()
         t_des += time.perf_counter() - t0
-        batch_soj = float(
-            res_np.sojourn(k, arrays.mu, arrays.group, arrays.alpha)[i]
-        )
-        if np.isfinite(des.mean_visit_sum) and des.mean_visit_sum > 0:
-            sat = res_np.saturated(k, arrays.mu, arrays.group, arrays.alpha)[i]
-            if not sat.any():  # §13 bound applies to stable scenarios
-                rel_errs.append(abs(batch_soj - des.mean_visit_sum) / des.mean_visit_sum)
     des_per = t_des / des_sample
     rows.append(("des_seconds_per_scenario", des_per, f"s mean over {des_sample} runs"))
     t_best = min(t_np, t_jax)
@@ -77,12 +155,8 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
         des_per * b / t_best,
         "x vs sequential DES (acceptance: >= 20x at B=64)",
     ))
-    if rel_errs:
-        rows.append((
-            "conformance_mean_rel_err",
-            float(np.mean(rel_errs)),
-            f"visit-sum sojourn, {len(rel_errs)} stable scenarios (target < 0.2)",
-        ))
+
+    _conformance(rows, smoke)
 
     # Full control loop over the matrix (the CI 32-scenario smoke).
     t0 = time.perf_counter()

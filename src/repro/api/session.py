@@ -1022,7 +1022,7 @@ class ScenarioRunner:
         misses).  ``mu_hat`` carries the reference-class priors — the
         controller applies the machine-class ``speed`` factors on the
         model side, mirroring the sim's scaled service capacity."""
-        from ..streaming.batchsim import little_wait, per_op_service_time, visit_sum_sojourn
+        from ..streaming.batchsim import composed_wait, per_op_service_time, visit_sum_sojourn
 
         a = self.arrays
         span = w["span"]
@@ -1030,7 +1030,10 @@ class ScenarioRunner:
         drop_hat = w["dropped"] / span
         mu_eff = a.mu if a.speed is None else a.mu * a.speed
         admitted = np.maximum(lam_hat - drop_hat, 0.0)
-        wait = little_wait(w["q_mean"], admitted, a.dt)
+        wait = composed_wait(
+            w["q_mean"], admitted, a.dt, span, self.k, a.mu, a.group, a.alpha,
+            a.speed, a.ca2, a.cs2,
+        )
         svc = per_op_service_time(w["capacity"], mu_eff, a.group)
         lam0 = np.maximum(w["ext_admitted"] / span, 0.0)
         sojourn = visit_sum_sojourn(admitted, wait, svc, lam0)
@@ -1188,7 +1191,8 @@ class ScenarioRunner:
 
         res = self._fused_result if self._fused_result is not None else self.sim.result()
         a = self.arrays
-        sojourns = res.sojourn(self.k, a.mu, a.group, a.alpha, a.speed)
+        sojourns = res.sojourn(self.k, a.mu, a.group, a.alpha, a.speed,
+                               ca2=a.ca2, cs2=a.cs2)
         sat = res.saturated(self.k, a.mu, a.group, a.alpha, a.speed)
         out = []
         for bi, s in enumerate(self.scenarios):

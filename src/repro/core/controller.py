@@ -1271,6 +1271,7 @@ def make_fused_loop(
     import jax.numpy as jnp
     from jax import lax
 
+    from ..streaming.batchsim import composed_wait as _composed_wait
     from ..streaming.batchsim import window_step_fn
 
     b_real, n = static.batch, static.n
@@ -1307,6 +1308,16 @@ def make_fused_loop(
         "routing": jnp.asarray(arrays.routing),
         "speed": jnp.asarray(static.speed),
         "t_max": jnp.asarray(np.nan_to_num(params.t_max, nan=np.inf)),
+        # §17 Allen-Cunneen inputs for the stationary-wait term of the
+        # window measurement (ones = the M/M/k prior when unset).
+        "ca2": jnp.asarray(
+            np.ones((arrays.batch, arrays.n)) if arrays.ca2 is None
+            else arrays.ca2
+        ),
+        "cs2": jnp.asarray(
+            np.ones((arrays.batch, arrays.n)) if arrays.cs2 is None
+            else arrays.cs2
+        ),
     }
     # Pre-sliced per-tick arrival chunks + warmup masks.
     ext_r = jnp.asarray(
@@ -1413,10 +1424,12 @@ def make_fused_loop(
             drop_hat = dropped / span
             admitted = jnp.maximum(lam_hat - drop_hat, 0.0)
             q_mean = q_int / steps_per_tick
-            wait = jnp.where(
-                admitted > 0,
-                jnp.maximum(q_mean / jnp.maximum(admitted, 1e-300) - dt, 0.0),
-                0.0,
+            # §17 composed wait — the same helper (and op order) as the
+            # numpy twin's window measurement, so twin == jit holds on
+            # the measured-sojourn surface too.
+            wait = _composed_wait(
+                q_mean, admitted, dt, span, k, mu, group, alpha,
+                sim_d["speed"], sim_d["ca2"], sim_d["cs2"], xp=jnp,
             )
             cap = capacity_of(sim_d, k)
             svc = jnp.where(

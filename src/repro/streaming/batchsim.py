@@ -32,11 +32,28 @@ each step's shed mass proportionally between external and routed inflow
 so the admitted external rate stays unbiased, exactly like the DES's
 ``lam0_hat`` rule.
 
-Divergence vs the event DES (bounds in DESIGN.md §13): the fluid model
-carries no stochastic queueing delay (exact for deterministic
-arrival/service kinds when rho < 1; under-estimates M/M/k waiting
-otherwise) and each hop costs one ``dt`` of latency; throughputs, drop
-rates, and the saturated-operator set agree.
+Divergence vs the event DES (bounds in DESIGN.md §13/§17): the fluid
+recurrence itself carries no stationary stochastic queueing delay (its
+post-warmup backlog is ~0 whenever rho < 1), so the *measurement* layer
+composes two wait terms per operator:
+
+* :func:`little_wait` — Little's law on the time-averaged backlog minus
+  the one-step admission floor.  Captures rate-driven (overload / trace
+  peak) queueing; ~0 in steady stable state.
+* :func:`stationary_wait` — the Erlang-C M/M/k waiting time at the
+  admitted rate, scaled by the Allen-Cunneen factor ``(ca^2 + cs^2)/2``
+  (``ca2``/``cs2`` are the squared coefficients of variation of the
+  scenario's inter-arrival and service laws — 1 exponential, 1/3
+  uniform, 0 deterministic, cv^2 lognormal).  Captures the stochastic
+  waiting the fluid backlog cannot; identically 0 for deterministic/
+  deterministic scenarios, so those stay fluid-exact.
+
+The composed estimate is ``max(little, min(stationary, span))`` — max
+avoids double counting (the fluid backlog already *is* queueing where it
+exists), and the ``span`` clamp keeps a near-saturated window from
+reporting a stationary wait longer than the window that measured it.
+Throughputs, drop rates, and the saturated-operator set agree with the
+DES; DESIGN.md §17 quantifies the sojourn bounds per scenario family.
 """
 
 from __future__ import annotations
@@ -49,9 +66,19 @@ __all__ = [
     "BatchArrays",
     "BatchSimResult",
     "BatchQueueSim",
+    "composed_wait",
     "service_capacity",
+    "stationary_wait",
     "window_step_fn",
 ]
+
+# Static iteration bound for the masked Erlang-B recurrence in
+# :func:`stationary_wait` — covers every allocation the repo's zoo and
+# fleet tables reach (k_max <= 64 per scenario, 512 in the fleet tier).
+# Iterations past a lane's k are where-masked no-ops, so the numpy twin
+# may stop at max(k) while the jit path always runs to the cap: both
+# orderings produce bit-identical lanes.
+STATIONARY_K_CAP = 512
 
 
 def service_capacity(k, mu, group, alpha, speed=None):
@@ -77,6 +104,78 @@ def little_wait(q_mean, admitted_rate, dt: float):
             np.maximum(q_mean / np.maximum(admitted_rate, 1e-300) - dt, 0.0),
             0.0,
         )
+
+
+def stationary_wait(k, lam, mu, group, alpha, speed=None, ca2=None, cs2=None, xp=np):
+    """Stationary stochastic queueing wait per operator (DESIGN.md §17).
+
+    Erlang-C M/M/k waiting time ``C(k, a) / (k*mu - lam)`` at the admitted
+    rate ``lam``, scaled by the Allen-Cunneen G/G/k factor
+    ``(ca2 + cs2) / 2``.  Replica operators are M/M/k at per-server rate
+    ``mu * speed``; chip-gang operators collapse to one effective server
+    at the gang capacity (M/M/1), mirroring :func:`service_capacity`.
+    Zero where the lane is idle (``lam == 0``), unallocated (``k == 0``),
+    or not stable (``rho >= 1`` — there the fluid backlog term owns the
+    wait).  ``ca2``/``cs2`` default to 1 (the M/M/k case).
+
+    ``xp`` selects the array namespace: ``numpy`` (the float64 twin) or
+    ``jax.numpy`` (the fused jit tick).  Both run the *same* masked
+    Erlang-B recurrence ``B_j = a B_{j-1} / (j + a B_{j-1})`` in the same
+    op order, so twin and jit agree to float-rounding on every lane.
+    """
+    # k * 1.0 promotes the integer allocation to mu's float dtype (exact
+    # for any realistic k) identically under numpy and jnp.
+    kf = xp.maximum(xp.asarray(k) * xp.ones_like(mu), 0.0)
+    mu_rep = mu if speed is None else mu * speed
+    one = 1.0
+    with np.errstate(divide="ignore", invalid="ignore"):
+        eff = one / (one + alpha * (kf - one))
+        cap = xp.where(group, mu_rep * kf * eff, mu_rep * kf)
+        k_srv = xp.where(group, xp.minimum(kf, one), kf)
+        mu_srv = xp.where(group, cap, mu_rep + xp.zeros_like(cap))
+        a = lam / xp.maximum(mu_srv, 1e-300)
+        b = xp.ones_like(a)
+        if xp is np:
+            j_hi = int(min(max(float(np.max(k_srv, initial=1.0)), 1.0),
+                           STATIONARY_K_CAP))
+            for j in range(1, j_hi + 1):
+                jf = float(j)
+                b = xp.where(j <= k_srv, a * b / (jf + a * b), b)
+        else:
+            from jax import lax
+
+            def body(j, bb):
+                jf = j.astype(bb.dtype)
+                return xp.where(jf <= k_srv, a * bb / (jf + a * bb), bb)
+
+            b = lax.fori_loop(1, STATIONARY_K_CAP + 1, body, b)
+        c = k_srv * b / xp.maximum(k_srv - a * (one - b), 1e-300)
+        wait = c / xp.maximum(k_srv * mu_srv - lam, 1e-300)
+        scv = one if ca2 is None and cs2 is None else 0.5 * (
+            (one if ca2 is None else ca2) + (one if cs2 is None else cs2)
+        )
+        wait = wait * scv
+        stable = (lam > 0) & (k_srv >= one) & (lam < k_srv * mu_srv * (1.0 - 1e-9))
+    return xp.where(stable, wait, 0.0)
+
+
+def composed_wait(q_mean, admitted_rate, dt, span, k, mu, group, alpha,
+                  speed=None, ca2=None, cs2=None, xp=np):
+    """The §17 measurement-surface wait: ``max(little, min(stationary,
+    span))`` — one function so the numpy twin, the window measurement, and
+    the fused jit tick compose the two terms in the same op order."""
+    if xp is np:
+        fluid = little_wait(q_mean, admitted_rate, dt)
+    else:
+        fluid = xp.where(
+            admitted_rate > 0,
+            xp.maximum(q_mean / xp.maximum(admitted_rate, 1e-300) - dt, 0.0),
+            0.0,
+        )
+    stat = stationary_wait(
+        k, admitted_rate, mu, group, alpha, speed, ca2, cs2, xp=xp
+    )
+    return xp.maximum(fluid, xp.minimum(stat, span))
 
 
 def per_op_service_time(cap, mu, group):
@@ -118,12 +217,19 @@ class BatchArrays:
     # class).  Scales service capacity; the controller applies the same
     # factors on the model side (DESIGN.md §14).
     speed: np.ndarray | None = None
+    # [B, N] squared coefficients of variation of the inter-arrival and
+    # service laws (DESIGN.md §17) — the Allen-Cunneen inputs to
+    # :func:`stationary_wait`.  None = 1.0 everywhere (the M/M/k prior);
+    # pack_scenarios fills them from each scenario's arrival/service kind.
+    ca2: np.ndarray | None = None
+    cs2: np.ndarray | None = None
 
     def __post_init__(self):
         t, b, n = self.ext.shape
         names = ["routing", "mu", "group", "alpha", "cap_queue", "active"]
-        if self.speed is not None:
-            names.append("speed")
+        for opt in ("speed", "ca2", "cs2"):
+            if getattr(self, opt) is not None:
+                names.append(opt)
         for name in names:
             got = getattr(self, name).shape
             want = (b, n, n) if name == "routing" else (b, n)
@@ -168,6 +274,10 @@ class BatchArrays:
             active=np.concatenate([self.active, np.zeros((pad, n), dtype=bool)]),
             speed=None if self.speed is None
             else np.concatenate([self.speed, np.ones((pad, n))]),
+            ca2=None if self.ca2 is None
+            else np.concatenate([self.ca2, np.ones((pad, n))]),
+            cs2=None if self.cs2 is None
+            else np.concatenate([self.cs2, np.ones((pad, n))]),
         )
 
 
@@ -201,17 +311,24 @@ class BatchSimResult:
         admitted_rate = (self.offered - self.dropped) / span
         self.per_op_wait = little_wait(self.q_mean, admitted_rate, self.dt)
 
-    def sojourn(self, k, mu, group, alpha, speed=None) -> np.ndarray:
+    def sojourn(self, k, mu, group, alpha, speed=None, *,
+                ca2=None, cs2=None) -> np.ndarray:
         """[B] visit-sum E[T] estimate at allocation ``k`` (Eq. 3 analogue):
         sum_i admitted_rate_i * (W_i + S_i) / external admitted rate, with
-        S_i the per-tuple service time at the (possibly gang) allocation.
+        S_i the per-tuple service time at the (possibly gang) allocation
+        and W_i the §17 composed wait (fluid backlog term max'd with the
+        Allen-Cunneen stationary term at the scenario's ``ca2``/``cs2``).
         NaN for scenarios that admitted no external tuples."""
         cap = service_capacity(k, mu, group, alpha, speed)
         svc = per_op_service_time(cap, mu if speed is None else mu * speed, group)
         span = max(self.span, 1e-12)
         admitted_rate = (self.offered - self.dropped) / span
         ext_rate = self.ext_admitted / span
-        return visit_sum_sojourn(admitted_rate, self.per_op_wait, svc, ext_rate)
+        wait = composed_wait(
+            self.q_mean, admitted_rate, self.dt, span, k, mu, group, alpha,
+            speed, ca2, cs2,
+        )
+        return visit_sum_sojourn(admitted_rate, wait, svc, ext_rate)
 
     def saturated(
         self, k, mu, group, alpha, speed=None, *, drop_fraction: float = 0.01

@@ -292,6 +292,16 @@ class Scenario:
     _ARRIVAL_KINDS = ("exponential", "uniform", "deterministic")
     _SERVICE_KINDS = ("exponential", "uniform", "deterministic", "lognormal")
     _ALLOCATORS = ("table", "heap")
+    # Squared coefficients of variation of the micro inter-arrival /
+    # service laws (DESIGN.md §17): exponential cv^2 = 1, uniform on
+    # [0, 2m] = 1/3, deterministic = 0, lognormal = cv^2 (the DES's
+    # ServiceProcess default cv is 1.0).  These feed the batch
+    # simulator's Allen-Cunneen stationary-wait term.
+    _ARRIVAL_SCV = {"exponential": 1.0, "uniform": 1.0 / 3.0, "deterministic": 0.0}
+    _SERVICE_SCV = {
+        "exponential": 1.0, "uniform": 1.0 / 3.0, "deterministic": 0.0,
+        "lognormal": 1.0,
+    }
 
     def __post_init__(self):
         OverloadPolicy.coerce(self.overload_policy)  # validate early
@@ -331,6 +341,16 @@ class Scenario:
     @property
     def policy(self) -> OverloadPolicy:
         return OverloadPolicy.coerce(self.overload_policy)
+
+    @property
+    def arrival_scv(self) -> float:
+        """cv^2 of the micro inter-arrival law (§17 ``ca2`` input)."""
+        return self._ARRIVAL_SCV[self.arrival_kind]
+
+    @property
+    def service_scv(self) -> float:
+        """cv^2 of the service law (§17 ``cs2`` input)."""
+        return self._SERVICE_SCV[self.service_kind]
 
     @property
     def steps(self) -> int:
@@ -393,9 +413,14 @@ class Scenario:
         )
 
     # -- DES compilation -------------------------------------------------- #
-    def simulator(self, k, *, measurer=None):
+    def simulator(self, k, *, measurer=None, seed: int | None = None):
         """The event-DES twin of this scenario (same topology, same rate
-        schedule, same overload policy; its own exact-process randomness)."""
+        schedule, same overload policy; its own exact-process randomness).
+
+        ``seed`` overrides the DES *process* randomness only — the trace
+        realization (mmpp state path etc.) stays pinned to the scenario
+        seed, so conformance checks can average several independent DES
+        runs of the same schedule (DESIGN.md §17)."""
         from ..api.session import _group_effective_services
         from .des import ArrivalProcess, NetworkSimulator, ServiceProcess, SimConfig
 
@@ -433,7 +458,7 @@ class Scenario:
             top,
             k_eff,
             config=SimConfig(
-                seed=self.seed,
+                seed=self.seed if seed is None else int(seed),
                 horizon=self.horizon,
                 warmup=self.warmup,
                 queue_capacity=self.queue_capacity,
@@ -498,11 +523,15 @@ def pack_scenarios(
     cap_queue = np.full((b, n), np.inf)
     active = np.zeros((b, n), dtype=bool)
     speed = np.ones((b, n))
+    ca2 = np.ones((b, n))
+    cs2 = np.ones((b, n))
     heterogeneous = False
     for bi, s in enumerate(scenarios):
         ni = s.graph.n
         ext[:, bi, :ni] = s.sample_arrivals()
         routing[bi, :ni, :ni] = s.graph.routing_matrix()
+        ca2[bi, :ni] = s.arrival_scv
+        cs2[bi, :ni] = s.service_scv
         for i, op in enumerate(s.graph.ops):
             mu[bi, i] = op.mu
             group[bi, i] = op.scaling == "group"
@@ -525,6 +554,8 @@ def pack_scenarios(
         warmup_steps=int(round(scenarios[0].warmup / dt)),
         active=active,
         speed=speed if heterogeneous else None,
+        ca2=ca2,
+        cs2=cs2,
     )
     if pad_to is not None:
         arrays = arrays.pad_batch(int(pad_to))

@@ -1,0 +1,290 @@
+"""Day-scale checkpointed soak harness (DESIGN.md §17).
+
+The fused control plane advertises two durability properties that short
+CI scenarios never stress together:
+
+* the ``lax.scan`` carry (:class:`~repro.core.controller.ControllerState`)
+  is **resumable** — a checkpoint -> restore -> resume sequence through
+  :class:`~repro.checkpoint.store.CheckpointStore` must be bit-identical
+  to the straight-through run, and
+* the loop survives a **day** of composite load (diurnal baseline, flash
+  crowds, an MMPP bursty stretch) without the measurement or decide
+  surfaces drifting.
+
+This module builds that day as ONE deterministic ``kind="replay"``
+:class:`ArrivalTrace` stitched from the trace zoo, wires it through the
+same :class:`~repro.api.session.ScenarioRunner` packing the CI matrix
+uses, and drives :func:`~repro.core.controller.make_fused_loop` either
+straight through (:func:`run_straight`) or in checkpoint_every-tick
+chunks with a simulated crash + restore between every chunk
+(:func:`run_checkpointed`).  ``tests/test_soak.py`` asserts the two are
+bit-identical — decisions, allocations, and the full trajectory — for
+reactive and proactive loops, unsharded and mesh-sharded.
+
+Nothing here samples fresh randomness at run time: the trace, the
+pre-sampled arrival counts, and the controller are all pinned to the
+:class:`SoakConfig` seed, which is what makes "bit-identical" a
+meaningful assertion rather than a tolerance.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any
+
+import numpy as np
+
+__all__ = [
+    "SoakConfig",
+    "SoakReport",
+    "assert_bit_identical",
+    "build_scenario",
+    "composite_day_samples",
+    "run_checkpointed",
+    "run_straight",
+    "soak_report",
+]
+
+DAY = 86400.0
+
+#: stitched-output keys stacked per control window (concatenated across
+#: resume chunks) vs accumulated in the carry (last chunk == whole run).
+PER_TICK_KEYS = ("codes", "k", "sojourn", "et_cur", "et_target", "applied")
+SUMMED_KEYS = ("miss", "warm_windows")
+AGGREGATE_KEYS = (
+    "k_final", "q_final", "offered", "served", "dropped",
+    "ext_admitted", "ext_offered", "q_int", "q_max",
+)
+
+
+@dataclass(frozen=True)
+class SoakConfig:
+    """One pinned soak run.  ``day`` must divide by ``tick_interval`` and
+    ``tick_interval`` by ``dt`` (the ScenarioRunner fused-path gate)."""
+
+    day: float = DAY
+    dt: float = 0.5
+    tick_interval: float = 120.0
+    base_rate: float = 8.0
+    seed: int = 42
+    # Static budget (the fused loop has no negotiator hooks, so k_total
+    # can't elastically scale): pinned TIGHT — the mean needs ~11 of the
+    # 14, the flash/MMPP peaks need more than 14 — so the day actually
+    # exercises placement rebalances, §11 overload reallocations,
+    # deadline misses, and bounded-queue shedding instead of idling at an
+    # overprovisioned fixed point.
+    k_max: int = 14
+    queue_capacity: int = 150
+    checkpoint_every: int = 96  # control windows between crash+restore cycles
+    name: str = "soak-day"
+
+    @classmethod
+    def smoke(cls) -> "SoakConfig":
+        """Tier-1 cap: two "hours" with the same composite shape (the
+        diurnal period scales with ``day``, so every segment still
+        appears), crash+restore every 16 windows."""
+        return cls(day=7200.0, checkpoint_every=16, name="soak-smoke")
+
+    @property
+    def n_ticks(self) -> int:
+        return int(round(self.day / self.tick_interval))
+
+
+def composite_day_samples(cfg: SoakConfig, sample_dt: float = 1.0) -> np.ndarray:
+    """The day's rate schedule on a ``sample_dt`` grid: a diurnal
+    baseline (4 cycles across ``day``) + two flash-crowd boosts + an MMPP
+    bursty stretch over the middle fifth — all from the ArrivalTrace zoo,
+    so each segment's shape is the one the matrix scenarios already
+    exercise individually."""
+    from .scenarios import ArrivalTrace
+
+    base, day = cfg.base_rate, cfg.day
+    grid = np.arange(0.0, day, sample_dt)
+    diurnal = ArrivalTrace(
+        kind="diurnal", rate=base, amplitude=0.4 * base, period=day / 4.0
+    ).rates(grid)
+    flash = np.zeros_like(grid)
+    for t_on, t_off in ((0.30 * day, 0.35 * day), (0.70 * day, 0.72 * day)):
+        flash += ArrivalTrace(
+            kind="flash", rate=0.0, peak=0.8 * base, t_on=t_on, t_off=t_off
+        ).rates(grid)
+    mmpp = ArrivalTrace(
+        kind="mmpp", rate=0.0, peak=0.5 * base,
+        switch01=40.0 / day, switch10=80.0 / day,
+    ).rates(grid, seed=cfg.seed)
+    burst_window = (grid >= 0.45 * day) & (grid < 0.65 * day)
+    return np.maximum(diurnal + flash + np.where(burst_window, mmpp, 0.0), 0.0)
+
+
+def build_scenario(cfg: SoakConfig):
+    """The soak pipeline: ingest -> parse (with a reprocessing self-loop)
+    fanning out to a chip-gang operator and a sink — every operator class
+    the batch simulator models (§2 gang collapse included) under the
+    composite replay trace.  ``t_max`` is pinned at 1.5x the best
+    mean-rate sojourn reachable within the budget (the scenario_matrix
+    convention), so the deadline-miss trajectory is meaningful."""
+    from ..api import AppGraph, Edge, OpDef
+    from ..core.allocator import InsufficientResourcesError, allocate
+    from ..core.jackson import UnstableTopologyError
+    from .scenarios import ArrivalTrace, Scenario
+
+    graph = AppGraph(
+        [
+            OpDef("ingest", mu=4.0),
+            OpDef("parse", mu=6.0),
+            OpDef("gang", mu=3.0, scaling="group", group_alpha=0.05),
+            OpDef("sink", mu=20.0),
+        ],
+        [
+            Edge("ingest", "parse"),
+            Edge("parse", "parse", multiplicity=0.2),
+            Edge("parse", "gang", multiplicity=0.4),
+            Edge("parse", "sink", multiplicity=0.4),
+            Edge("gang", "sink"),
+        ],
+        {"ingest": cfg.base_rate},
+    )
+    trace = ArrivalTrace(
+        kind="replay", samples=tuple(composite_day_samples(cfg)), sample_dt=1.0
+    )
+    s = Scenario(
+        name=cfg.name, graph=graph, traces={"ingest": trace},
+        seed=cfg.seed, horizon=cfg.day, warmup=cfg.tick_interval,
+        dt=cfg.dt, k_max=cfg.k_max, queue_capacity=cfg.queue_capacity,
+    )
+    try:
+        t_max = 1.5 * allocate(s.mean_topology(), k_max=cfg.k_max).expected_sojourn
+    except (InsufficientResourcesError, UnstableTopologyError):
+        t_max = None
+    return replace(s, t_max=t_max)
+
+
+def _runner_and_loop(cfg: SoakConfig, *, proactive: bool = False, mesh=None):
+    import repro.core.controller as ctl
+    from ..api.session import ScenarioRunner
+
+    s = build_scenario(cfg)
+    r = ScenarioRunner(
+        [s], tick_interval=cfg.tick_interval, backend="jax",
+        proactive=proactive or None, mesh=mesh,
+    )
+    loop, n_ticks = ctl.make_fused_loop(
+        r.arrays, r.static, r._params(),
+        steps_per_tick=r._steps_per_tick, warmup_seconds=s.warmup,
+        proactive=r.proactive_cfg, mesh=mesh,
+    )
+    return r, loop, n_ticks
+
+
+def _np_out(out: dict) -> dict:
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+def run_straight(cfg: SoakConfig, *, proactive: bool = False, mesh=None) -> dict:
+    """The reference: the whole day in one ``loop(k0)`` call."""
+    r, loop, _ = _runner_and_loop(cfg, proactive=proactive, mesh=mesh)
+    return _np_out(loop(r.k))
+
+
+def run_checkpointed(
+    cfg: SoakConfig, directory, *, proactive: bool = False, mesh=None
+) -> dict:
+    """The soak: every ``checkpoint_every`` windows, ``save_async`` the
+    carry, throw the runner/loop/compiled executables away (the simulated
+    crash), restore from disk into a freshly built loop, and continue.
+
+    Returns the stitched whole-run output dict — per-tick stacks
+    concatenated across chunks, chunk-local counters summed, carry
+    aggregates from the final chunk — plus ``n_restores``.
+    """
+    import repro.core.controller as ctl
+    from ..checkpoint.store import CheckpointStore
+
+    store = CheckpointStore(directory)
+    r, loop, n_ticks = _runner_and_loop(cfg, proactive=proactive, mesh=mesh)
+    state = loop.init(r.k)
+    chunks: list[dict] = []
+    restores = 0
+    while int(state.tick) < n_ticks:
+        ticks = min(cfg.checkpoint_every, n_ticks - int(state.tick))
+        state, out = loop.run(state, ticks)
+        chunks.append(_np_out(out))
+        done = int(state.tick)
+        if done >= n_ticks:
+            store.save(done, state)  # final sync save: nothing left to overlap
+            break
+        store.save_async(done, state)
+        store.wait()
+        # Crash: rebuild everything from scratch, restore from disk into
+        # a tick-0 template (shapes/dtypes only — the restore overwrites
+        # every leaf, including the tick counter).
+        del r, loop, state
+        r, loop, _ = _runner_and_loop(cfg, proactive=proactive, mesh=mesh)
+        restored, _extra = store.restore(loop.init(r.k), step=done)
+        state = ctl.ControllerState(*restored)
+        restores += 1
+
+    out = {}
+    for key in PER_TICK_KEYS + (("mpc_used", "confident") if proactive else ()):
+        out[key] = np.concatenate([c[key] for c in chunks], axis=0)
+    for key in SUMMED_KEYS:
+        out[key] = np.sum([c[key] for c in chunks], axis=0)
+    for key in AGGREGATE_KEYS:
+        out[key] = chunks[-1][key]
+    out["n_restores"] = restores
+    return out
+
+
+def assert_bit_identical(ref: dict, got: dict) -> None:
+    """Every shared output surface equal bit for bit (exact integer and
+    float equality — no tolerances)."""
+    for key in sorted(set(ref) & set(got)):
+        np.testing.assert_array_equal(
+            np.asarray(got[key]), np.asarray(ref[key]), err_msg=key
+        )
+
+
+@dataclass
+class SoakReport:
+    """Operator-facing trajectories over the day (one scenario, B=1)."""
+
+    t: np.ndarray  # [ticks] window end times
+    k_total: np.ndarray  # [ticks] provisioned processors (the cost curve)
+    sojourn: np.ndarray  # [ticks] measured mean sojourn
+    miss: np.ndarray  # [ticks] bool: warm window over T_max
+    deadline_miss_rate: float
+    drop_rate: float
+    mean_cost: float  # mean provisioned processors over warm windows
+    n_restores: int = 0
+    extra: dict = field(default_factory=dict)
+
+    def summary(self) -> dict[str, Any]:
+        return {
+            "ticks": int(self.t.size),
+            "deadline_miss_rate": float(self.deadline_miss_rate),
+            "drop_rate": float(self.drop_rate),
+            "mean_cost": float(self.mean_cost),
+            "peak_cost": float(self.k_total.max(initial=0)),
+            "n_restores": int(self.n_restores),
+        }
+
+
+def soak_report(cfg: SoakConfig, out: dict) -> SoakReport:
+    s = build_scenario(cfg)
+    n_ticks = out["codes"].shape[0]
+    t = (np.arange(n_ticks) + 1) * cfg.tick_interval
+    warm = (np.arange(n_ticks) * cfg.tick_interval) >= s.warmup
+    sojourn = np.asarray(out["sojourn"])[:, 0]
+    t_max = np.inf if s.t_max is None else s.t_max
+    with np.errstate(invalid="ignore"):
+        miss = (sojourn > t_max) & warm
+    k_total = np.asarray(out["k"])[:, 0, : s.graph.n].sum(axis=-1)
+    offered = float(np.asarray(out["offered"])[0].sum())
+    dropped = float(np.asarray(out["dropped"])[0].sum())
+    return SoakReport(
+        t=t, k_total=k_total, sojourn=sojourn, miss=miss,
+        deadline_miss_rate=float(miss.sum() / max(warm.sum(), 1)),
+        drop_rate=dropped / max(offered, 1e-300),
+        mean_cost=float(k_total[warm].mean()) if warm.any() else float("nan"),
+        n_restores=int(out.get("n_restores", 0)),
+    )

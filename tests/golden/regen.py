@@ -32,12 +32,16 @@ HERE = pathlib.Path(__file__).resolve().parent
 
 
 def entries():
-    """(fixture name, scenario, proactive cfg | None) — the one list both
-    this script and tests/test_golden_traces.py replay from."""
+    """(fixture name, scenario, proactive cfg | None, tick_interval) — the
+    one list both this script and tests/test_golden_traces.py replay
+    from."""
+    import dataclasses
+
     import numpy as np
 
     from repro.forecast import MPCConfig, PredictorParams
     from repro.streaming.scenarios import ArrivalTrace, fpd_scenario, vld_scenario
+    from repro.streaming.soak import SoakConfig, build_scenario
 
     mpc = MPCConfig(
         horizon=3, window=12, min_scored=2, headroom=1.1,
@@ -55,16 +59,21 @@ def entries():
                                         sample_dt=5.0)},
         t_max=1.0, queue_capacity=40, machine_size=1, horizon=230.0,
     )
+    # The soak harness's smoke-capped composite day (DESIGN.md §17):
+    # pins the twin's decision surface for the same scenario
+    # tests/test_soak.py drives through the fused checkpointed loop.
+    soak = dataclasses.replace(build_scenario(SoakConfig.smoke()), name="soak")
     return [
-        ("vld", vld_scenario(), None),
-        ("fpd", fpd_scenario(), None),
-        ("vld_proactive", flash_vld, mpc),
+        ("vld", vld_scenario(), None, 10.0),
+        ("fpd", fpd_scenario(), None, 10.0),
+        ("vld_proactive", flash_vld, mpc, 10.0),
         # Static-budget VLD: jit-eligible (no negotiator), so this one
         # fixture is ALSO replayed through the fused jax loop with the
         # kernels/decide_fused knob on (tests/test_golden_traces.py) —
         # the knob-on decision surface must match this twin-generated
         # trace bit-for-bit.
-        ("vld_fused", vld_scenario(name="vld_fused", negotiated=False), None),
+        ("vld_fused", vld_scenario(name="vld_fused", negotiated=False), None, 10.0),
+        ("soak", soak, None, 120.0),
     ]
 
 
@@ -72,8 +81,10 @@ def generate(out_dir: pathlib.Path) -> list[pathlib.Path]:
     from repro.streaming.scenarios import control_trace
 
     paths = []
-    for name, scenario, proactive in entries():
-        trace = control_trace([scenario], tick_interval=10.0, proactive=proactive)
+    for name, scenario, proactive, tick_interval in entries():
+        trace = control_trace(
+            [scenario], tick_interval=tick_interval, proactive=proactive
+        )
         path = out_dir / f"{name}_control_trace.json"
         path.write_text(json.dumps(trace, indent=2, sort_keys=True) + "\n")
         paths.append(path)

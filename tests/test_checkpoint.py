@@ -86,6 +86,135 @@ def test_atomic_overwrite(tmp_path):
     np.testing.assert_array_equal(out["params"]["w"], tree(seed=1)["params"]["w"])
     assert not list(tmp_path.glob("*.tmp"))
 
+
+@pytest.mark.parametrize("name", ["float8_e4m3fn", "float8_e5m2"])
+def test_float8_roundtrip(tmp_path, name):
+    """The remaining ``_EXOTIC_DTYPES`` paths (bf16 covered above): f8
+    leaves save as uint8 carriers and restore with the logical dtype and
+    the exact bit pattern."""
+    import ml_dtypes
+
+    dt = np.dtype(getattr(ml_dtypes, name))
+    st = CheckpointStore(tmp_path)
+    t = {"w": np.arange(-8, 8, dtype=np.float32).astype(dt), "step": np.int32(3)}
+    st.save(1, t)
+    out, _ = st.restore(t)
+    assert out["w"].dtype == dt
+    np.testing.assert_array_equal(out["w"].view(np.uint8), t["w"].view(np.uint8))
+
+
+def test_namedtuple_and_forecast_state_roundtrip(tmp_path):
+    """A carry shaped like the fused loop's: a NamedTuple wrapping mixed
+    dtypes, a nested aggregate tuple, and real ForecastState leaves —
+    keys come from the pytree path, so tuple indices must round-trip."""
+    from typing import NamedTuple
+
+    from repro.forecast.mpc import MPCConfig, forecast_init_state
+
+    class Carry(NamedTuple):
+        q: np.ndarray
+        k: np.ndarray
+        acc: tuple
+        fstate: tuple
+
+    rng = np.random.default_rng(5)
+    fstate = forecast_init_state(2, 3, MPCConfig(window=6))
+    carry = Carry(
+        q=rng.uniform(0, 9, (2, 3)),
+        k=rng.integers(1, 8, (2, 3)).astype(np.int32),
+        acc=(rng.uniform(0, 1, (2, 3)), rng.uniform(0, 1, (2, 3))),
+        fstate=fstate,
+    )
+    st = CheckpointStore(tmp_path)
+    st.save(4, carry)
+    out, _ = st.restore(carry)
+    restored = Carry(*out)
+    np.testing.assert_array_equal(restored.q, carry.q)
+    np.testing.assert_array_equal(restored.k, carry.k)
+    assert restored.k.dtype == np.int32
+    for got, want in zip(restored.acc, carry.acc):
+        np.testing.assert_array_equal(got, want)
+    assert len(restored.fstate) == len(fstate)
+    for got, want in zip(restored.fstate, fstate):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_async_save_ordering_one_in_flight(tmp_path):
+    """``save_async`` joins the previous in-flight writer before
+    snapshotting, so back-to-back calls land every step in order; a final
+    ``wait`` makes the last one durable."""
+    st = CheckpointStore(tmp_path)
+    trees = {s: tree(seed=s) for s in (1, 2, 3)}
+    for s, t in trees.items():
+        st.save_async(s, t)
+    st.wait()
+    assert st.save_count == 3
+    assert st.latest_step() == 3
+    for s, t in trees.items():
+        out, _ = st.restore(tree(), step=s)
+        np.testing.assert_array_equal(out["params"]["w"], t["params"]["w"])
+    st.wait()  # idempotent after join
+
+
+def test_latest_step_ignores_partial_and_corrupt_dirs(tmp_path):
+    """A crash can leave manifest-less step dirs, .tmp staging dirs, and
+    junk names behind — ``latest_step`` must only count complete saves,
+    and ``restore`` must land on that complete step."""
+    st = CheckpointStore(tmp_path)
+    t = tree()
+    st.save(3, t)
+    # partial: step dir without a manifest (crash mid-write before rename
+    # would normally leave only .tmp, but a torn unlink can leave this)
+    (tmp_path / "step_0000000009").mkdir()
+    # staging dir from an interrupted save
+    (tmp_path / "step_0000000007.tmp").mkdir()
+    # junk that matches the glob but not the name schema
+    (tmp_path / "step_garbage").mkdir()
+    assert st.latest_step() == 3
+    out, _ = st.restore(t)
+    np.testing.assert_array_equal(out["params"]["w"], t["params"]["w"])
+
+
+def test_mesh_save_restores_onto_unsharded_template(tmp_path):
+    """The reverse of the layout-independence test below: a carry saved
+    from a mesh-sharded loop restores onto the unsharded loop's template
+    (per-leaf .npy files are device-layout-free host arrays)."""
+    import jax as _jax
+
+    if len(_jax.devices()) < 2:
+        pytest.skip("mesh save leg needs >= 2 devices")
+    import repro.core.controller as ctl
+    from repro.distributed.sharding import fleet_mesh
+    from repro.streaming.scenarios import scenario_matrix
+
+    from repro.api.session import ScenarioRunner
+
+    scens = [
+        s.with_(negotiated=False)
+        for s in scenario_matrix(4, seed=19, horizon=20.0, warmup=5.0, dt=0.05)
+    ]
+    rm = ScenarioRunner(scens, tick_interval=5.0, backend="jax",
+                        mesh=fleet_mesh(2))
+    loop_m, _ = ctl.make_fused_loop(
+        rm.arrays, rm.static, rm._params(),
+        steps_per_tick=rm._steps_per_tick, warmup_seconds=scens[0].warmup,
+        mesh=fleet_mesh(2),
+    )
+    state = loop_m.init(rm.k)
+    state, _ = loop_m.run(state, 1)
+    st = CheckpointStore(tmp_path)
+    st.save(1, state)
+
+    r, loop, _ = _control_loop()
+    # mesh-padded batch extent == real extent here (4 lanes, 2 devices),
+    # so the unsharded template matches leaf-for-leaf.
+    restored, _ = st.restore(loop.init(r.k), step=1)
+    restored = ctl.ControllerState(*restored)
+    _, out = loop.run(restored)
+    ref = {k: np.asarray(v) for k, v in loop(r.k).items()}
+    np.testing.assert_array_equal(np.asarray(out["codes"]), ref["codes"][1:])
+    np.testing.assert_array_equal(np.asarray(out["k_final"]), ref["k_final"])
+
 # --------------------------------------------------------------------------- #
 # The fused control plane's donated carry (DESIGN.md §16): checkpoint ->
 # restore -> resume must be bit-identical to the straight-through run.

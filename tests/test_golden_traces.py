@@ -29,7 +29,10 @@ _spec = importlib.util.spec_from_file_location("golden_regen", GOLDEN / "regen.p
 _regen = importlib.util.module_from_spec(_spec)
 _spec.loader.exec_module(_regen)
 
-ENTRIES = {name: (scenario, proactive) for name, scenario, proactive in _regen.entries()}
+ENTRIES = {
+    name: (scenario, proactive)
+    for name, scenario, proactive, _tick in _regen.entries()
+}
 
 
 def _replay(name):
@@ -42,7 +45,8 @@ def _replay(name):
     return want["scenarios"][name], got["scenarios"][name]
 
 
-@pytest.mark.parametrize("name", ["vld", "fpd", "vld_proactive", "vld_fused"])
+@pytest.mark.parametrize("name", ["vld", "fpd", "vld_proactive", "vld_fused",
+                                  "soak"])
 def test_golden_trace_replays(name):
     want, got = _replay(name)
     assert got["actions"] == want["actions"], (
