@@ -26,7 +26,21 @@ arrays.  Rows:
   device-parallel speedup (only meaningful when the host has cores to
   back the emulated devices — the note records the core count);
 * ``gain_topr_interpret_parity`` — Pallas top-R kernel vs jnp oracle in
-  interpret mode on CPU (1.0 = exact take-for-take agreement).
+  interpret mode on CPU (1.0 = exact take-for-take agreement);
+* ``decide_dense_ticks_per_second_B{B}`` /
+  ``decide_compacted_ticks_per_second_B{B}_trig{F}pct`` — the §18
+  trigger-gated sparse decide vs the dense decide on a diurnal-zoo
+  static stack tiled to fleet extent (B=4096 full / B=256 smoke, plus a
+  B=10000 full-run row), with the trigger rate pinned by perturbing
+  exactly ``F%`` of the lanes' inputs per tick.  Every compacted tick's
+  decisions are asserted **bitwise identical** to the dense decide
+  before it is timed (hard fail, smoke included; E[T] diagnostics to the
+  mesh tests' ~1-ulp rtol); ``compacted_vs_dense_speedup_B4096_
+  trig10pct`` is the acceptance gate (>= 3x, full runs only — smoke
+  extents are too small for the ladder to pay);
+* ``compacted_peak_live_bytes_B{B}`` — device-reported peak live bytes
+  after the compacted sweep via ``jax.local_devices()[0].memory_stats()``
+  (``-1.0`` on CPU hosts, which report no allocator stats).
 """
 
 from __future__ import annotations
@@ -180,6 +194,9 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
         f"B={b} single-device row (ROADMAP's ~4.4k ticks/s reference)",
     ))
 
+    # --- §18 trigger-gated compacted decide vs dense --------------------- #
+    rows.extend(_compaction_rows(smoke))
+
     # --- gain_topr kernel parity (interpret mode on CPU) ----------------- #
     from repro.kernels.gain_topr import kernel as topr_kernel, ref as topr_ref
 
@@ -197,6 +214,158 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
         float((want == got).all()),
         "Pallas top-R kernel == jnp oracle, interpret mode (1.0 = exact)",
     ))
+    return rows
+
+
+# --------------------------------------------------------------------------- #
+# §18 compacted decide: tile a small diurnal-zoo static stack to fleet
+# extent and pin the trigger rate by construction — the compacted decide
+# triggers on exact input change, so perturbing exactly f*B lanes' lam
+# rows per tick (by a factor that never repeats between consecutive
+# ticks) reprices exactly those lanes plus any hot ones.
+# --------------------------------------------------------------------------- #
+def _tile_static(st: ctl.ControllerStatic, reps: int) -> ctl.ControllerStatic:
+    from dataclasses import replace as _replace
+
+    return _replace(
+        st,
+        base_routing=np.tile(st.base_routing, (reps, 1, 1)),
+        group=np.tile(st.group, (reps, 1)),
+        alpha=np.tile(st.alpha, (reps, 1)),
+        active=np.tile(st.active, (reps, 1)),
+        speed=np.tile(st.speed, (reps, 1)),
+        n_ops=np.tile(st.n_ops, reps),
+        names=st.names * reps,
+    )
+
+
+def _tile_params(pr: ctl.ControllerParams, reps: int) -> ctl.ControllerParams:
+    from dataclasses import replace as _replace
+
+    return _replace(
+        pr,
+        t_max=np.tile(pr.t_max, reps),
+        k_max=np.tile(pr.k_max, reps),
+        headroom=np.tile(pr.headroom, reps),
+        scale_in_hysteresis=np.tile(pr.scale_in_hysteresis, reps),
+        min_improvement=np.tile(pr.min_improvement, reps),
+        horizon_seconds=np.tile(pr.horizon_seconds, reps),
+        allocator=pr.allocator * reps,
+    )
+
+
+def _decide_tps(
+    b: int, rates: tuple[float, ...], *, reps: int, gate_at: float | None
+) -> list[tuple[str, float, str]]:
+    """Compacted-vs-dense decide ticks/s rows at extent ``b``, one per
+    trigger rate.  Asserts bitwise identity on every compacted tick and
+    the >= 3x gate at ``gate_at`` (None skips the gate — smoke extents)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.streaming.scenarios import scenario_matrix
+
+    zoo = [
+        s.with_(negotiated=False)
+        for s in scenario_matrix(16, seed=9, horizon=20.0, warmup=5.0, dt=0.05)
+    ]
+    runner = ScenarioRunner(zoo, tick_interval=5.0, backend="numpy", fused=False)
+    assert b % 16 == 0, b
+    st = _tile_static(runner.static, b // 16)
+    pr = _tile_params(runner._params(), b // 16)
+    n = st.n
+    rng = np.random.default_rng(3)
+    lam = np.abs(rng.normal(2.0, 0.5, (b, n)))
+    mu = np.abs(rng.normal(6.0, 0.5, (b, n))) + 1.0
+    drop = np.zeros((b, n))
+    lam0 = np.abs(rng.normal(2.0, 0.5, b))
+    k = np.where(st.active, 2, 0).astype(np.int64)
+
+    dense = ctl.make_decide_jax(st, pr)
+    comp = ctl.make_decide_jax(st, pr, compact=True)
+    rows: list[tuple[str, float, str]] = []
+    dense_tps = None
+    for rate in rates:
+        n_trig = int(round(rate * b))
+        # Factor cycle length 7 is coprime with everything the loop does,
+        # so consecutive ticks never present a triggered lane with the
+        # same lam row (which would memoize it quiet).
+        lam_ticks = []
+        for t in range(reps + 1):
+            lt = lam.copy()
+            lt[:n_trig] *= 1.0 + 0.01 * ((t % 7) + 1)
+            lam_ticks.append(jnp.asarray(lt))
+        d_args = lambda lt: (lt, jnp.asarray(mu), jnp.asarray(drop),
+                             jnp.asarray(lam0), jnp.asarray(k))
+        dense_outs = [dense(*d_args(lt)) for lt in lam_ticks]
+        dense_outs[0][1].block_until_ready()
+        if dense_tps is None:
+            t0 = time.perf_counter()
+            for lt in lam_ticks[1:]:
+                dense(*d_args(lt))[1].block_until_ready()
+            dense_tps = reps / (time.perf_counter() - t0)
+            rows.append((f"decide_dense_ticks_per_second_B{b}", dense_tps,
+                         f"dense jit decide, B={b} diurnal-zoo tile"))
+        cache = comp.init_cache()
+        out, _, cache = comp(*d_args(lam_ticks[0]), cache)  # cold: dense-cost
+        out[1].block_until_ready()
+        t0 = time.perf_counter()
+        comp_outs = []
+        for lt in lam_ticks[1:]:
+            out, _, cache = comp(*d_args(lt), cache)
+            comp_outs.append(out)
+        comp_outs[-1][1].block_until_ready()
+        comp_tps = reps / (time.perf_counter() - t0)
+        # Bit-identity before the number is reported: a fast wrong decide
+        # is worthless.  Hard fail — smoke included.  Decisions (code,
+        # k_next, applied) are bitwise; the E[T] diagnostics get the mesh
+        # tests' ~1-ulp rtol (XLA reassociates lane reductions at
+        # compacted widths — tests/test_compaction.py).
+        for ti, (want, got) in enumerate(zip(dense_outs[1:], comp_outs)):
+            for oi in (0, 1, 4):
+                if not np.array_equal(np.asarray(want[oi]), np.asarray(got[oi])):
+                    raise AssertionError(
+                        f"compacted decide diverged from dense at B={b}, "
+                        f"trigger rate {rate:.0%}, tick {ti}, out[{oi}]"
+                    )
+            for oi in (2, 3):
+                np.testing.assert_allclose(
+                    np.asarray(want[oi]), np.asarray(got[oi]), rtol=1e-6,
+                    err_msg=f"B={b} rate={rate} tick={ti} out[{oi}]",
+                )
+        pct = int(round(rate * 100))
+        rows.append((
+            f"decide_compacted_ticks_per_second_B{b}_trig{pct}pct", comp_tps,
+            f"§18 compacted decide, {n_trig}/{b} lanes triggered per tick "
+            "(bitwise == dense, asserted)",
+        ))
+        speedup = comp_tps / max(dense_tps, 1e-12)
+        rows.append((
+            f"compacted_vs_dense_speedup_B{b}_trig{pct}pct", speedup,
+            "x compacted vs dense ticks/s"
+            + (" (acceptance: >= 3x)" if gate_at == rate else ""),
+        ))
+        if gate_at == rate and speedup < 3.0:
+            raise AssertionError(
+                f"compaction gate regressed: {speedup:.2f}x < 3x at "
+                f"B={b}, {rate:.0%} trigger rate"
+            )
+    ms = jax.local_devices()[0].memory_stats() or {}
+    rows.append((
+        f"compacted_peak_live_bytes_B{b}",
+        float(ms.get("peak_bytes_in_use", -1.0)),
+        "device peak live bytes after the compacted sweep "
+        "(-1.0: backend reports no allocator stats, e.g. CPU)",
+    ))
+    return rows
+
+
+def _compaction_rows(smoke: bool) -> list[tuple[str, float, str]]:
+    rates = (0.02, 0.10, 0.50)
+    if smoke:
+        return _decide_tps(256, rates, reps=3, gate_at=None)
+    rows = _decide_tps(4096, rates, reps=8, gate_at=0.10)
+    rows += _decide_tps(10_000, (0.10,), reps=4, gate_at=None)
     return rows
 
 

@@ -32,6 +32,7 @@ from __future__ import annotations
 import inspect
 import json
 import pathlib
+import subprocess
 import sys
 import time
 import traceback
@@ -65,6 +66,26 @@ SUITES = [
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
+def provenance() -> dict:
+    """Attribution fields stamped into every artifact: without the commit
+    and runtime that produced a number, the per-PR perf trajectory the
+    bench-smoke job accumulates is not comparable across uploads."""
+    try:
+        git_sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=REPO_ROOT, text=True,
+            capture_output=True, timeout=10, check=True,
+        ).stdout.strip()
+    except Exception:  # noqa: BLE001 — detached tarballs, missing git
+        git_sha = "unknown"
+    try:
+        import jax
+
+        jax_version, backend = jax.__version__, jax.default_backend()
+    except Exception:  # noqa: BLE001 — numpy-only environments
+        jax_version, backend = "unavailable", "none"
+    return {"git_sha": git_sha, "jax_version": jax_version, "backend": backend}
+
+
 def persist(name: str, rows: list, smoke: bool) -> pathlib.Path:
     """Write one suite's rows to ``BENCH_<name>.json`` at the repo root."""
     path = REPO_ROOT / f"BENCH_{name}.json"
@@ -76,6 +97,7 @@ def persist(name: str, rows: list, smoke: bool) -> pathlib.Path:
             ],
             "smoke": smoke,
             "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            **provenance(),
         },
         indent=2,
     ) + "\n")

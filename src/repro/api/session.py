@@ -884,6 +884,7 @@ class ScenarioRunner:
         fused_decide: bool = False,
         proactive=None,
         mesh=None,
+        compact=None,
     ):
         from ..streaming.batchsim import BatchQueueSim
         from ..streaming.scenarios import pack_allocations, pack_scenarios
@@ -902,6 +903,12 @@ class ScenarioRunner:
         # axis across devices.  Only the fused path consumes it — the
         # window-at-a-time twin is a numpy debugging surface.
         self.mesh = mesh
+        # Trigger-gated lane compaction (DESIGN.md §18): True or a
+        # CompactionConfig turns on the sparse decide — exact memoization
+        # on the fused path, the per-lane replay cache on the twin.
+        # Output-invisible by construction: decisions stay bitwise equal
+        # to the dense run, only the `repriced` diagnostic reveals it.
+        self.compact = compact if compact not in (False,) else None
         # Forecast/MPC mode (DESIGN.md §15): True -> default MPCConfig;
         # an MPCConfig customizes predictor/horizon/gate knobs.
         if proactive is True:
@@ -1076,6 +1083,11 @@ class ScenarioRunner:
             [np.nan if s.t_max is None else s.t_max for s in self.scenarios]
         )
         hooks = self._ensure_hooks()
+        cstate = None
+        if self.controlled and self.compact is not None:
+            cstate = ctl.TwinCompactionState.create(
+                len(self.scenarios), self.static.n
+            )
         pc = None
         if self.controlled and self.proactive_cfg is not None:
             from ..forecast.mpc import ProactiveController
@@ -1102,6 +1114,7 @@ class ScenarioRunner:
                 batch = ctl.tick_batch(
                     meas, self.k, self.static, self._params(), ensure=hooks,
                     proactive=pc, q_backlog=w["q_final"],
+                    compact_state=cstate,
                 )
                 for bi, row in enumerate(batch.rows):
                     s = self.scenarios[bi]
@@ -1134,6 +1147,7 @@ class ScenarioRunner:
             warmup_seconds=self.scenarios[0].warmup,
             interpret=self.interpret, force_kernel=self.force_kernel,
             proactive=self.proactive_cfg, mesh=self.mesh,
+            compact=self.compact,
         )
         out = {key: np.asarray(v) for key, v in run(self.k).items()}
         self.k = out["k_final"].astype(np.int64)

@@ -46,7 +46,7 @@ M/M/k), which tests/test_heterogeneous.py asserts.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Any, Callable, NamedTuple, Sequence
 
 import numpy as np
@@ -69,6 +69,10 @@ __all__ = [
     "ControllerStatic",
     "ControllerParams",
     "ControllerState",
+    "CompactionConfig",
+    "DecideCache",
+    "TwinCompactionState",
+    "init_decide_cache",
     "FusedLoop",
     "RowDecision",
     "BatchDecision",
@@ -185,11 +189,15 @@ class ControllerParams:
     @classmethod
     def stack(cls, configs: Sequence, k_max: Sequence[int]) -> "ControllerParams":
         """From B SchedulerConfig-likes + resolved per-scenario budgets."""
-        flags = {bool(getattr(c, "fused_decide", False)) for c in configs}
+        per_lane = [bool(getattr(c, "fused_decide", False)) for c in configs]
+        flags = set(per_lane)
         if len(flags) > 1:
+            on = [i for i, f in enumerate(per_lane) if f]
+            off = [i for i, f in enumerate(per_lane) if not f]
             raise ValueError(
                 "fused_decide must agree across a stacked batch (one jit "
-                "program serves every scenario lane)"
+                "program serves every scenario lane); scenario indices "
+                f"{on} set fused_decide=True while {off} leave it False"
             )
         return cls(
             t_max=np.array(
@@ -270,6 +278,257 @@ def _mesh_axis(mesh) -> tuple[str, int]:
 def _padded_batch(b: int, n_shards: int) -> int:
     """B rounded up to a multiple of the shard count."""
     return -(-b // n_shards) * n_shards
+
+
+# --------------------------------------------------------------------------- #
+# Trigger-gated lane compaction (DESIGN.md §18)
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class CompactionConfig:
+    """Knobs for the sparse (trigger-gated) decide.
+
+    ``b_active_cap`` is the static bucket ladder: ascending compacted
+    widths, the largest of which must be the (per-shard) batch extent so
+    a fully-triggered tick falls back to the dense decide.  ``None``
+    derives it with :func:`repro.distributed.sharding.bucket_ladder`.
+
+    The compaction is **exact, not approximate**: the decide is a pure
+    function of ``(statics, lam_hat, mu_hat, drop_hat, lam0_hat, k)``,
+    so a lane whose inputs are bitwise unchanged since it was last
+    priced replays its cached outputs — which are, by purity, exactly
+    what repricing would produce.  The trigger scan therefore marks a
+    lane active when (a) it has no cached entry, (b) any decide input
+    changed bitwise (NaN-tolerant: NaN == NaN for this purpose, since
+    every consumer of a NaN measurement branches identically on it), or
+    (c) the §11 overload mask fires — (c) is subsumed by (b) in steady
+    state but is kept as a belt-and-braces guard so a hot lane can never
+    ride the fast path.
+    """
+
+    b_active_cap: tuple[int, ...] | None = None
+
+
+class DecideCache(NamedTuple):
+    """Per-lane memo for the jit decide: the inputs it was last priced
+    with and the outputs it produced (the dense "none"-row fast path
+    replays these).  Every leaf is ``[B, ...]``-leading so a device mesh
+    shards the whole cache with the same one-axis rule as the statics.
+
+    The cache is deliberately NOT part of :class:`ControllerState`: a
+    cold cache only makes the next tick price every lane (same outputs,
+    more work), so checkpoints stay layout-independent — a restore into
+    a loop with a different mesh/ladder shape resumes bit-identically
+    (DESIGN.md §18).
+    """
+
+    ok: Any  # [B] bool: lane has a priced entry
+    lam: Any  # [B, N] cached lam_hat
+    mu: Any  # [B, N] cached mu_hat
+    drop: Any  # [B, N] cached drop_hat
+    lam0: Any  # [B] cached lam0_hat
+    k: Any  # [B, N] int32 cached entry allocation
+    code: Any  # [B] int32 cached action code
+    k_next: Any  # [B, N] int32 cached post-decide allocation
+    et_cur: Any  # [B] cached E[T] at entry allocation
+    et_target: Any  # [B] cached E[T] at proposed allocation
+    applied: Any  # [B] bool cached applied flag
+
+
+def init_decide_cache(b: int, n: int, *, dtype=None) -> DecideCache:
+    """Cold (all-lanes-invalid) cache — the first tick prices densely."""
+    import jax.numpy as jnp
+
+    dtype = jnp.zeros((), dtype=dtype).dtype  # canonical under the x64 flag
+    return DecideCache(
+        ok=jnp.zeros(b, dtype=bool),
+        lam=jnp.zeros((b, n), dtype=dtype),
+        mu=jnp.zeros((b, n), dtype=dtype),
+        drop=jnp.zeros((b, n), dtype=dtype),
+        lam0=jnp.zeros(b, dtype=dtype),
+        k=jnp.zeros((b, n), dtype=jnp.int32),
+        code=jnp.zeros(b, dtype=jnp.int32),
+        k_next=jnp.zeros((b, n), dtype=jnp.int32),
+        et_cur=jnp.zeros(b, dtype=dtype),
+        et_target=jnp.zeros(b, dtype=dtype),
+        applied=jnp.zeros(b, dtype=bool),
+    )
+
+
+def _resolve_ladder(compact, b: int) -> tuple[int, ...]:
+    """The static bucket ladder for a (per-shard) batch extent ``b``."""
+    from ..distributed.sharding import bucket_ladder
+
+    cfg = compact if isinstance(compact, CompactionConfig) else CompactionConfig()
+    if cfg.b_active_cap is None:
+        return bucket_ladder(b)
+    ladder = tuple(sorted({min(int(w), b) for w in cfg.b_active_cap} | {b}))
+    if ladder[0] < 1:
+        raise ValueError(f"bucket ladder widths must be >= 1: {cfg.b_active_cap}")
+    return ladder
+
+
+def _bucketed(ladder, b, mask, run_at_width, templates):
+    """Gather -> compute -> scatter over the masked lanes at the smallest
+    static ladder width that holds them (MoE-style capacity dispatch).
+
+    ``run_at_width(gather_idx)`` receives ``[w]`` clipped lane indices
+    and returns a tuple matching ``templates``; lanes outside the mask
+    keep their template values.  Unused gather rows (the ``fill_value``
+    tail, clipped into range) compute garbage that the drop-mode scatter
+    discards — safe because every op in the decide is per-lane.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    idx = jnp.nonzero(mask, size=b, fill_value=b)[0]
+    sel = jnp.searchsorted(
+        jnp.asarray(ladder, dtype=jnp.int32),
+        mask.sum(dtype=jnp.int32),
+        side="left",
+    )
+
+    def branch(w):
+        def go(_):
+            outs = run_at_width(jnp.clip(idx[:w], 0, b - 1))
+            return tuple(
+                t.at[idx[:w]].set(o, mode="drop")
+                for t, o in zip(templates, outs)
+            )
+
+        return go
+
+    return jax.lax.switch(sel, [branch(w) for w in ladder], 0)
+
+
+def _make_compact_decide(core, b: int, ladder: tuple[int, ...]):
+    """Wrap a dense decide core with the trigger scan + bucketed dispatch.
+
+    ``decide(st, lam_hat, mu_hat, drop_hat, lam0_hat, k_current, cache)
+    -> ((code, k_next, et_cur, et_target, applied), repriced, cache')``
+    is bitwise identical to ``core(...)`` on every output: active lanes
+    are gathered, priced at the compacted width, and scattered back;
+    quiet lanes replay their cached row, which purity guarantees equals
+    a fresh repricing (see :class:`CompactionConfig`).
+    """
+    import jax.numpy as jnp
+
+    def _neq(a, c):
+        # Bitwise-change test with NaN == NaN (a persistently-NaN
+        # measurement must not keep a lane hot forever).
+        return (a != c) & ~(jnp.isnan(a) & jnp.isnan(c))
+
+    def decide(st, lam_hat, mu_hat, drop_hat, lam0_hat, k_current, cache):
+        k_in = k_current.astype(jnp.int32)
+        # --- trigger scan: O(B*N), no table/solve/top-R work ----------- #
+        mu_eff = mu_hat * st["speed"]
+        k_floor = jnp.maximum(k_in, 1).astype(lam_hat.dtype)
+        eff = 1.0 / (1.0 + st["alpha"] * (k_floor - 1.0))
+        capacity = jnp.where(
+            st["group"], mu_eff * k_floor * eff, mu_eff * k_floor
+        )
+        valid = jnp.isfinite(lam_hat) & jnp.isfinite(mu_eff) & (mu_eff > 0)
+        drops = jnp.nan_to_num(drop_hat, nan=0.0)
+        hot = (
+            valid & st["active"] & (
+                (lam_hat >= capacity * (1.0 - 1e-9))
+                | (drops > DROP_TRIGGER_FRACTION * capacity)
+            )
+        ).any(axis=-1)
+        changed = (
+            _neq(lam_hat, cache.lam).any(axis=-1)
+            | _neq(mu_hat, cache.mu).any(axis=-1)
+            | _neq(drop_hat, cache.drop).any(axis=-1)
+            | _neq(lam0_hat, cache.lam0)
+            | (k_in != cache.k).any(axis=-1)
+        )
+        repriced = ~cache.ok | changed | hot
+
+        # --- compacted decide + cached-row fast path ------------------- #
+        def price(g):
+            st_g = {key: val[g] for key, val in st.items()}
+            return core(
+                st_g, lam_hat[g], mu_hat[g], drop_hat[g], lam0_hat[g], k_in[g]
+            )
+
+        code, k_next, et_cur, et_target, applied = _bucketed(
+            ladder, b, repriced, price,
+            (cache.code, cache.k_next, cache.et_cur, cache.et_target,
+             cache.applied),
+        )
+        new_cache = DecideCache(
+            ok=jnp.ones_like(cache.ok),
+            lam=lam_hat, mu=mu_hat, drop=drop_hat, lam0=lam0_hat, k=k_in,
+            code=code, k_next=k_next, et_cur=et_cur, et_target=et_target,
+            applied=applied,
+        )
+        return (code, k_next, et_cur, et_target, applied), repriced, new_cache
+
+    return decide
+
+
+@dataclass
+class TwinCompactionState:
+    """Per-lane memo for the numpy twin's reactive decide (mutable,
+    caller-owned; pass it to every :func:`tick_batch` of one run).
+
+    Lanes with a negotiator ``ensure`` hook or a custom cost model are
+    never memoized (their decide is side-effecting / stateful); for the
+    rest, a bitwise-unchanged input tuple replays the cached
+    :class:`RowDecision` — the same purity argument as the jit cache.
+    Valid only for a fixed ``(static, params-other-than-k_max)``;
+    ``k_max`` is compared per tick because negotiator leases move it.
+    """
+
+    valid: np.ndarray  # [B] bool
+    lam: np.ndarray  # [B, N]
+    mu: np.ndarray  # [B, N]
+    drop: np.ndarray  # [B, N]
+    lam0: np.ndarray  # [B]
+    k: np.ndarray  # [B, N] int64
+    k_max: np.ndarray  # [B] int64
+    rows: list  # [B] RowDecision | None
+    errors: list  # [B] Exception | None
+    replayed: np.ndarray  # [B] bool: last tick's fast-path lanes (diagnostic)
+
+    @classmethod
+    def create(cls, b: int, n: int) -> "TwinCompactionState":
+        return cls(
+            valid=np.zeros(b, dtype=bool),
+            lam=np.full((b, n), np.nan),
+            mu=np.full((b, n), np.nan),
+            drop=np.full((b, n), np.nan),
+            lam0=np.full(b, np.nan),
+            k=np.zeros((b, n), dtype=np.int64),
+            k_max=np.zeros(b, dtype=np.int64),
+            rows=[None] * b,
+            errors=[None] * b,
+            replayed=np.zeros(b, dtype=bool),
+        )
+
+    def hit(self, bi, lam, mu, drop, lam0, k, k_max) -> bool:
+        return bool(
+            self.valid[bi]
+            and self.k_max[bi] == k_max
+            and np.array_equal(self.k[bi, : len(k)], k)
+            and np.array_equal(self.lam[bi, : len(lam)], lam, equal_nan=True)
+            and np.array_equal(self.mu[bi, : len(mu)], mu, equal_nan=True)
+            and np.array_equal(self.drop[bi, : len(drop)], drop, equal_nan=True)
+            and (
+                np.isnan(self.lam0[bi]) and np.isnan(lam0)
+                or self.lam0[bi] == lam0
+            )
+        )
+
+    def remember(self, bi, lam, mu, drop, lam0, k, k_max, row, error) -> None:
+        self.valid[bi] = True
+        self.lam[bi, : len(lam)] = lam
+        self.mu[bi, : len(mu)] = mu
+        self.drop[bi, : len(drop)] = drop
+        self.lam0[bi] = lam0
+        self.k[bi, : len(k)] = k
+        self.k_max[bi] = k_max
+        self.rows[bi] = row
+        self.errors[bi] = error
 
 
 # --------------------------------------------------------------------------- #
@@ -629,6 +888,7 @@ def tick_batch(
     raise_errors: bool = False,
     proactive=None,
     q_backlog: np.ndarray | None = None,
+    compact_state: TwinCompactionState | None = None,
 ) -> BatchDecision:
     """One control tick for the whole batch (the float64 numpy twin).
 
@@ -648,6 +908,16 @@ def tick_batch(
     §11 trigger always wins) — commit the MPC plan instead of the
     reactive decide.  ``q_backlog [B, N]`` seeds the planner's rollout
     with the actual queue backlog (0 when the caller has no probe).
+
+    ``compact_state`` (a caller-owned :class:`TwinCompactionState`)
+    switches on the twin-side trigger-gated fast path (DESIGN.md §18):
+    lanes whose decide inputs are bitwise unchanged — and that are not
+    hot, have no negotiator hook / custom cost model, and are not MPC
+    overrides — replay their cached :class:`RowDecision` instead of
+    re-running clamp + solve + Programs (4)/(6); with ``proactive`` the
+    planner prices only the MPC-eligible lanes.  Decisions are bitwise
+    identical either way (the memo key is the full input tuple of a pure
+    decide); the ``need`` diagnostic defaults to 0 on unpriced lanes.
     """
     b, n = static.batch, static.n
     k_current = np.asarray(k_current, dtype=np.int64)
@@ -664,7 +934,7 @@ def tick_batch(
     use = np.zeros(b, dtype=bool)
     k_plan = et_hold = et_plan = need_mpc = None
     if proactive is not None:
-        from ..forecast.mpc import forecast_step, mpc_plan
+        from ..forecast.mpc import forecast_step, mpc_plan, mpc_plan_compact
 
         t_arr = np.nan_to_num(params.t_max, nan=np.inf)
         k_hi = int(max(params.k_max.max(), k_current.max(), 1))
@@ -682,10 +952,21 @@ def tick_batch(
             cap_queue=proactive.cap_queue, t_max=t_arr,
             span=proactive.span, cfg=proactive.cfg, k_hi=k_hi,
         )
+        # A plan can only be committed where the confidence gate is open,
+        # the snapshot is complete, the §11 trigger is quiet, and T_max is
+        # real — so under compaction the planner prices exactly that set
+        # (``use`` below is a subset of it, hence unchanged bitwise).
+        eligible = conf & complete & ~hot & np.isfinite(t_arr)
+
+        def _plan(k_max_arr):
+            if compact_state is None:
+                return mpc_plan(lam_pred, q0, k_current, k_max=k_max_arr, **plan_kw)
+            return mpc_plan_compact(
+                eligible, lam_pred, q0, k_current, k_max=k_max_arr, **plan_kw
+            )
+
         k_maxes = params.k_max.astype(np.int64).copy()
-        k_plan, any_ok, et_hold, et_plan, need_mpc = mpc_plan(
-            lam_pred, q0, k_current, k_max=k_maxes, **plan_kw
-        )
+        k_plan, any_ok, et_hold, et_plan, need_mpc = _plan(k_maxes)
         use = conf & any_ok & complete & ~hot & np.isfinite(t_arr)
         # Negotiator leases: grow toward the Program-6-at-peak demand,
         # release (with hysteresis) when it shrinks; one re-plan pass if
@@ -704,9 +985,7 @@ def tick_batch(
                         k_maxes[bi] = new_lease
                         moved = True
             if moved:
-                k_plan, any_ok, et_hold, et_plan, need_mpc = mpc_plan(
-                    lam_pred, q0, k_current, k_max=k_maxes, **plan_kw
-                )
+                k_plan, any_ok, et_hold, et_plan, need_mpc = _plan(k_maxes)
                 use = conf & any_ok & complete & ~hot & np.isfinite(t_arr)
         proactive.mpc_used = use.copy()
         proactive.confident = conf.copy()
@@ -714,6 +993,8 @@ def tick_batch(
 
     rows: list[RowDecision] = []
     errors: list = [None] * b
+    if compact_state is not None:
+        compact_state.replayed[:] = False
     for bi in range(b):
         ni = int(static.n_ops[bi])
         k_row = k_current[bi, :ni]
@@ -745,6 +1026,32 @@ def tick_batch(
                 "none", k_row.copy(), None, k_max, float("nan"), None, None,
                 None, "insufficient measurements", applied=False,
             ))
+            continue
+        # Trigger-gated fast path (§18): replay the cached row when every
+        # decide input is bitwise unchanged.  Hot lanes always reprice
+        # (mirrors the jit trigger); hooked / custom-cost lanes and
+        # raise_errors callers never memoize.
+        memo = (
+            compact_state is not None
+            and not raise_errors
+            and (ensure is None or ensure[bi] is None)
+            and (cost_models is None or cost_models[bi] is None)
+        )
+        lam_row = np.asarray(meas.lam_hat[bi, :ni], dtype=np.float64)
+        mu_row = np.asarray(meas.mu_hat[bi, :ni], dtype=np.float64)
+        drop_row = np.asarray(meas.drop_hat[bi, :ni], dtype=np.float64)
+        lam0_sc = float(meas.lam0_hat[bi])
+        if (
+            memo
+            and not overloaded[bi, :ni].any()
+            and compact_state.hit(
+                bi, lam_row, mu_row, drop_row, lam0_sc, k_row, k_max
+            )
+        ):
+            cached = compact_state.rows[bi]
+            rows.append(replace(cached, k_next=cached.k_next.copy()))
+            errors[bi] = compact_state.errors[bi]
+            compact_state.replayed[bi] = True
             continue
         names = static.names[bi]
         scaling = ["group" if g else "replica" for g in static.group[bi, :ni]]
@@ -787,6 +1094,11 @@ def tick_batch(
                 None, None, str(e), applied=False,
             )
         rows.append(row)
+        if memo and not overloaded[bi, :ni].any():
+            compact_state.remember(
+                bi, lam_row, mu_row, drop_row, lam0_sc, k_row.copy(), k_max,
+                row, errors[bi],
+            )
     return BatchDecision(rows, errors)
 
 
@@ -1042,6 +1354,7 @@ def make_decide_jax(
     force_kernel: bool = False,
     fused: bool | None = None,
     mesh=None,
+    compact=None,
 ):
     """Compile the batched decide into one jit program.
 
@@ -1075,6 +1388,16 @@ def make_decide_jax(
     (the SchedulerConfig knob, default off).  On CPU the fused oracle is
     bit-exact with the two-pass path, so flipping the knob never changes
     a decision — only the dispatch.
+
+    ``compact`` (``True`` or a :class:`CompactionConfig`) returns the
+    trigger-gated sparse decide instead (DESIGN.md §18): signature
+    ``decide(lam_hat, mu_hat, drop_hat, lam0_hat, k_current, cache) ->
+    ((code, k_next, et_cur, et_target, applied), repriced [B] bool,
+    cache')`` with ``decide.init_cache()`` producing the cold cache.
+    Outputs are bitwise identical to the dense decide on every tick;
+    only the work placement changes.  Under a mesh the compaction runs
+    per shard inside ``shard_map`` (no cross-device gather) and the
+    cache keeps the padded extent.
     """
     import jax
     import jax.numpy as jnp
@@ -1098,6 +1421,25 @@ def make_decide_jax(
     if mesh is None:
         st = {k: jnp.asarray(v) for k, v in _decide_statics(static, params).items()}
 
+        if compact:
+            core_c = _make_compact_decide(core, b, _resolve_ladder(compact, b))
+            jitted = jax.jit(
+                lambda lam, mu, drop, lam0, k, cache: core_c(
+                    st, lam, mu, drop, lam0, k, cache
+                )
+            )
+
+            def decide_compact(lam_hat, mu_hat, drop_hat, lam0_hat, k_current,
+                               cache):
+                return jitted(
+                    lam_hat, mu_hat, drop_hat, lam0_hat, k_current, cache
+                )
+
+            decide_compact.init_cache = lambda dtype=None: init_decide_cache(
+                b, n, dtype=dtype
+            )
+            return decide_compact
+
         def decide(lam_hat, mu_hat, drop_hat, lam0_hat, k_current):
             return core(st, lam_hat, mu_hat, drop_hat, lam0_hat, k_current)
 
@@ -1115,6 +1457,61 @@ def make_decide_jax(
     }
     row = P(axis, None)
     lane = P(axis)
+    pad = b_pad - b
+
+    if compact:
+        # Per-shard compaction: each device runs the trigger scan and the
+        # bucketed dispatch on its own lane shard — no cross-device
+        # gather, at the cost of load imbalance (see bucket_ladder).
+        b_shard = b_pad // n_shards
+        core_c = _make_compact_decide(
+            core, b_shard, _resolve_ladder(compact, b_shard)
+        )
+        cache_specs = DecideCache(
+            ok=lane, lam=row, mu=row, drop=row, lam0=lane, k=row,
+            code=lane, k_next=row, et_cur=lane, et_target=lane, applied=lane,
+        )
+        sharded_c = shard_map(
+            core_c,
+            mesh=mesh,
+            in_specs=(st_specs, row, row, row, lane, row, cache_specs),
+            out_specs=((lane, row, lane, lane, lane), lane, cache_specs),
+            check_rep=False,
+        )
+
+        def decide_padded(lam_hat, mu_hat, drop_hat, lam0_hat, k_current,
+                          cache):
+            if pad:
+                dtype = lam_hat.dtype
+                lam_hat = jnp.concatenate([lam_hat, jnp.zeros((pad, n), dtype)])
+                mu_hat = jnp.concatenate([mu_hat, jnp.ones((pad, n), dtype)])
+                drop_hat = jnp.concatenate(
+                    [drop_hat, jnp.zeros((pad, n), dtype)]
+                )
+                lam0_hat = jnp.concatenate([lam0_hat, jnp.zeros(pad, dtype)])
+                k_current = jnp.concatenate(
+                    [k_current, jnp.zeros((pad, n), k_current.dtype)]
+                )
+            out, repriced, cache = sharded_c(
+                st, lam_hat, mu_hat, drop_hat, lam0_hat, k_current, cache
+            )
+            if pad:
+                out = tuple(o[:b] for o in out)
+                repriced = repriced[:b]
+            return out, repriced, cache
+
+        jitted = jax.jit(decide_padded)
+
+        def decide_compact(lam_hat, mu_hat, drop_hat, lam0_hat, k_current,
+                           cache):
+            return jitted(lam_hat, mu_hat, drop_hat, lam0_hat, k_current, cache)
+
+        # The cache lives at the PADDED extent (it is a shard_map operand).
+        decide_compact.init_cache = lambda dtype=None: init_decide_cache(
+            b_pad, n, dtype=dtype
+        )
+        return decide_compact
+
     sharded = shard_map(
         core,
         mesh=mesh,
@@ -1122,7 +1519,6 @@ def make_decide_jax(
         out_specs=(lane, row, lane, lane, lane),
         check_rep=False,
     )
-    pad = b_pad - b
 
     def decide(lam_hat, mu_hat, drop_hat, lam0_hat, k_current):
         if pad:
@@ -1228,6 +1624,7 @@ def make_fused_loop(
     fused: bool | None = None,
     proactive=None,
     mesh=None,
+    compact=None,
 ):
     """Fuse simulate -> measure -> decide -> apply into ONE jit program.
 
@@ -1264,6 +1661,25 @@ def make_fused_loop(
     outputs are sliced back to the real ``B``; only the carried
     ``ControllerState`` keeps the padded extent.
 
+    ``compact`` (``True`` or a :class:`CompactionConfig`) splits every
+    tick into the cheap O(B*N) trigger scan and the bucketed compacted
+    decide (DESIGN.md §18): lanes whose decide inputs are bitwise
+    unchanged since their last pricing replay the cached row; triggered
+    lanes are gathered to the smallest static ladder width and priced
+    there.  With ``proactive`` the MPC planner likewise prices only the
+    commit-eligible lanes.  Outputs are bitwise identical to the dense
+    loop; the per-tick output dict gains a ``"repriced" [ticks, B]``
+    work-placement diagnostic (NOT part of the decision surface — chunk
+    boundaries reset the cache, so a resumed run's ``repriced`` differs
+    from a straight-through run's even though every decision matches).
+    The memo cache rides only the in-chunk ``lax.scan`` carry, never
+    :class:`ControllerState`: checkpoints stay layout-independent and a
+    restore re-prices every lane once (same outputs, more work).  Under
+    a mesh each device compacts its own shard inside ``shard_map`` —
+    no cross-device gather (see
+    :func:`repro.distributed.sharding.bucket_ladder` for the imbalance
+    tradeoff).
+
     Negotiated scenarios cannot ride in here (leases are Python): callers
     keep those on the numpy twin path.
     """
@@ -1282,6 +1698,12 @@ def make_fused_loop(
     if fused is None:
         fused = bool(getattr(params, "fused_decide", False))
     j_cap = min(k_hi_res, max(int(params.k_max.max()), 1))
+    if compact:
+        compact_cfg = (
+            compact if isinstance(compact, CompactionConfig) else CompactionConfig()
+        )
+    else:
+        compact_cfg = None
 
     if mesh is not None:
         axis, n_shards = _mesh_axis(mesh)
@@ -1375,6 +1797,13 @@ def make_fused_loop(
         alpha = sim_d["alpha"]
         group = sim_d["group"]
 
+        bb = active.shape[0]  # this chunk's batch extent (shard under mesh)
+        if compact_cfg is not None:
+            decide_c = _make_compact_decide(
+                decide_core, bb, _resolve_ladder(compact_cfg, bb)
+            )
+            mpc_ladder = _resolve_ladder(compact_cfg, bb)
+
         if proactive is not None and fused:
             # MPC candidate allocator through the SAME fused dispatch:
             # the planner hands us the candidate budgets as absolute
@@ -1383,28 +1812,38 @@ def make_fused_loop(
             # equals the planner's `extra` exactly — the tables agree
             # bitwise (sojourn_table_arrays mirrors sojourn_table_jax),
             # hence so do k_start and the selected increments.
-            def mpc_alloc(lam_m, budgets_m):
-                bb = active.shape[0]  # this chunk's batch extent
-                m = lam_m.shape[0]
-                r = m // bb
+            # Parameterized over the statics so the compacted MPC branch
+            # can rebuild it from gathered (compacted-width) operands.
+            def mpc_alloc_of(mu_eff_x, group_x, alpha_x, active_x):
+                def mpc_alloc(lam_m, budgets_m):
+                    bx = active_x.shape[0]
+                    m = lam_m.shape[0]
+                    r = m // bx
 
-                def rep(x):
-                    return jnp.broadcast_to(
-                        x[:, None, :], (bb, r, x.shape[-1])
-                    ).reshape(m, x.shape[-1])
+                    def rep(x):
+                        return jnp.broadcast_to(
+                            x[:, None, :], (bx, r, x.shape[-1])
+                        ).reshape(m, x.shape[-1])
 
-                k4_m, _, _, _ = _decide_fused_ops().batch_decide(
-                    lam_m, rep(mu_eff), group=rep(group), alpha=rep(alpha),
-                    active=rep(active),
-                    k_cur=jnp.zeros(lam_m.shape, dtype=jnp.int32),
-                    k_max=budgets_m, k_hi=k_hi_res, j_cap=j_cap,
-                    interpret=interpret, force_kernel=force_kernel,
-                )
-                return k4_m
+                    k4_m, _, _, _ = _decide_fused_ops().batch_decide(
+                        lam_m, rep(mu_eff_x), group=rep(group_x),
+                        alpha=rep(alpha_x), active=rep(active_x),
+                        k_cur=jnp.zeros(lam_m.shape, dtype=jnp.int32),
+                        k_max=budgets_m, k_hi=k_hi_res, j_cap=j_cap,
+                        interpret=interpret, force_kernel=force_kernel,
+                    )
+                    return k4_m
+
+                return mpc_alloc
+
+            mpc_alloc = mpc_alloc_of(mu_eff, group, alpha, active)
         else:
+            mpc_alloc_of = None
             mpc_alloc = None
 
         def tick_fn(carry, t_idx):
+            if compact_cfg is not None:
+                carry, dcache = carry[:-1], carry[-1]
             if proactive is not None:
                 q, served_prev, k, acc, fstate = carry
             else:
@@ -1442,9 +1881,15 @@ def make_fused_loop(
             sojourn = jnp.where(
                 lam0 > 0, contrib.sum(axis=-1) / jnp.maximum(lam0, 1e-300), jnp.nan
             )
-            code, k_next, et_cur, et_target, applied = decide_core(
-                st_d, lam_hat, mu, drop_hat, lam0, k
-            )
+            if compact_cfg is not None:
+                dout, repriced, dcache = decide_c(
+                    st_d, lam_hat, mu, drop_hat, lam0, k, dcache
+                )
+                code, k_next, et_cur, et_target, applied = dout
+            else:
+                code, k_next, et_cur, et_target, applied = decide_core(
+                    st_d, lam_hat, mu, drop_hat, lam0, k
+                )
             if proactive is not None:
                 # Forecast plane: advance the predictors on this window's
                 # measured rates, plan over the horizon from the live
@@ -1453,16 +1898,10 @@ def make_fused_loop(
                 fstate, lam_pred, conf = forecast_step(
                     fstate, lam_hat, active, proactive, xp=jnp
                 )
-                k_plan, any_ok, et_hold, et_plan, _need = mpc_plan(
-                    lam_pred, q1, k, mu=mu, group=st_d["group"], alpha=alpha,
-                    speed=sim_d["speed"], active=active, src_mask=st_d["src"],
-                    cap_queue=sim_d["cap_queue"], t_max=t_max,
-                    k_max=st_d["k_max"],
-                    span=span, cfg=proactive, k_hi=k_hi_res, xp=jnp, topr=topr,
-                    alloc=mpc_alloc,
-                )
                 # Inline recompute of the trigger + completeness (decide
-                # owns them internally; same formulas as the twin's gating).
+                # owns them internally; same formulas as the twin's
+                # gating).  Computed BEFORE the planner so the compacted
+                # path can restrict pricing to the commit-eligible lanes.
                 k_floor = jnp.maximum(k.astype(jnp.int32), 1).astype(lam_hat.dtype)
                 eff_t = 1.0 / (1.0 + alpha * (k_floor - 1.0))
                 capacity = jnp.where(
@@ -1481,6 +1920,48 @@ def make_fused_loop(
                     .all(axis=-1)
                     & jnp.isfinite(lam0)
                 )
+                plan_kw = dict(
+                    span=span, cfg=proactive, k_hi=k_hi_res, xp=jnp, topr=topr,
+                )
+                if compact_cfg is not None:
+                    # A plan can only be committed where use (below) is
+                    # open, and use is a subset of this eligibility mask
+                    # — so pricing only these lanes is exact (mpc_plan
+                    # is per-lane throughout).  any_ok defaults False
+                    # (reactive fallback) on unpriced lanes; their
+                    # k_plan / E[T] slots are never read.
+                    eligible = conf & complete & ~hot & jnp.isfinite(t_max)
+
+                    def price_mpc(g):
+                        kp, ok, eh, ep, _ = mpc_plan(
+                            lam_pred[g], q1[g], k[g], mu=mu[g],
+                            group=st_d["group"][g], alpha=alpha[g],
+                            speed=sim_d["speed"][g], active=active[g],
+                            src_mask=st_d["src"][g],
+                            cap_queue=sim_d["cap_queue"][g], t_max=t_max[g],
+                            k_max=st_d["k_max"][g],
+                            alloc=None if mpc_alloc_of is None
+                            else mpc_alloc_of(
+                                mu_eff[g], group[g], alpha[g], active[g]
+                            ),
+                            **plan_kw,
+                        )
+                        return kp, ok, eh, ep
+
+                    inf_l = jnp.full(bb, jnp.inf, dtype=lam_hat.dtype)
+                    k_plan, any_ok, et_hold, et_plan = _bucketed(
+                        mpc_ladder, bb, eligible, price_mpc,
+                        (jnp.where(active, k, 0), jnp.zeros(bb, dtype=bool),
+                         inf_l, inf_l),
+                    )
+                else:
+                    k_plan, any_ok, et_hold, et_plan, _need = mpc_plan(
+                        lam_pred, q1, k, mu=mu, group=st_d["group"],
+                        alpha=alpha, speed=sim_d["speed"], active=active,
+                        src_mask=st_d["src"], cap_queue=sim_d["cap_queue"],
+                        t_max=t_max, k_max=st_d["k_max"], alloc=mpc_alloc,
+                        **plan_kw,
+                    )
                 use = conf & any_ok & complete & ~hot & jnp.isfinite(t_max)
                 changed = use & (
                     (k_plan.astype(jnp.int32) != k) & active
@@ -1508,12 +1989,23 @@ def make_fused_loop(
             ys = (code, k_next, sojourn, et_cur, et_target, applied)
             if proactive is not None:
                 ys = ys + (use, conf)
-                return (q1, served_prev1, k_next, new_acc, fstate), ys
-            return (q1, served_prev1, k_next, new_acc), ys
+            new_carry = (q1, served_prev1, k_next, new_acc)
+            if proactive is not None:
+                new_carry = new_carry + (fstate,)
+            if compact_cfg is not None:
+                ys = ys + (repriced,)
+                new_carry = new_carry + (dcache,)
+            return new_carry, ys
 
         carry0 = (state.q, state.served_prev, state.k, state.acc)
         if proactive is not None:
             carry0 = carry0 + (state.fstate,)
+        if compact_cfg is not None:
+            # The memo cache starts COLD every chunk (it is not part of
+            # ControllerState): the chunk's first tick prices every lane,
+            # which purity makes output-invisible — this is what keeps
+            # checkpoints layout-independent (§18).
+            carry0 = carry0 + (init_decide_cache(bb, n, dtype=mu.dtype),)
         xs = state.tick + jnp.arange(ticks, dtype=state.tick.dtype)
         final, ys = lax.scan(tick_fn, carry0, xs)
         new_state = ControllerState(
@@ -1563,6 +2055,8 @@ def make_fused_loop(
         ys_specs = (ys_lane, ys_row, ys_lane, ys_lane, ys_lane, ys_lane)
         if proactive is not None:
             ys_specs = ys_specs + (ys_lane, ys_lane)
+        if compact_cfg is not None:
+            ys_specs = ys_specs + (ys_lane,)
         data_specs = (P(None, None, axis, None), P(None, None))
 
     def build(ticks: int):
@@ -1608,6 +2102,8 @@ def make_fused_loop(
             if proactive is not None:
                 out["mpc_used"] = per_tick[6]
                 out["confident"] = per_tick[7]
+            if compact_cfg is not None:
+                out["repriced"] = per_tick[-1]
             return new_state, out
 
         return jax.jit(run, donate_argnums=0)

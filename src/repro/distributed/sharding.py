@@ -39,6 +39,7 @@ __all__ = [
     "tree_shardings",
     "batch_spec",
     "fleet_mesh",
+    "bucket_ladder",
 ]
 
 
@@ -60,6 +61,37 @@ def fleet_mesh(n_devices: int | None = None, *, axis: str = "fleet") -> Mesh:
             )
         devices = devices[:n_devices]
     return Mesh(np.asarray(devices), (axis,))
+
+
+def bucket_ladder(b: int, *, fractions: tuple[int, ...] = (16, 4, 1)) -> tuple[int, ...]:
+    """Static compacted-width ladder for the trigger-gated sparse decide
+    (DESIGN.md §18).
+
+    The fused control plane gathers the active (triggered) lanes into the
+    smallest ladder width that holds them and runs the decide at that
+    width — a MoE-style capacity ladder, so every tick dispatches to one
+    of a handful of pre-compiled shapes instead of recompiling per active
+    count.  Default rungs: ceil(b/16), ceil(b/4), and b (the dense
+    fallback, always present so a fully-triggered tick degrades to the
+    plain dense decide, never an overflow).
+
+    Under a device mesh the ladder is built **per shard** (``b`` = the
+    shard's lane extent): each device compacts its own lanes inside the
+    ``shard_map`` body, so no cross-device gather/scatter collective is
+    needed.  The tradeoff is load imbalance — lane activity is not
+    redistributed, so a shard whose lanes are all hot runs its ``b/1``
+    rung while a quiet shard runs ``b/16`` and waits at the next
+    collective.  That is deliberate: re-balancing would cost an
+    all-to-all per tick, and the worst case (every shard hot) is exactly
+    the dense cost we had before compaction.  Interleave hot scenario
+    families across the batch axis when packing the fleet if imbalance
+    shows up in profiles.
+    """
+    if b < 1:
+        raise ValueError(f"batch extent must be >= 1, got {b}")
+    widths = {max(1, -(-b // f)) for f in fractions}
+    widths.add(b)
+    return tuple(sorted(w for w in widths if w <= b))
 
 TRAIN_RULES: dict[str, Any] = {
     "batch": ("pod", "data"),

@@ -64,6 +64,7 @@ __all__ = [
     "forecast_init_state",
     "forecast_step",
     "mpc_plan",
+    "mpc_plan_compact",
     "gain_topr_np",
     "sojourn_table_arrays",
 ]
@@ -412,6 +413,51 @@ def mpc_plan(
     k_plan = xp.take_along_axis(k_cand, choice[:, None, None], axis=1)[:, 0]
     et_plan = xp.take_along_axis(et_hat, choice[:, None, None], axis=1)[:, 0, 0]
     return k_plan, ok.any(axis=-1), et_hat[:, 0, 0], et_plan, need
+
+
+def mpc_plan_compact(eligible, lam_pred, q0, k_cur, *, k_max, **plan_kw):
+    """:func:`mpc_plan` restricted to the ``eligible [B]`` lanes — the
+    twin side of the trigger-gated compaction (DESIGN.md §18).
+
+    A plan is only ever *committed* where the caller's
+    ``use = conf & any_ok & complete & ~hot & isfinite(t_max)`` gate is
+    open, and ``use`` is a subset of the eligibility mask the caller
+    passes here (``conf & complete & ~hot & isfinite(t_max)``), so
+    pricing only those lanes is exact: every op in :func:`mpc_plan` is
+    per-lane, hence the gathered results are bitwise what a dense pass
+    would produce for the same lanes.  Unpriced lanes return the
+    fall-back row (``any_ok = False`` — reactive path — plus hold
+    allocation, inf E[T], ``need = 0``); none of those defaults is read
+    where ``use`` is False except the ``need`` diagnostic, which is
+    documented to be 0 on unpriced lanes.
+    """
+    b = lam_pred.shape[0]
+    active = np.asarray(plan_kw["active"], dtype=bool)
+    k_plan = np.where(active, np.asarray(k_cur), 0).astype(np.int32)
+    any_ok = np.zeros(b, dtype=bool)
+    et_hold = np.full(b, np.inf, dtype=lam_pred.dtype)
+    et_plan = np.full(b, np.inf, dtype=lam_pred.dtype)
+    need = np.zeros(b, dtype=np.int32)
+    idx = np.nonzero(np.asarray(eligible, dtype=bool))[0]
+    if idx.size:
+
+        def gather(v):
+            arr = np.asarray(v)
+            return arr[idx] if arr.ndim >= 1 and arr.shape[0] == b else v
+
+        kp, ok, eh, ep, nd = mpc_plan(
+            lam_pred[idx],
+            np.asarray(q0)[idx],
+            np.asarray(k_cur)[idx],
+            k_max=np.asarray(k_max)[idx],
+            **{key: gather(val) for key, val in plan_kw.items()},
+        )
+        k_plan[idx] = kp
+        any_ok[idx] = ok
+        et_hold[idx] = eh
+        et_plan[idx] = ep
+        need[idx] = nd
+    return k_plan, any_ok, et_hold, et_plan, need
 
 
 # --------------------------------------------------------------------------- #

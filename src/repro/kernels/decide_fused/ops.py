@@ -45,6 +45,16 @@ def batch_decide(
     TPU backend -> Pallas, else the jnp oracle; ``interpret`` alone does
     not switch).  The oracle keeps the caller's dtype and is bit-exact
     with the two-pass decide; the kernel is float32 end to end.
+
+    Compacted-width invocation (DESIGN.md §18): the trigger-gated sparse
+    decide calls this at each rung of the ``bucket_ladder`` — ``B`` is
+    just the leading grid extent, so every rung is a separate (cached)
+    jit/Pallas specialization while the lane-axis pad arithmetic
+    (``_pad_shapes``, keyed on ``(n, k_hi, n_pad)`` only) is shared
+    across rungs.  Lanes gathered twice via the clipped fill index
+    compute real rows that the caller's drop-mode scatter discards —
+    every op here is per-scenario-lane, so duplicated rows cannot
+    contaminate their neighbours.
     """
     if force_kernel or jax.default_backend() == "tpu":
         return _kernel.batch_decide_pallas(

@@ -16,6 +16,11 @@ def gain_topr(cand, budget, *, interpret: bool = False, force_kernel: bool = Fal
     CPU — repo kernel idiom, see kernels/__init__.py); jnp oracle
     elsewhere.  The kernel selects in float32; the oracle follows the
     input dtype (float64 under enable_x64).
+
+    The §18 compacted MPC pricing calls this at ``bucket_ladder`` rungs:
+    each candidate row is scored against its own row's budget only, so a
+    gathered (or fill-duplicated) lane selects exactly what it would at
+    the dense extent and drop-mode scatter discards the duplicates.
     """
     if force_kernel or jax.default_backend() == "tpu":
         return _kernel.gain_topr_pallas(cand, budget, interpret=interpret)

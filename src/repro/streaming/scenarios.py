@@ -639,6 +639,7 @@ def control_trace(
     backend: str = "numpy",
     interpret: bool = False,
     fused_decide: bool = False,
+    compact=None,
 ) -> dict:
     """JSON-able decision trace of the full control loop over ``scenarios``
     (the golden-trace surface, DESIGN.md §13).
@@ -660,6 +661,10 @@ def control_trace(
     ``kernels/decide_fused`` dispatch inside it, and ``interpret`` runs
     any Pallas dispatch in interpret mode — together the golden replay
     surface for the fused-decide knob (tests/test_golden_traces.py).
+    ``compact`` (True or a :class:`~repro.core.controller.CompactionConfig`)
+    turns on the trigger-gated sparse decide (DESIGN.md §18); compaction
+    is output-invisible, so every golden must replay bit-identically with
+    it on — that replay is part of the compaction test surface.
     """
     from ..api.session import ScenarioRunner
 
@@ -667,7 +672,7 @@ def control_trace(
         runner = ScenarioRunner(
             scenarios, tick_interval=tick_interval, backend=backend,
             proactive=proactive, interpret=interpret,
-            fused_decide=fused_decide,
+            fused_decide=fused_decide, compact=compact,
         )
         return runner.run()
 

@@ -35,6 +35,7 @@ from typing import Any
 import numpy as np
 
 __all__ = [
+    "DIAGNOSTIC_KEYS",
     "SoakConfig",
     "SoakReport",
     "assert_bit_identical",
@@ -55,6 +56,14 @@ AGGREGATE_KEYS = (
     "k_final", "q_final", "offered", "served", "dropped",
     "ext_admitted", "ext_offered", "q_int", "q_max",
 )
+#: diagnostics that are NOT part of the bit-identity contract.  The §18
+#: compaction trigger mask (``repriced``) depends on where the decide
+#: cache went cold — the cache lives outside the checkpointed carry (so
+#: checkpoints stay layout-independent), which means every resume chunk
+#: starts cold and reprices densely on its first tick.  Decisions are
+#: unchanged (a cold reprice of a quiet lane reproduces the cached row
+#: bit for bit); only this diagnostic reveals the chunk boundaries.
+DIAGNOSTIC_KEYS = ("repriced",)
 
 
 @dataclass(frozen=True)
@@ -159,19 +168,21 @@ def build_scenario(cfg: SoakConfig):
     return replace(s, t_max=t_max)
 
 
-def _runner_and_loop(cfg: SoakConfig, *, proactive: bool = False, mesh=None):
+def _runner_and_loop(
+    cfg: SoakConfig, *, proactive: bool = False, mesh=None, compact=None
+):
     import repro.core.controller as ctl
     from ..api.session import ScenarioRunner
 
     s = build_scenario(cfg)
     r = ScenarioRunner(
         [s], tick_interval=cfg.tick_interval, backend="jax",
-        proactive=proactive or None, mesh=mesh,
+        proactive=proactive or None, mesh=mesh, compact=compact,
     )
     loop, n_ticks = ctl.make_fused_loop(
         r.arrays, r.static, r._params(),
         steps_per_tick=r._steps_per_tick, warmup_seconds=s.warmup,
-        proactive=r.proactive_cfg, mesh=mesh,
+        proactive=r.proactive_cfg, mesh=mesh, compact=compact,
     )
     return r, loop, n_ticks
 
@@ -180,14 +191,18 @@ def _np_out(out: dict) -> dict:
     return {k: np.asarray(v) for k, v in out.items()}
 
 
-def run_straight(cfg: SoakConfig, *, proactive: bool = False, mesh=None) -> dict:
+def run_straight(
+    cfg: SoakConfig, *, proactive: bool = False, mesh=None, compact=None
+) -> dict:
     """The reference: the whole day in one ``loop(k0)`` call."""
-    r, loop, _ = _runner_and_loop(cfg, proactive=proactive, mesh=mesh)
+    r, loop, _ = _runner_and_loop(cfg, proactive=proactive, mesh=mesh,
+                                  compact=compact)
     return _np_out(loop(r.k))
 
 
 def run_checkpointed(
-    cfg: SoakConfig, directory, *, proactive: bool = False, mesh=None
+    cfg: SoakConfig, directory, *, proactive: bool = False, mesh=None,
+    compact=None,
 ) -> dict:
     """The soak: every ``checkpoint_every`` windows, ``save_async`` the
     carry, throw the runner/loop/compiled executables away (the simulated
@@ -201,7 +216,8 @@ def run_checkpointed(
     from ..checkpoint.store import CheckpointStore
 
     store = CheckpointStore(directory)
-    r, loop, n_ticks = _runner_and_loop(cfg, proactive=proactive, mesh=mesh)
+    r, loop, n_ticks = _runner_and_loop(cfg, proactive=proactive, mesh=mesh,
+                                        compact=compact)
     state = loop.init(r.k)
     chunks: list[dict] = []
     restores = 0
@@ -219,7 +235,8 @@ def run_checkpointed(
         # a tick-0 template (shapes/dtypes only — the restore overwrites
         # every leaf, including the tick counter).
         del r, loop, state
-        r, loop, _ = _runner_and_loop(cfg, proactive=proactive, mesh=mesh)
+        r, loop, _ = _runner_and_loop(cfg, proactive=proactive, mesh=mesh,
+                                      compact=compact)
         restored, _extra = store.restore(loop.init(r.k), step=done)
         state = ctl.ControllerState(*restored)
         restores += 1
@@ -237,8 +254,10 @@ def run_checkpointed(
 
 def assert_bit_identical(ref: dict, got: dict) -> None:
     """Every shared output surface equal bit for bit (exact integer and
-    float equality — no tolerances)."""
-    for key in sorted(set(ref) & set(got)):
+    float equality — no tolerances).  :data:`DIAGNOSTIC_KEYS` are skipped:
+    they describe *how* the run computed (e.g. which lanes the §18
+    compaction actually repriced), not *what* it decided."""
+    for key in sorted((set(ref) & set(got)) - set(DIAGNOSTIC_KEYS)):
         np.testing.assert_array_equal(
             np.asarray(got[key]), np.asarray(ref[key]), err_msg=key
         )

@@ -60,15 +60,15 @@ def _mpc_cfg():
                      predictor=PredictorParams(kind="holt", alpha=0.6, beta=0.4))
 
 
-def _loop(scens, mesh=None, proactive=None):
+def _loop(scens, mesh=None, proactive=None, compact=None):
     r = ScenarioRunner(scens, tick_interval=5.0, backend="jax",
-                       mesh=mesh, proactive=proactive)
+                       mesh=mesh, proactive=proactive, compact=compact)
     assert r.fused
     loop, n_ticks = ctl.make_fused_loop(
         r.arrays, r.static, r._params(),
         steps_per_tick=r._steps_per_tick,
         warmup_seconds=scens[0].warmup,
-        proactive=r.proactive_cfg, mesh=mesh,
+        proactive=r.proactive_cfg, mesh=mesh, compact=compact,
     )
     return r, loop, n_ticks
 
@@ -314,6 +314,78 @@ def test_sharded_chunked_resume_bit_identical():
     merged = np.concatenate([np.asarray(out_a["codes"]), np.asarray(out_b["codes"])])
     np.testing.assert_array_equal(merged, ref["codes"])
     np.testing.assert_array_equal(np.asarray(out_b["k_final"]), ref["k_final"])
+
+
+@multi_device
+def test_sharded_compacted_fused_loop_bit_identical_to_dense_unsharded():
+    """§18 per-shard compaction under shard_map: each device compacts its
+    own lanes (no cross-device gather), and the whole loop still matches
+    the dense unsharded program — decisions bitwise, E[T] to rtol."""
+    scens = _scens(8, seed=21)
+    r, loop, _ = _loop(scens)
+    ref = {k: np.asarray(v) for k, v in loop(r.k).items()}
+    rm, loop_m, _ = _loop(scens, mesh=fleet_mesh(2), compact=True)
+    got = {k: np.asarray(v) for k, v in loop_m(rm.k).items()}
+    assert got.pop("repriced").shape == ref["codes"].shape
+    _assert_outs_match(ref, got)
+
+
+@multi_device
+def test_sharded_compacted_nondivisible_batch():
+    """B = 6 on a 4-device mesh with compaction on: the shard-padding
+    lanes ride the trigger scan as permanently-quiet lanes."""
+    if len(jax.devices()) < 4:
+        pytest.skip("needs >= 4 devices")
+    scens = _scens(6, seed=17)
+    r, loop, _ = _loop(scens)
+    ref = {k: np.asarray(v) for k, v in loop(r.k).items()}
+    rm, loop_m, _ = _loop(scens, mesh=fleet_mesh(4), compact=True)
+    got = {k: np.asarray(v) for k, v in loop_m(rm.k).items()}
+    got.pop("repriced")
+    _assert_outs_match(ref, got)
+
+
+@multi_device
+def test_make_decide_jax_mesh_compact_parity():
+    """The standalone mesh compacted decide: bit-identical decisions to
+    the dense unsharded decide across cold / quiet / perturbed ticks,
+    with per-shard trigger counts summing to the expected totals."""
+    scens = _scens(8, seed=13)
+    r = ScenarioRunner(scens, tick_interval=5.0, backend="jax")
+    b, n = len(scens), r.static.n
+    rng = np.random.default_rng(2)
+    lam = np.abs(rng.normal(2.0, 0.6, (b, n)))
+    mu = np.abs(rng.normal(6.0, 0.5, (b, n))) + 1.0
+    drop = np.zeros((b, n))
+    lam0 = np.abs(rng.normal(2.0, 0.5, b))
+    k = np.where(r.static.active, 2, 0).astype(np.int64)
+
+    dense = ctl.make_decide_jax(r.static, r._params())
+    comp = ctl.make_decide_jax(
+        r.static, r._params(), mesh=fleet_mesh(2), compact=True
+    )
+    cache = comp.init_cache()
+
+    def check(lam_t):
+        want = dense(lam_t, mu, drop, lam0, k)
+        nonlocal cache
+        got, repriced, cache = comp(lam_t, mu, drop, lam0, k, cache)
+        for name, a, b_ in zip(
+            ("code", "k_next", "et_cur", "et_target", "applied"), want, got
+        ):
+            a, b_ = np.asarray(a), np.asarray(b_)
+            if name in ("et_cur", "et_target"):
+                np.testing.assert_allclose(a, b_, rtol=1e-6, err_msg=name)
+            else:
+                np.testing.assert_array_equal(a, b_, err_msg=name)
+        return int(np.asarray(repriced)[:b].sum())
+
+    assert check(lam) == b  # cold
+    assert check(lam) == 0  # quiet
+    lam2 = lam.copy()
+    lam2[3] *= 1.5
+    assert check(lam2) == 1  # exactly the perturbed lane, on its shard
+    assert check(lam2) == 0
 
 
 @multi_device

@@ -75,6 +75,21 @@ def test_soak_smoke_proactive_checkpoint_roundtrip(tmp_path):
     assert len(set(rep.k_total.tolist())) > 1
 
 
+def test_soak_smoke_compact_checkpoint_roundtrip(tmp_path):
+    """§18 compaction under crash + restore: the decide cache lives
+    outside the checkpointed carry, so every resume chunk starts cold —
+    the checkpointed compacted day must still be bit-identical to the
+    straight compacted run (``repriced`` is the one surface allowed to
+    differ, and ``assert_bit_identical`` excludes it), and the compacted
+    day must be bit-identical to the dense day."""
+    cfg = SoakConfig.smoke()
+    ref, chk = _roundtrip(cfg, tmp_path, compact=True)
+    assert "repriced" in ref and "repriced" not in chk
+    assert np.asarray(ref["repriced"]).shape == (cfg.n_ticks, 1)
+    dense = run_straight(cfg)
+    assert_bit_identical(dense, ref)
+
+
 def test_soak_smoke_mesh_checkpoint_roundtrip(tmp_path):
     if len(jax.devices()) < 8:
         pytest.skip("mesh soak leg needs 8 (emulated) devices")
